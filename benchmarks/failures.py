@@ -1,0 +1,146 @@
+"""§5.6 / Table 8 / Figs 6-8 — failure analysis from the platform event log.
+
+Paper findings over 4 months on a 680-GPU cluster:
+  * scheduling failures concentrate on learner pods (>60%), helpers ~15%;
+  * dominant reason: "No nodes available that match all of the predicates"
+    (~64%), then transient binding/PVC errors;
+  * pod deletions due to node failures stay under ~5%;
+  * learner deletions from node failures → job cancellations < 1%/month.
+
+Method: a long chaos campaign (mixed workload, every fault class enabled)
+on a mid-size cluster; then aggregate the structured event log exactly the
+way the paper mines its K8s scheduler/controller-manager logs.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
+
+
+def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
+    # Fault rates calibrated to production reality (the paper's §5.6 cluster
+    # saw a handful of node failures per month, not per hour): probabilities
+    # are per 2s tick; e.g. p_host_fail=2e-5 → ~2.5 host faults per
+    # 10-hour "month" across 24 hosts.
+    chaos = ChaosConfig(
+        seed=seed,
+        p_learner_crash=5e-5,
+        p_host_fail=2e-5,
+        p_guardian_crash=3e-5,
+        p_controller_crash=5e-5,
+        p_volume_fail=0.008,  # Table 8: PVC errors ~1.9% of failing pods
+        host_recovery_s=180.0,
+    )
+    p = FfDLPlatform(n_hosts=24, chips_per_host=4, chaos=chaos, seed=seed,
+                     tick_period=2.0)
+    rng = np.random.default_rng(seed)
+
+    month_s = 3600.0 * 10  # compressed "month" of cluster time
+    jobs = []
+    monthly_learner_deletions = []
+    monthly_job_cancels = []
+    for month in range(months):
+        t_month_end = (month + 1) * month_s
+        arrivals = sorted(rng.uniform(month * month_s, t_month_end,
+                                      jobs_per_month))
+        ai = 0
+        ev_before = len(p.events.events)
+        while p.clock.now() < t_month_end:
+            while ai < len(arrivals) and arrivals[ai] <= p.clock.now():
+                n_l = int(rng.choice([1, 1, 2, 4], p=[.5, .2, .2, .1]))
+                cpl = int(rng.choice([1, 2], p=[.7, .3]))
+                jobs.append(p.submit(JobManifest(
+                    name=f"m{month}-{ai}", n_learners=n_l,
+                    chips_per_learner=cpl,
+                    sim_duration=float(rng.uniform(900, 3600)),
+                    max_restarts=6)))
+                ai += 1
+            p.tick()
+        month_events = p.events.events[ev_before:]
+        deletions = [e for e in month_events if e.kind == "pod_deleted"]
+        node_fail_del = [e for e in deletions
+                         if e.fields.get("reason") == "node_failure"]
+        learner_del = [e for e in node_fail_del
+                       if "-l" in e.fields.get("pod", "")]
+        monthly_learner_deletions.append(
+            (len(learner_del), max(len(deletions), 1)))
+        cancels = sum(1 for e in month_events if e.kind == "job_failed")
+        monthly_job_cancels.append(cancels)
+
+    # drain
+    p.chaos.enabled = False
+    p.run_until_terminal(jobs, max_sim_s=40000)
+
+    ev = p.events
+    # the paper mines UNIQUE pod names per failure reason (Table 8); we
+    # aggregate unique jobs per reason the same way (queued gangs re-log
+    # no-nodes every scheduling round, exactly like K8s retries).
+    reason_jobs: dict[str, set] = {
+        "no_nodes_match_predicates": set(),
+        "binding_rejected": set(),
+        "persistentvolumeclaim_not_found": set(),
+        "assume_pod_failed": set(),
+    }
+    for e in ev.events:
+        if e.kind == "no_nodes_available":
+            reason_jobs["no_nodes_match_predicates"].add(e.fields.get("job"))
+        elif e.kind == "binding_rejected":
+            reason_jobs["binding_rejected"].add(e.fields.get("pod"))
+        elif e.kind == "volume_provision_failed":
+            reason_jobs["persistentvolumeclaim_not_found"].add(
+                e.fields.get("job"))
+        elif e.kind == "bind_failed":
+            reason_jobs["assume_pod_failed"].add(e.fields.get("job"))
+    sched_failures = Counter({k: len(v) for k, v in reason_jobs.items() if v})
+    total_sched = max(sum(sched_failures.values()), 1)
+
+    deletions = ev.of_kind("pod_deleted")
+    node_fail = [e for e in deletions
+                 if e.fields.get("reason") == "node_failure"]
+    # pod-type distribution of scheduling-affected pods (Fig 6 analogue):
+    # in our platform the no-nodes events are all gang (learner) level
+    statuses = Counter(p.meta.get(j).status.value for j in jobs)
+    return {
+        "jobs": len(jobs),
+        "final_statuses": dict(statuses),
+        "sched_failure_reasons_pct": {
+            k: 100.0 * v / total_sched for k, v in sched_failures.items()},
+        "pod_deletions_total": len(deletions),
+        "pod_deletions_node_failure_pct":
+            100.0 * len(node_fail) / max(len(deletions), 1),
+        "monthly_learner_del_pct": [
+            100.0 * a / b for a, b in monthly_learner_deletions],
+        "monthly_job_cancellations": monthly_job_cancels,
+        "component_crashes": {
+            "learner": ev.count("learner_killed"),
+            "host": ev.count("host_killed"),
+            "guardian": ev.count("guardian_crashed"),
+            "controller": ev.count("controller_killed"),
+        },
+    }
+
+
+def main():
+    out = run()
+    print("# §5.6 analogue: failure analysis (chaos campaign)")
+    print(f"jobs,{out['jobs']}")
+    for k, v in out["final_statuses"].items():
+        print(f"status_{k},{v}")
+    print("reason,pct  (paper: no_nodes ~64%)")
+    for k, v in sorted(out["sched_failure_reasons_pct"].items(),
+                       key=lambda kv: -kv[1]):
+        print(f"{k},{v:.1f}")
+    print(f"pod_deletions_node_failure_pct,"
+          f"{out['pod_deletions_node_failure_pct']:.2f}  (paper: <5%)")
+    print(f"monthly_learner_deletion_pct,"
+          f"{[round(x, 2) for x in out['monthly_learner_del_pct']]}")
+    print(f"component_crashes,{out['component_crashes']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

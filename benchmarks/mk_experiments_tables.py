@@ -1,0 +1,36 @@
+"""Render the EXPERIMENTS.md roofline tables from experiments/dryrun2/*.json."""
+
+import glob
+import json
+
+
+def fmt_row(r):
+    c = r["collectives"]
+    return (f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['flops_per_device']:.3g} | "
+            f"{r['collective_bytes_per_device']/1e9:.2f} |")
+
+
+HDR = ("| arch | shape | kind | compute ms | memory ms | collective ms | "
+       "bound | MODEL/HLO | HLO flops/dev | coll GB/dev |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(mesh):
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun2/*.json")):
+        d = json.load(open(f))
+        if d["mesh"] == mesh and "remat" not in f and "opt" not in f:
+            rows.append(d)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return HDR + "\n" + "\n".join(fmt_row(r) for r in rows)
+
+
+if __name__ == "__main__":
+    print("### single-pod 16x16 (256 chips)\n")
+    print(table("16x16"))
+    print("\n### multi-pod 2x16x16 (512 chips)\n")
+    print(table("2x16x16"))

@@ -1,0 +1,104 @@
+"""Table 1 & 2 — platform overhead vs bare metal.
+
+Paper claim (Table 1): FfDL's dependability layers (containerization,
+status pipeline, log collection, mounted object store) cost <= ~5% of
+training throughput vs running the same job directly on bare metal.
+
+Method here: train the same model/config/steps
+  (a) bare metal — a raw jit'd loop, data in-process, no platform;
+  (b) FfDL       — through the full platform path (Guardian-deployed
+      learner, volume status writes, controller + log collector ticking,
+      etcd relay; checkpointing disabled to isolate *platform* overhead,
+      as the paper's measurement does);
+and report images(tokens)/sec delta. Table 2's "specialized hardware" tier
+is approximated by (c): the raw loop with donated buffers + no status I/O —
+the upper bound a hand-tuned single-tenant setup would reach.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import FfDLPlatform, JobManifest, JobStatus
+
+
+def _bare_metal(arch: str, steps: int, batch: int, seq: int, donate=False):
+    from repro.configs import get_tiny_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import steps as msteps
+    from repro.optim import adamw
+
+    cfg = get_tiny_config(arch)
+    opt_cfg = adamw.AdamWConfig(total_steps=steps)
+    train = jax.jit(msteps.make_train_step(cfg, opt_cfg),
+                    donate_argnums=(0,) if donate else ())
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq, batch, seed=0))
+    state = msteps.init_train_state(cfg, jax.random.key(0))
+    # warmup/compile
+    state, _ = train(state, data.batch_at(0))
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    for s in range(1, steps):
+        state, m = train(state, data.batch_at(s))
+    jax.block_until_ready(state.params)
+    dt = time.perf_counter() - t0
+    return (steps - 1) * batch * seq / dt  # tokens/sec
+
+
+def _through_platform(arch: str, steps: int, batch: int, seq: int):
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(JobManifest(
+        name="bench", arch=arch, n_learners=1, chips_per_learner=2,
+        checkpoint_interval=10 ** 9,  # no checkpoints: platform cost only
+        train={"steps": steps, "batch": batch, "seq": seq}))
+    # advance to PROCESSING (deployment cost excluded, as in the paper —
+    # Table 1 measures steady-state images/sec)
+    for _ in range(500):
+        p.tick()
+        rec = p.meta.get(j)
+        if rec.status == JobStatus.PROCESSING and rec.progress_step >= 1:
+            break
+    start_step = rec.progress_step
+    t0 = time.perf_counter()
+    while p.meta.get(j).status == JobStatus.PROCESSING:
+        p.tick()
+    dt = time.perf_counter() - t0
+    done = p.run_until_terminal([j], max_sim_s=1000)
+    assert done and p.status(j) == JobStatus.COMPLETED
+    n_steps = steps - start_step
+    return n_steps * batch * seq / dt
+
+
+def run(steps: int = 80, batch: int = 8, seq: int = 128) -> dict:
+    rows = []
+    for arch in ["smollm-360m", "qwen2.5-3b", "recurrentgemma-2b"]:
+        bare = _bare_metal(arch, steps, batch, seq)
+        plat = _through_platform(arch, steps, batch, seq)
+        tuned = _bare_metal(arch, steps, batch, seq, donate=True)
+        rows.append({
+            "arch": arch,
+            "bare_tokens_s": bare,
+            "platform_tokens_s": plat,
+            "tuned_tokens_s": tuned,
+            "overhead_vs_bare_pct": 100 * (1 - plat / bare),
+            "gap_vs_tuned_pct": 100 * (1 - plat / tuned),
+        })
+    return {"table": rows}
+
+
+def main():
+    out = run()
+    print("# Table 1/2 analogue: platform overhead")
+    print("arch,bare_tok_s,platform_tok_s,overhead_pct,gap_vs_tuned_pct")
+    for r in out["table"]:
+        print(f"{r['arch']},{r['bare_tokens_s']:.0f},"
+              f"{r['platform_tokens_s']:.0f},"
+              f"{r['overhead_vs_bare_pct']:.2f},{r['gap_vs_tuned_pct']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+renders, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS utilization, and a next-action note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+NOTES = {
+    "compute": "raise arithmetic efficiency: fewer replicated dots, bf16 "
+               "backward, fused attention",
+    "memory": "cut HBM traffic: remat policy, bf16 master/grads, fuse "
+              "elementwise chains, smaller fp32 intermediates",
+    "collective": "reshard: fewer/smaller collectives, hierarchical "
+                  "cross-pod reduction, overlap with compute",
+}
+
+
+def load(out_dir="experiments/dryrun2"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows, mesh_filter=None):
+    lines = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} {'compute_ms':>10s} "
+           f"{'memory_ms':>10s} {'coll_ms':>9s} {'bound':>10s} "
+           f"{'useful_flops':>12s}")
+    lines.append(hdr)
+    for r in rows:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']*1e3:10.2f} {r['memory_s']*1e3:10.2f} "
+            f"{r['collective_s']*1e3:9.2f} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:12.3f}")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    rows = load()
+    return {"rows": rows}
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun --all")
+        return {}
+    print("# Roofline (per-device terms; v5e: 197TF/s bf16, 819GB/s HBM, "
+          "50GB/s/link ICI)")
+    print(render(rows, mesh_filter="16x16"))
+    mp = [r for r in rows if r["mesh"] == "2x16x16"]
+    if mp:
+        print("\n# multi-pod (2x16x16)")
+        print(render(mp))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  Table 1/2  → benchmarks.overhead     (platform overhead vs bare metal)
+  Table 3    → benchmarks.recovery     (component crash-recovery times)
+  Fig 3      → benchmarks.spread_pack  (60-day trace, SPREAD vs PACK)
+  Fig 4      → benchmarks.gang         (gang vs pod-at-a-time deadlocks)
+  Tables 4-6 → benchmarks.sizing       (feeder scaling + t-shirt sizes)
+  §5.5       → benchmarks.scale        (680 chips, 70 vs 700 jobs)
+  §5.6       → benchmarks.failures     (chaos campaign failure analysis)
+  §Roofline  → benchmarks.roofline     (dry-run-derived roofline table)
+
+Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        failures,
+        gang,
+        overhead,
+        recovery,
+        roofline,
+        scale,
+        sizing,
+        spread_pack,
+    )
+
+    all_benches = [
+        ("overhead_table1_2", overhead.main),
+        ("recovery_table3", recovery.main),
+        ("spread_pack_fig3", spread_pack.main),
+        ("gang_fig4", gang.main),
+        ("sizing_tables4_6", sizing.main),
+        ("scale_s5_5", scale.main),
+        ("failures_s5_6", failures.main),
+        ("roofline", roofline.main),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out, exist_ok=True)
+
+    summary = []
+    failed = []
+    for name, fn in all_benches:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            result = fn()
+            dt = time.perf_counter() - t0
+            summary.append((name, dt))
+            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                json.dump(result, f, indent=1, default=str)
+        except Exception as e:
+            failed.append(name)
+            print(f"BENCH FAILED {name}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=5)
+
+    print(f"\n{'='*72}\n== summary (name,us_per_call,derived)\n{'='*72}")
+    for name, dt in summary:
+        print(f"{name},{dt*1e6:.0f},wall_s={dt:.1f}")
+    if failed:
+        print(f"FAILED: {failed}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

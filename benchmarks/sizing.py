@@ -1,0 +1,86 @@
+"""Tables 4/6 (+5) — resource sizing: throughput vs input-feeder workers.
+
+Paper: training throughput saturates as CPU threads feeding the accelerator
+grow (Caffe saturates at 4-8 threads; TF keeps improving to 28); from this
+they derive framework-agnostic "t-shirt" learner sizes per GPU type.
+
+TPU adaptation: the accelerator-feeding path is the host data pipeline.
+We fix a per-batch host prep cost and scale ``workers`` in the prefetching
+loader, measuring end-to-end steps/sec of a real training loop; the
+saturation point (where the pipeline stops being the bottleneck) is the
+t-shirt recommendation.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_tiny_config
+from repro.data.pipeline import DataConfig, PrefetchIterator, SyntheticLM
+from repro.models import steps as msteps
+from repro.optim import adamw
+
+
+def throughput(arch: str, workers: int, steps=40, batch=8, seq=128,
+               prep_cost_s=0.02) -> float:
+    cfg = get_tiny_config(arch)
+    train = jax.jit(msteps.make_train_step(
+        cfg, adamw.AdamWConfig(total_steps=steps)))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq, batch, seed=0))
+    it = PrefetchIterator(data.iterate(0), prefetch=4, workers=workers,
+                          prep_cost_s=prep_cost_s)
+    try:
+        state = msteps.init_train_state(cfg, jax.random.key(0))
+        state, _ = train(state, next(it))  # compile
+        jax.block_until_ready(state.params)
+        t0 = time.perf_counter()
+        for _ in range(steps - 1):
+            state, _ = train(state, next(it))
+        jax.block_until_ready(state.params)
+        dt = time.perf_counter() - t0
+    finally:
+        it.close()
+    return (steps - 1) * batch * seq / dt
+
+
+def run() -> dict:
+    rows = []
+    for arch in ["smollm-360m", "xlstm-125m"]:
+        series = {}
+        for workers in [1, 2, 4, 8]:
+            series[workers] = throughput(arch, workers)
+        # saturation point: first worker count within 5% of the best
+        best = max(series.values())
+        rec = min(w for w, v in series.items() if v >= 0.95 * best)
+        rows.append({"arch": arch, "tokens_s_by_workers": series,
+                     "recommended_workers": rec})
+    # Table 5 analogue: host-resource recommendation per learner size
+    tshirt = [
+        {"chips": 1, "host_workers": rows[0]["recommended_workers"],
+         "host_ram_gb": 24},
+        {"chips": 2, "host_workers": 2 * rows[0]["recommended_workers"],
+         "host_ram_gb": 48},
+        {"chips": 4, "host_workers": 4 * rows[0]["recommended_workers"],
+         "host_ram_gb": 96},
+    ]
+    return {"scaling": rows, "tshirt": tshirt}
+
+
+def main():
+    out = run()
+    print("# Tables 4/6 analogue: throughput (tokens/s) vs feeder workers")
+    print("arch,workers,tokens_s")
+    for r in out["scaling"]:
+        for w, v in r["tokens_s_by_workers"].items():
+            print(f"{r['arch']},{w},{v:.0f}")
+    print("# Table 5 analogue: t-shirt sizes")
+    print("chips,host_workers,host_ram_gb")
+    for t in out["tshirt"]:
+        print(f"{t['chips']},{t['host_workers']},{t['host_ram_gb']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

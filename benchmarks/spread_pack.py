@@ -1,0 +1,143 @@
+"""Figure 3 — SPREAD vs PACK on a 60-day production-like trace.
+
+Paper: job arrival traces from a 400-GPU production cluster over 60 days,
+replayed against both placement policies; PACK yields >3x fewer jobs queued
+longer than 15 minutes (the user-satisfaction threshold).
+
+Method: a synthetic-but-realistic 60-day trace (diurnal Poisson arrivals,
+log-normal durations, the paper's mix of 1/2/4-learner x 1/2/4-chip jobs)
+replayed through a pure scheduler+cluster discrete-event simulation (no
+guardians — this isolates placement policy, like the paper's simulation).
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.core.cluster import ClusterModel
+from repro.core.kvstore import EtcdLike
+from repro.core.scheduler import GangRequest, GangScheduler
+from repro.core.types import EventLog, Pod, SimClock
+
+QUEUE_SLA_S = 15 * 60  # the paper's 15-minute threshold
+DAY = 86400.0
+
+
+def make_trace(days=60, mean_jobs_per_day=280, seed=0):
+    """[(arrival_s, n_learners, chips_per_learner, duration_s)] sorted.
+
+    Calibrated to the paper's setting: a *heavily loaded* 400-GPU cluster
+    (~75% mean demand, >100% at diurnal peaks — §5.2 "with heavily loaded
+    clusters"), with a long-tailed duration distribution and a mix of
+    single- and multi-chip learners (the 4-chip learners are the ones
+    fragmentation starves)."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for d in range(days):
+        weekday = d % 7 < 5
+        lam = mean_jobs_per_day * (1.0 if weekday else 0.45)
+        n = rng.poisson(lam)
+        for _ in range(n):
+            hour = rng.beta(3, 3) * 12 + 7  # 7:00–19:00 centre-heavy
+            t = d * DAY + hour * 3600 + rng.uniform(0, 600)
+            n_l = rng.choice([1, 1, 1, 2, 2, 4], p=[.45, .2, .1, .15, .05, .05])
+            cpl = rng.choice([1, 2, 4], p=[.35, .3, .35])
+            dur = float(np.clip(rng.lognormal(8.9, 0.9), 900, 8 * 3600))
+            jobs.append((t, int(n_l), int(cpl), dur))
+    jobs.sort()
+    return jobs
+
+
+def simulate(trace, placement: str, n_hosts=100, chips=4, seed=0):
+    """Event-driven replay. Returns per-day count of jobs queued > 15 min."""
+    clock = SimClock()
+    events = EventLog(clock)
+    etcd = EtcdLike(clock, events)
+    cluster = ClusterModel(n_hosts, chips, clock, etcd, events)
+    sched = GangScheduler(cluster, events, placement=placement, seed=seed)
+
+    submitted_at: dict[str, float] = {}
+    placed_at: dict[str, float] = {}
+    finish_heap: list = []
+
+    def on_placed(req: GangRequest):
+        placed_at[req.job_id] = clock.now()
+        # bind pods so capacity is held for the duration
+        for i, host in enumerate(req.placement):
+            pod = Pod(name=f"{req.job_id}-l{i}", job_id=req.job_id,
+                      kind="learner", chips=req.chips_per_pod)
+            cluster.bind_pod(pod, host)
+        sched.confirm(req.job_id)
+        dur = durations[req.job_id]
+        heapq.heappush(finish_heap, (clock.now() + dur, req.job_id))
+
+    sched.on_placed = on_placed
+    durations: dict[str, float] = {}
+
+    i = 0
+    while i < len(trace) or finish_heap:
+        # next event: arrival or finish
+        t_arr = trace[i][0] if i < len(trace) else float("inf")
+        t_fin = finish_heap[0][0] if finish_heap else float("inf")
+        if t_arr <= t_fin:
+            t, n_l, cpl, dur = trace[i]
+            i += 1
+            clock.run_until(t)
+            clock.advance(t - clock.now())
+            job_id = f"t{i}"
+            durations[job_id] = dur
+            submitted_at[job_id] = t
+            sched.submit(GangRequest(job_id, n_l, cpl, submitted_at=t))
+        else:
+            t, job_id = heapq.heappop(finish_heap)
+            clock.advance(t - clock.now())
+            for k in range(64):
+                if f"{job_id}-l{k}" in cluster.pods:
+                    cluster.delete_pod(f"{job_id}-l{k}", reason="done")
+                else:
+                    break
+            sched.release(job_id)
+        sched.tick()
+
+    # any never-placed jobs count as SLA misses too
+    delayed_by_day = np.zeros(61, dtype=int)
+    total_by_day = np.zeros(61, dtype=int)
+    for job_id, t_sub in submitted_at.items():
+        day = min(int(t_sub // DAY), 60)
+        total_by_day[day] += 1
+        wait = placed_at.get(job_id, t_sub + 10 * QUEUE_SLA_S) - t_sub
+        if wait > QUEUE_SLA_S:
+            delayed_by_day[day] += 1
+    return delayed_by_day, total_by_day
+
+
+def run(days=60, seed=0) -> dict:
+    trace = make_trace(days=days, seed=seed)
+    d_spread, totals = simulate(trace, "spread", seed=seed)
+    d_pack, _ = simulate(trace, "pack", seed=seed)
+    spread_total = int(d_spread.sum())
+    pack_total = int(d_pack.sum())
+    return {
+        "jobs": len(trace),
+        "delayed_spread": spread_total,
+        "delayed_pack": pack_total,
+        "improvement_x": spread_total / max(pack_total, 1),
+        "by_day": {"spread": d_spread.tolist(), "pack": d_pack.tolist(),
+                   "arrivals": totals.tolist()},
+    }
+
+
+def main():
+    out = run()
+    print("# Fig 3 analogue: SPREAD vs PACK, 60-day trace, 400-chip cluster")
+    print(f"jobs,{out['jobs']}")
+    print(f"queued_gt_15min_spread,{out['delayed_spread']}")
+    print(f"queued_gt_15min_pack,{out['delayed_pack']}")
+    print(f"improvement_x,{out['improvement_x']:.2f}  (paper: >3x)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

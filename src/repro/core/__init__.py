@@ -1,0 +1,29 @@
+# The paper's primary contribution: the FfDL multi-tenant platform —
+# scheduler (gang/BSA/PACK), lifecycle (LCM/Guardian), coordination
+# (etcd-like), metadata (Mongo-like), helpers, admission, chaos.
+from repro.core.chaos import ChaosConfig, ChaosMonkey
+from repro.core.platform import FfDLPlatform
+from repro.core.types import (
+    EventLog,
+    JobManifest,
+    JobRecord,
+    JobStatus,
+    Pod,
+    PodPhase,
+    SimClock,
+    WallClock,
+)
+
+__all__ = [
+    "ChaosConfig",
+    "ChaosMonkey",
+    "FfDLPlatform",
+    "EventLog",
+    "JobManifest",
+    "JobRecord",
+    "JobStatus",
+    "Pod",
+    "PodPhase",
+    "SimClock",
+    "WallClock",
+]

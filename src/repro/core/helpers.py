@@ -1,0 +1,107 @@
+"""Helper services: log collection and the Training Metrics Service.
+
+FfDL §3.2: "The Training Metrics Service is responsible for collecting
+metrics about both the training jobs and FfDL microservices [...] It also
+helps in streaming training logs from jobs to be indexed and stored in
+ElasticSearch/Kibana."
+
+``LogCollector`` streams learner log files off the job volume into the
+searchable ``LogIndex`` (the ElasticSearch analogue), with gap-free resume
+after collector crashes (offset bookkeeping — the 'surprisingly challenging'
+§4 lesson). ``MetricsService`` aggregates job metrics and microservice
+failure/recovery counters.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.executor import JobVolume
+
+
+@dataclass
+class LogRecord:
+    ts: float
+    job_id: str
+    learner: int
+    line: str
+
+
+class LogIndex:
+    """ElasticSearch-like: append + substring search, per-job streams."""
+
+    def __init__(self):
+        self.records: list[LogRecord] = []
+
+    def append(self, rec: LogRecord):
+        self.records.append(rec)
+
+    def search(self, query: str, job_id: Optional[str] = None) -> list[LogRecord]:
+        return [r for r in self.records
+                if query in r.line and (job_id is None or r.job_id == job_id)]
+
+    def stream(self, job_id: str) -> list[str]:
+        return [r.line for r in self.records if r.job_id == job_id]
+
+
+class LogCollector:
+    """Per-job helper container: tails learner logs into the index.
+
+    Keeps per-learner byte offsets so a crash+restart never duplicates or
+    drops lines (offsets themselves live on the volume → survive crashes).
+    """
+
+    def __init__(self, job_id: str, n_learners: int, volume: JobVolume,
+                 index: LogIndex, clock):
+        self.job_id = job_id
+        self.n_learners = n_learners
+        self.volume = volume
+        self.index = index
+        self.clock = clock
+        self.alive = True
+
+    def crash(self):
+        self.alive = False
+
+    def restart(self):
+        self.alive = True
+
+    def tick(self):
+        if not self.alive:
+            return
+        try:
+            for k in range(self.n_learners):
+                content = self.volume.read(f"logs/learner-{k}") or ""
+                off_raw = self.volume.read(f".collector/offset-{k}")
+                offset = int(off_raw) if off_raw else 0
+                new = content[offset:]
+                if not new:
+                    continue
+                for line in new.splitlines():
+                    self.index.append(LogRecord(self.clock.now(), self.job_id,
+                                                k, line))
+                self.volume.write(f".collector/offset-{k}", str(len(content)))
+        except IOError:
+            pass
+
+
+class MetricsService:
+    """Platform-level metrics: job throughput, component failure counters,
+    cluster utilization samples."""
+
+    def __init__(self, clock):
+        self.clock = clock
+        self.job_metrics: dict[str, list] = defaultdict(list)
+        self.counters: dict[str, int] = defaultdict(int)
+        self.util_samples: list[tuple[float, float]] = []
+
+    def record_job(self, job_id: str, **metrics):
+        self.job_metrics[job_id].append((self.clock.now(), metrics))
+
+    def bump(self, counter: str, n: int = 1):
+        self.counters[counter] += n
+
+    def sample_utilization(self, util: float):
+        self.util_samples.append((self.clock.now(), util))

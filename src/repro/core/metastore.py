@@ -1,0 +1,123 @@
+"""MetaStore: the MongoDB analogue (FfDL §3.2).
+
+"When a job deployment request arrives, the API layer stores all the
+metadata in MongoDB *before acknowledging the request*. This ensures that
+submitted jobs are never lost [...] even if a catastrophic failure
+temporarily takes down all machines in the cluster and all of FfDL core
+microservices."
+
+We reproduce exactly that contract: ``insert_job`` is durable-before-ack
+(write-ahead journal appended and flushed before returning), and the whole
+store can be rebuilt from the journal after a crash (``recover``).
+Long-lived (spans jobs), per-tenant query-able job history included.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+from dataclasses import asdict
+from typing import Optional
+
+from repro.core.types import JobManifest, JobRecord, JobStatus
+
+
+class MetaStore:
+    def __init__(self, clock, journal_path: Optional[str] = None):
+        self.clock = clock
+        self._jobs: dict[str, JobRecord] = {}
+        self._journal: list[dict] = []  # in-memory WAL (file-backed if path)
+        self.journal_path = journal_path
+        self._fh = open(journal_path, "a") if journal_path else None
+        self.available = True
+
+    # -- chaos -----------------------------------------------------------
+    def _check(self):
+        if not self.available:
+            raise ConnectionError("metastore unavailable")
+
+    def crash(self):
+        self.available = False
+
+    def restart(self):
+        self.available = True
+
+    # -- WAL --------------------------------------------------------------
+    def _append(self, op: dict):
+        self._journal.append(op)
+        if self._fh:
+            self._fh.write(json.dumps(op, default=str) + "\n")
+            self._fh.flush()
+
+    @classmethod
+    def recover(cls, clock, journal_path: str) -> "MetaStore":
+        """Rebuild from the journal (catastrophic-failure recovery path)."""
+        store = cls(clock)
+        with open(journal_path) as fh:
+            for line in fh:
+                op = json.loads(line)
+                store._replay(op)
+        store.journal_path = journal_path
+        store._fh = open(journal_path, "a")
+        return store
+
+    def replay_journal(self, journal: list[dict]):
+        for op in journal:
+            self._replay(op)
+
+    def _replay(self, op: dict):
+        if op["op"] == "insert":
+            m = JobManifest(**op["manifest"])
+            rec = JobRecord(job_id=op["job_id"], manifest=m,
+                            submitted_at=op["ts"])
+            rec.set_status(op["ts"], JobStatus.PENDING, "recovered")
+            self._jobs[op["job_id"]] = rec
+        elif op["op"] == "status" and op["job_id"] in self._jobs:
+            self._jobs[op["job_id"]].set_status(
+                op["ts"], JobStatus(op["status"]), op.get("msg", ""))
+
+    # -- API ----------------------------------------------------------------
+    def insert_job(self, job_id: str, manifest: JobManifest) -> JobRecord:
+        """Durable before ack — the WAL append happens before returning."""
+        self._check()
+        rec = JobRecord(job_id=job_id, manifest=manifest,
+                        submitted_at=self.clock.now())
+        rec.set_status(self.clock.now(), JobStatus.PENDING, "accepted")
+        self._jobs[job_id] = rec
+        self._append({"op": "insert", "job_id": job_id, "ts": self.clock.now(),
+                      "manifest": asdict(manifest)})
+        return rec
+
+    def get(self, job_id: str) -> Optional[JobRecord]:
+        self._check()
+        return self._jobs.get(job_id)
+
+    def update_status(self, job_id: str, status: JobStatus, msg: str = ""):
+        self._check()
+        rec = self._jobs[job_id]
+        if rec.status != status or msg != rec.message:
+            rec.set_status(self.clock.now(), status, msg)
+            self._append({"op": "status", "job_id": job_id,
+                          "ts": self.clock.now(), "status": status.value,
+                          "msg": msg})
+
+    def jobs(self, tenant: Optional[str] = None,
+             status: Optional[JobStatus] = None) -> list[JobRecord]:
+        self._check()
+        out = []
+        for rec in self._jobs.values():
+            if tenant and rec.manifest.tenant != tenant:
+                continue
+            if status and rec.status != status:
+                continue
+            out.append(rec)
+        return sorted(out, key=lambda r: r.submitted_at)
+
+    def history(self, tenant: str) -> list[dict]:
+        """Per-tenant job history (the 'business artifact' query)."""
+        return [
+            {"job_id": r.job_id, "name": r.manifest.name,
+             "status": r.status.value, "submitted_at": r.submitted_at,
+             "finished_at": r.finished_at}
+            for r in self.jobs(tenant=tenant)
+        ]

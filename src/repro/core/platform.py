@@ -1,0 +1,198 @@
+"""FfDLPlatform: the facade wiring all microservices together (FfDL Fig 1-2).
+
+API-layer semantics reproduced:
+  * ``submit`` validates, persists to the metastore **before acking** and
+    returns a job id — jobs survive any subsequent component crash;
+  * ``status``/``status_history`` read the metastore (user-visible,
+    timestamped — the paper's billing/debugging requirement);
+  * ``logs``/``search_logs`` read the ElasticSearch-like index;
+  * ``halt``/``resume`` drive HALT/RESUME for hyperparameter workflows;
+  * API replicas are stateless: ``api_crash``/``api_restart`` only gate the
+    public methods (recovery-time benchmark).
+
+``tick()`` is one platform scheduling round; ``run_until`` drives the
+simulated clock. Components ticked in dependency order: chaos → cluster
+(heartbeats/evictions) → LCM (reconcile) → guardians (deploy/monitor) →
+admission (preemption) → scheduler (gang placement) → metrics.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+from repro.core.admission import AdmissionController
+from repro.core.chaos import ChaosConfig, ChaosMonkey
+from repro.core.cluster import ClusterModel
+from repro.core.executor import JobVolume
+from repro.core.helpers import LogIndex, MetricsService
+from repro.core.kvstore import EtcdLike
+from repro.core.lcm import LifecycleManager
+from repro.core.metastore import MetaStore
+from repro.core.scheduler import GangScheduler, K8sDefaultScheduler
+from repro.core.types import (
+    EventLog,
+    JobManifest,
+    JobStatus,
+    SimClock,
+    TERMINAL,
+)
+from repro.data.objectstore import ObjectStore
+
+
+class FfDLPlatform:
+    def __init__(self, n_hosts: int = 16, chips_per_host: int = 4,
+                 placement: str = "pack", scheduler: str = "gang",
+                 chaos: Optional[ChaosConfig] = None, clock=None,
+                 tick_period: float = 1.0, seed: int = 0,
+                 objstore_bandwidth: Optional[float] = None):
+        self.clock = clock or SimClock()
+        self.tick_period = tick_period
+        self.events = EventLog(self.clock)
+        self.etcd = EtcdLike(self.clock, self.events)
+        self.meta = MetaStore(self.clock)
+        self.objstore = ObjectStore(clock=None,
+                                    bandwidth_bps=objstore_bandwidth)
+        self.objstore.create_bucket("datasets")
+        self.objstore.create_bucket("results")
+        self.cluster = ClusterModel(n_hosts, chips_per_host, self.clock,
+                                    self.etcd, self.events)
+        if scheduler == "gang":
+            self.scheduler = GangScheduler(self.cluster, self.events,
+                                           placement=placement, seed=seed)
+        else:
+            self.scheduler = K8sDefaultScheduler(self.cluster, self.events,
+                                                 placement=placement,
+                                                 seed=seed)
+        self.admission = AdmissionController(self, self.events)
+        self.lcm = LifecycleManager(self, self.events)
+        self.chaos = ChaosMonkey(chaos or ChaosConfig(), self)
+        self.metrics = MetricsService(self.clock)
+        self.log_index = LogIndex()
+        self.guardians: dict[str, object] = {}
+        self.volumes: dict[str, JobVolume] = {}
+        self._job_ctr = itertools.count(1)
+        self._api_up = True
+
+    # ---------------------------------------------------------------- API
+    def _api_check(self):
+        if not self._api_up:
+            raise ConnectionError("API service unavailable")
+
+    def api_crash(self):
+        self._api_up = False
+
+    def api_restart(self):
+        self._api_up = True
+        self.events.emit("api", "api_restarted")
+
+    def submit(self, manifest: JobManifest) -> str:
+        """Durable-before-ack submission (§3.2)."""
+        self._api_check()
+        if manifest.n_learners < 1 or manifest.chips_per_learner < 0:
+            raise ValueError("invalid manifest")
+        from repro.core.types import gang_chips
+        if gang_chips(manifest) > self.cluster.total_chips:
+            raise ValueError(
+                f"job needs {gang_chips(manifest)} chips; cluster has "
+                f"{self.cluster.total_chips}")
+        ok, why = self.admission.check(manifest)
+        if not ok:
+            self.events.emit("api", "admission_rejected",
+                             tenant=manifest.tenant, reason=why)
+            raise PermissionError(f"admission denied: {why}")
+        job_id = f"job-{next(self._job_ctr):05d}"
+        self.meta.insert_job(job_id, manifest)  # durable BEFORE ack
+        self.admission.mark(job_id, manifest)
+        self.events.emit("api", "job_submitted", job=job_id,
+                         tenant=manifest.tenant)
+        return job_id
+
+    def status(self, job_id: str) -> JobStatus:
+        self._api_check()
+        rec = self.meta.get(job_id)
+        if rec is None:
+            raise KeyError(job_id)
+        return rec.status
+
+    def status_history(self, job_id: str) -> list:
+        self._api_check()
+        return list(self.meta.get(job_id).status_history)
+
+    def logs(self, job_id: str) -> list[str]:
+        self._api_check()
+        return self.log_index.stream(job_id)
+
+    def search_logs(self, query: str, job_id: Optional[str] = None):
+        self._api_check()
+        return self.log_index.search(query, job_id)
+
+    def halt(self, job_id: str, requeue: bool = False):
+        """HALT: checkpoint and stop; optionally auto-resume (preemption)."""
+        self._api_check()
+        g = self.guardians.get(job_id)
+        if g is not None:
+            g.halt()
+        else:
+            self.meta.update_status(job_id, JobStatus.HALTED, "halted")
+        if requeue:
+            # preempted jobs go back through the queue automatically
+            def do_resume(job_id=job_id):
+                rec = self.meta.get(job_id)
+                if rec is not None and rec.status == JobStatus.HALTED:
+                    self.resume(job_id)
+            self.clock.call_later(3 * self.tick_period, do_resume)
+
+    def resume(self, job_id: str):
+        """RESUME a HALTED job: fresh deployment, learners restore from the
+        latest checkpoint automatically."""
+        rec = self.meta.get(job_id)
+        if rec is None or rec.status != JobStatus.HALTED:
+            raise ValueError(f"{job_id} is not HALTED")
+        self.guardians.pop(job_id, None)
+        self.meta.update_status(job_id, JobStatus.RESUMED, "user resume")
+
+    def cancel(self, job_id: str):
+        self._api_check()
+        g = self.guardians.get(job_id)
+        if g is not None:
+            g._fail("user cancelled")
+
+    # ------------------------------------------------------------- engine
+    def tick(self):
+        self.clock.advance(self.tick_period)
+        self.clock.run_until(self.clock.now())
+        self.chaos.tick()
+        self.cluster.tick()
+        self.lcm.tick()
+        for g in list(self.guardians.values()):
+            g.tick()
+        self.admission.tick()
+        self.scheduler.tick()
+        self.metrics.sample_utilization(self.cluster.utilization())
+        # GC finished guardians
+        for job_id, g in list(self.guardians.items()):
+            if g.stage == "GC_DONE":
+                rec = self.meta.get(job_id)
+                if rec.status in TERMINAL or rec.status == JobStatus.HALTED:
+                    del self.guardians[job_id]
+
+    def run_for(self, sim_seconds: float):
+        n = int(sim_seconds / self.tick_period)
+        for _ in range(n):
+            self.tick()
+
+    def run_until_terminal(self, job_ids, max_sim_s: float = 1e5) -> bool:
+        """Tick until all jobs are COMPLETED/FAILED/HALTED. True if so."""
+        deadline = self.clock.now() + max_sim_s
+        watch = set(job_ids)
+        while self.clock.now() < deadline:
+            self.tick()
+            done = all(
+                self.meta.get(j) is not None and
+                (self.meta.get(j).status in TERMINAL or
+                 self.meta.get(j).status == JobStatus.HALTED)
+                for j in watch)
+            if done:
+                return True
+        return False

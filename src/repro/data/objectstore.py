@@ -1,0 +1,210 @@
+"""Object store with a mounted-filesystem view + streaming cache (FfDL C8).
+
+FfDL §3.7: "FfDL can mount remote data in the learner container, so DL
+frameworks can access training data as though it were on the local
+filesystem. A driver streams files on demand and caches them so they can be
+reused across training epochs and jobs."
+
+``ObjectStore`` models the remote service (buckets of immutable blobs with
+GET/PUT/LIST and per-operation latency+bandwidth accounting so the scale
+benchmark can reproduce §5.5's shared-bandwidth degradation).
+``MountedBucket`` is the driver: a file-like read path backed by an LRU block
+cache shared across epochs *and jobs* — the optimization the paper's
+"lessons learned" section calls out.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class ObjectStoreError(Exception):
+    pass
+
+
+@dataclass
+class StoreStats:
+    gets: int = 0
+    puts: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+
+class ObjectStore:
+    """In-process object storage service: buckets → key → immutable bytes.
+
+    ``bandwidth_bps`` (optional) models the shared network/storage pipe: each
+    transfer asks the clock for ``size / bandwidth`` seconds, which the scale
+    benchmark aggregates to reproduce heavy-load degradation.
+    """
+
+    def __init__(self, clock=None, bandwidth_bps: Optional[float] = None):
+        self._buckets: dict[str, dict[str, bytes]] = {}
+        self._lock = threading.RLock()
+        self.stats = StoreStats()
+        self.clock = clock
+        self.bandwidth_bps = bandwidth_bps
+        self.fail_next: int = 0  # chaos hook: fail the next N operations
+
+    def _maybe_fail(self, op: str):
+        if self.fail_next > 0:
+            self.fail_next -= 1
+            raise ObjectStoreError(f"injected object-store fault during {op}")
+
+    def _charge(self, nbytes: int):
+        if self.clock is not None and self.bandwidth_bps:
+            self.clock.advance(nbytes / self.bandwidth_bps)
+
+    def create_bucket(self, name: str):
+        with self._lock:
+            self._buckets.setdefault(name, {})
+
+    def put(self, bucket: str, key: str, data):
+        self._maybe_fail("put")
+        if isinstance(data, str):
+            data = data.encode()
+        with self._lock:
+            self._buckets.setdefault(bucket, {})[key] = bytes(data)
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+        self._charge(len(data))
+
+    def get(self, bucket: str, key: str) -> bytes:
+        self._maybe_fail("get")
+        with self._lock:
+            try:
+                data = self._buckets[bucket][key]
+            except KeyError:
+                raise ObjectStoreError(f"no such object {bucket}/{key}")
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+        self._charge(len(data))
+        return data
+
+    def delete(self, bucket: str, key: str):
+        with self._lock:
+            self._buckets.get(bucket, {}).pop(key, None)
+
+    def list(self, bucket: str, prefix: str = "") -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._buckets.get(bucket, {})
+                          if k.startswith(prefix))
+
+    def exists(self, bucket: str, key: str) -> bool:
+        with self._lock:
+            return key in self._buckets.get(bucket, {})
+
+
+class BlockCache:
+    """LRU byte-block cache shared across MountedBucket instances.
+
+    Keyed by (bucket, key) — "the same datasets are often used across jobs,
+    and an intelligent caching layer tuned to DL access patterns could have
+    significant cost and performance improvements" (FfDL §4).
+    """
+
+    def __init__(self, capacity_bytes: int = 1 << 30):
+        self.capacity = capacity_bytes
+        self._lru: OrderedDict[tuple, bytes] = OrderedDict()
+        self._size = 0
+        self._lock = threading.Lock()
+
+    def get(self, k):
+        with self._lock:
+            if k in self._lru:
+                self._lru.move_to_end(k)
+                return self._lru[k]
+        return None
+
+    def put(self, k, data: bytes):
+        with self._lock:
+            if k in self._lru:
+                return
+            self._lru[k] = data
+            self._size += len(data)
+            while self._size > self.capacity and self._lru:
+                _, evicted = self._lru.popitem(last=False)
+                self._size -= len(evicted)
+
+
+class MountedBucket:
+    """Filesystem-like read view of a bucket with read-through caching."""
+
+    def __init__(self, store: ObjectStore, bucket: str,
+                 cache: Optional[BlockCache] = None):
+        self.store = store
+        self.bucket = bucket
+        self.cache = cache
+
+    def read(self, key: str) -> bytes:
+        ck = (self.bucket, key)
+        if self.cache is not None:
+            hit = self.cache.get(ck)
+            if hit is not None:
+                self.store.stats.cache_hits += 1
+                return hit
+            self.store.stats.cache_misses += 1
+        data = self.store.get(self.bucket, key)
+        if self.cache is not None:
+            self.cache.put(ck, data)
+        return data
+
+    def write(self, key: str, data: bytes):
+        self.store.put(self.bucket, key, data)
+
+    def listdir(self, prefix: str = "") -> list[str]:
+        return self.store.list(self.bucket, prefix)
+
+    def exists(self, key: str) -> bool:
+        return self.store.exists(self.bucket, key)
+
+
+class DirBucket:
+    """MountedBucket-compatible view over a local directory (the launcher's
+    checkpoint target when no object-store service is wired in)."""
+
+    def __init__(self, root: str):
+        import os
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        import os
+        return os.path.join(self.root, key)
+
+    def read(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def write(self, key: str, data):
+        import os
+        if isinstance(data, str):
+            data = data.encode()
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic publish
+
+    def listdir(self, prefix: str = "") -> list:
+        import os
+        out = []
+        for dirpath, _, files in os.walk(self.root):
+            for fn in files:
+                rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix) and not rel.endswith(".tmp"):
+                    out.append(rel)
+        return sorted(out)
+
+    def exists(self, key: str) -> bool:
+        import os
+        return os.path.exists(self._path(key))

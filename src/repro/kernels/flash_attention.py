@@ -1,0 +1,147 @@
+"""Pallas TPU flash-attention (GQA, causal / local-window / bidirectional).
+
+TPU-native design (DESIGN.md §5):
+  * grid = (batch*kv_heads, q_blocks); each program owns one (B*KV, q_block)
+    tile and walks kv blocks with ``jax.lax.fori_loop`` carrying the online-
+    softmax state in registers/VMEM — HBM traffic is O(S*block) not O(S^2).
+  * Block shapes are MXU-aligned: q/kv block sizes are multiples of 128 in
+    the sequence dims and head_dim is padded by the caller to a multiple of
+    128 (the q @ k^T and p @ v contractions then map onto 128x128 systolic
+    passes).
+  * Causality is exploited structurally: the kv walk stops at the q block's
+    diagonal (lower-triangle blocks only, ~2x savings); a local window also
+    bounds the walk from below (RecurrentGemma's 2048-window attention).
+  * fp32 accumulation for scores/normalizer (exp in fp32), bf16 tensors.
+
+Grouped-query attention is handled by folding the q-head group into the
+q-block rows: a (kv_head, group, q_block) tile attends against that kv
+head's single k/v block — no k/v duplication in VMEM.
+
+Validated against ``ref.py`` (pure-jnp oracle) in interpret mode on CPU
+(tests/test_kernels.py sweeps shapes/dtypes/window/causality).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_kv,
+                  causal, window, scale, q_offset):
+    """One (bkv, q_block) program: walk kv blocks, online softmax.
+
+    Refs (VMEM blocks):
+      q_ref: (block_q, head_dim)   — this program's query rows
+      k_ref: (seq_kv, head_dim)    — full K for this (batch, kv_head)
+      v_ref: (seq_kv, head_dim)    — full V
+      o_ref: (block_q, head_dim)
+    """
+    qi = pl.program_id(1)
+    head_dim = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    q_start = qi * block_q + q_offset  # absolute position of q row 0
+
+    n_kv_blocks = seq_kv // block_k
+    if causal:
+        # last kv block that any q row in this tile can see
+        hi = jax.lax.div(q_start + block_q - 1, block_k) + 1
+        hi = jnp.minimum(hi, n_kv_blocks)
+    else:
+        hi = n_kv_blocks
+    if window > 0:
+        lo = jnp.maximum((q_start - window) // block_k, 0)
+    else:
+        lo = 0
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok &= q_pos >= k_pos
+        if window > 0:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def flash_attention_tpu(q, k, v, *, causal=True, window=0, block_q=128,
+                        block_k=128, q_offset=0, interpret=False):
+    """q: (B, H, Sq, D); k/v: (B, KV, Skv, D); H % KV == 0.
+
+    Returns (B, H, Sq, D) in q.dtype. On CPU call with interpret=True.
+    """
+    b, h, sq, d = q.shape
+    n_kv, skv = k.shape[1], k.shape[2]
+    assert h % n_kv == 0
+    group = h // n_kv
+    scale = d ** -0.5
+
+    block_q = min(block_q, sq * group)
+    block_k = min(block_k, skv)
+    # fold (group, seq) into q rows so one kv head serves its whole q group
+    qg = q.reshape(b, n_kv, group, sq, d)
+
+    if (sq * group) % block_q or skv % block_k:
+        raise ValueError(f"seq dims must divide blocks: {(sq, group, block_q, skv, block_k)}")
+
+    if group == 1:
+        grid = (b * n_kv, sq // block_q)
+        kernel = functools.partial(
+            _flash_kernel, block_q=block_q, block_k=block_k, seq_kv=skv,
+            causal=causal, window=window, scale=scale, q_offset=q_offset)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+                pl.BlockSpec((None, skv, d), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((None, skv, d), lambda i, j: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((b * n_kv, sq, d), q.dtype),
+            interpret=interpret,
+        )(qg.reshape(b * n_kv, sq, d),
+          k.reshape(b * n_kv, skv, d), v.reshape(b * n_kv, skv, d))
+        return out.reshape(b, h, sq, d)
+
+    # Grouped-query: vmap the single-group kernel over the group dim — each
+    # group member attends the same kv head, so k/v blocks are shared (no
+    # duplication in VMEM; pallas adds the vmap dim to the grid).
+    fn = functools.partial(flash_attention_tpu, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           q_offset=q_offset, interpret=interpret)
+    out = jax.vmap(lambda qg_: fn(qg_, k, v), in_axes=2, out_axes=2)(qg)
+    return out.reshape(b, h, sq, d)

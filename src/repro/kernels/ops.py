@@ -1,0 +1,63 @@
+"""Dispatching wrappers: Pallas on TPU, chunked-jnp equivalent elsewhere.
+
+The model code calls these; on a TPU runtime the Pallas kernels execute, on
+CPU (tests, dry-run) the structurally-equivalent jnp paths run (same math,
+same memory behavior class), with ``force`` overrides for kernel tests in
+interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rglru import rglru_scan_tpu
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    force: str | None = None):
+    """GQA flash attention. force in {None, 'pallas', 'interpret', 'ref'}."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "pallas":
+        return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    if mode == "interpret":
+        return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, interpret=True)
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset)
+    # memory-efficient jnp path (the dry-run lowers this)
+    from repro.nn.attention import flash_attention as chunked
+    return chunked(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def rglru_scan(a, b, h0=None, *, force: str | None = None):
+    """Linear recurrence. force in {None, 'pallas', 'interpret', 'ref'}."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "pallas":
+        return rglru_scan_tpu(a, b, h0)
+    if mode == "interpret":
+        return rglru_scan_tpu(a, b, h0, interpret=True)
+    if mode == "ref":
+        return ref.rglru_scan_ref(a, b, h0)
+    # associative-scan jnp path (log-depth, what the dry-run lowers)
+    import jax.numpy as jnp
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if h0 is not None:
+        bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(b.dtype), h[:, -1]

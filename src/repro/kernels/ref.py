@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """O(S^2)-memory reference GQA attention.
+
+    q: (B, H, Sq, D); k/v: (B, KV, Skv, D). fp32 softmax, output in q.dtype.
+    """
+    b, h, sq, d = q.shape
+    n_kv, skv = k.shape[1], k.shape[2]
+    group = h // n_kv
+    qg = q.reshape(b, n_kv, group, sq, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bkgsd,bkcd->bkgsc", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    if causal:
+        s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None, None],
+                      s, -1e30)
+    if window > 0:
+        s = jnp.where((q_pos[:, None] - k_pos[None, :] < window)
+                      [None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgsc,bkcd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Step-by-step linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, W). Returns (h (B,S,W) in b.dtype, h_last (B,W) fp32).
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros_like(bf[:, 0]) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h, (af.swapaxes(0, 1), bf.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(b.dtype), h_last

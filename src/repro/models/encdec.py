@@ -1,0 +1,172 @@
+"""Encoder-decoder model (whisper-tiny backbone).
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: ``input_specs()`` feeds precomputed frame embeddings
+(B, enc_seq, d_model). Positions are sinusoidal (whisper-style absolute),
+which keeps any decode length shape-valid (noted in DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import params as prm
+from repro.nn.attention import (
+    KVCache,
+    cross_attention,
+    def_cross_attention,
+    def_gqa,
+    gqa_attention,
+)
+from repro.nn.layers import (
+    def_norm,
+    embed_lookup,
+    norm,
+    sinusoidal_positions,
+    unembed,
+)
+from repro.nn.mlp import def_mlp, mlp
+from repro.parallel import shard
+
+
+def _def_enc_block(cfg: ModelConfig):
+    return {
+        "norm1": def_norm(cfg.d_model, cfg.rms_norm),
+        "attn": def_gqa(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm2": def_norm(cfg.d_model, cfg.rms_norm),
+        "mlp": def_mlp(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def def_encdec(cfg: ModelConfig):
+    dec_block = {
+        "norm1": def_norm(cfg.d_model, cfg.rms_norm),
+        "attn": def_gqa(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm_cross": def_norm(cfg.d_model, cfg.rms_norm),
+        "cross": def_cross_attention(cfg.d_model, cfg.n_heads, cfg.hd),
+        "norm2": def_norm(cfg.d_model, cfg.rms_norm),
+        "mlp": def_mlp(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+    return {
+        "embed": prm.embedding(cfg.vocab_size, cfg.d_model),
+        "enc": [_def_enc_block(cfg) for _ in range(cfg.n_enc_layers)],
+        "enc_norm": def_norm(cfg.d_model, cfg.rms_norm),
+        "dec": [dict(dec_block) for _ in range(cfg.n_layers)],
+        "dec_norm": def_norm(cfg.d_model, cfg.rms_norm),
+    }
+
+
+def encode(p, frames, cfg: ModelConfig):
+    """frames: (B, enc_seq, d) stub frontend output → encoder memory."""
+    s = frames.shape[1]
+    x = frames + sinusoidal_positions(s, cfg.d_model).astype(frames.dtype)
+    x = shard(x, "batch", "enc_seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s), frames.shape[:2])
+    for blk in p["enc"]:
+        h = norm(blk["norm1"], x, cfg.rms_norm)
+        o, _ = gqa_attention(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, positions=positions, use_rope=False,
+            causal=False, chunk=cfg.attn_chunk, mode="train")
+        x = x + o
+        x = x + mlp(blk["mlp"], norm(blk["norm2"], x, cfg.rms_norm), cfg.act)
+        x = shard(x, "batch", "enc_seq", "embed")
+    return norm(p["enc_norm"], x, cfg.rms_norm)
+
+
+def decode_train(p, tokens, memory, cfg: ModelConfig):
+    """Teacher-forced decoder pass. tokens: (B, S); memory: (B, S_enc, d)."""
+    b, s = tokens.shape
+    x = embed_lookup(p["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for blk in p["dec"]:
+        h = norm(blk["norm1"], x, cfg.rms_norm)
+        o, _ = gqa_attention(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, positions=positions, use_rope=False,
+            causal=True, chunk=cfg.attn_chunk, mode="train")
+        x = x + o
+        h = norm(blk["norm_cross"], x, cfg.rms_norm)
+        o, _ = cross_attention(blk["cross"], h, memory=memory)
+        x = x + o
+        x = x + mlp(blk["mlp"], norm(blk["norm2"], x, cfg.rms_norm), cfg.act)
+        x = shard(x, "batch", "seq", "embed")
+    x = norm(p["dec_norm"], x, cfg.rms_norm)
+    return unembed(p["embed"], x)
+
+
+def init_decode_state(p, memory, cfg: ModelConfig, batch: int, s_max: int,
+                      dtype=jnp.bfloat16):
+    """Self-attn KV caches + precomputed cross-attn K/V per decoder layer."""
+    states = []
+    for blk in p["dec"]:
+        k = jnp.einsum("bsd,dhk->bhsk", memory, blk["cross"]["wk"],
+                       preferred_element_type=jnp.float32).astype(dtype)
+        v = jnp.einsum("bsd,dhk->bhsk", memory, blk["cross"]["wv"],
+                       preferred_element_type=jnp.float32).astype(dtype)
+        states.append({
+            "self": KVCache(
+                jnp.zeros((batch, cfg.n_kv_heads, s_max, cfg.hd), dtype),
+                jnp.zeros((batch, cfg.n_kv_heads, s_max, cfg.hd), dtype)),
+            "cross_kv": (k, v),
+        })
+    return states
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, s_max: int,
+                          dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode state (dry-run, no allocation)."""
+    def sd(shape):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return [
+        {
+            "self": KVCache(sd((batch, cfg.n_kv_heads, s_max, cfg.hd)),
+                            sd((batch, cfg.n_kv_heads, s_max, cfg.hd))),
+            "cross_kv": (sd((batch, cfg.n_heads, cfg.enc_seq, cfg.hd)),
+                         sd((batch, cfg.n_heads, cfg.enc_seq, cfg.hd))),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Logical axes of the decode state (dry-run sharding)."""
+    kv = ("batch", "kv_heads", "kv_seq", "head_dim")
+    cross = ("batch", "heads", "enc_seq", "head_dim")
+    return [
+        {"self": KVCache(k=kv, v=kv), "cross_kv": (cross, cross)}
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def decode_step(p, token, states, cache_len, cfg: ModelConfig):
+    """One decode step. token: (B, 1); returns (logits (B,1,V), new states)."""
+    b = token.shape[0]
+    x = embed_lookup(p["embed"], token).astype(jnp.dtype(cfg.dtype))
+    # absolute sinusoidal position at cache_len (traced) — computed directly
+    pos = jnp.broadcast_to(cache_len, (b, 1)).astype(jnp.int32)
+    half_angles = pos[..., None].astype(jnp.float32) / jnp.power(
+        10000.0, jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32) / cfg.d_model)
+    pe = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(half_angles))
+    pe = pe.at[..., 1::2].set(jnp.cos(half_angles))
+    x = x + pe.astype(x.dtype)
+    new_states = []
+    for blk, st in zip(p["dec"], states):
+        h = norm(blk["norm1"], x, cfg.rms_norm)
+        o, new_cache = gqa_attention(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, positions=pos, use_rope=False, causal=True,
+            cache=st["self"], cache_len=cache_len, mode="decode")
+        x = x + o
+        h = norm(blk["norm_cross"], x, cfg.rms_norm)
+        o, _ = cross_attention(blk["cross"], h, mem_kv=st["cross_kv"])
+        x = x + o
+        x = x + mlp(blk["mlp"], norm(blk["norm2"], x, cfg.rms_norm), cfg.act)
+        new_states.append({"self": new_cache, "cross_kv": st["cross_kv"]})
+    x = norm(p["dec_norm"], x, cfg.rms_norm)
+    return unembed(p["embed"], x), new_states

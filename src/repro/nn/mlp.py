@@ -1,0 +1,44 @@
+"""Dense MLP blocks: SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn import params as prm
+from repro.nn.layers import activation
+from repro.nn.policy import interior_pref
+from repro.parallel import shard
+
+
+def def_mlp(d_model, d_ff, act="silu", use_bias=False):
+    gated = act in ("silu",)
+    d = {
+        "up": prm.matrix(d_model, d_ff, "embed", "mlp"),
+        "down": prm.matrix(d_ff, d_model, "mlp", "embed"),
+    }
+    if gated:
+        d["gate"] = prm.matrix(d_model, d_ff, "embed", "mlp")
+    if use_bias:
+        d["up_b"] = prm.bias(d_ff, "mlp")
+        d["down_b"] = prm.bias(d_model, "embed")
+    return d
+
+
+def mlp(p, x, act="silu"):
+    fn = activation(act)
+    up = jnp.einsum("...d,df->...f", x, p["up"],
+                    preferred_element_type=interior_pref())
+    if "up_b" in p:
+        up = up + p["up_b"].astype(up.dtype)
+    if "gate" in p:
+        gate = jnp.einsum("...d,df->...f", x, p["gate"],
+                          preferred_element_type=interior_pref())
+        h = fn(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+    else:
+        h = fn(up.astype(jnp.float32))
+    h = shard(h.astype(x.dtype), "batch", "seq", "mlp")
+    y = jnp.einsum("...f,fd->...d", h, p["down"],
+                   preferred_element_type=interior_pref())
+    if "down_b" in p:
+        y = y + p["down_b"].astype(y.dtype)
+    return y.astype(x.dtype)

@@ -1,0 +1,229 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two execution paths, same math:
+
+* ``moe_ffn_local`` — single-device reference: local sort-based dispatch into
+  per-expert capacity buffers + ``jax.lax.ragged_dot`` grouped matmul. FLOPs
+  scale with *active* (routed) tokens, never with ``n_experts x tokens``.
+* ``moe_ffn`` — distributed: the local path wrapped in ``jax.shard_map`` over
+  the DP mesh axes with experts sharded over the ``model`` axis (expert
+  parallelism). Each model shard gathers only the rows routed to *its*
+  experts (token activations are replicated across the model axis at MoE
+  block entry, so no all-to-all is needed); per-shard contributions are
+  combined with a single ``psum`` over ``model`` — the same collective cost
+  as a Megatron TP MLP. Dispatch uses a *local* sort per DP shard, avoiding
+  GSPMD's cross-device bitonic sort entirely.
+
+Token dropping follows GShard/Switch capacity semantics: per-expert capacity
+C = ceil(T_local * top_k / n_experts * capacity_factor); overflow rows are
+dropped (contribute zero, weight renormalization optional off).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import params as prm
+from repro.nn.layers import activation
+from repro.parallel import current_env
+
+
+def def_moe(d_model, n_experts, moe_d_ff, top_k, act="silu"):
+    del top_k, act
+    return {
+        "router": prm.matrix(d_model, n_experts, "embed", "experts",
+                             dtype="float32"),
+        "up": prm.ParamDef((n_experts, d_model, moe_d_ff),
+                           ("experts", "embed", "expert_mlp"), init="scaled_fan_in"),
+        "gate": prm.ParamDef((n_experts, d_model, moe_d_ff),
+                             ("experts", "embed", "expert_mlp"), init="scaled_fan_in"),
+        "down": prm.ParamDef((n_experts, moe_d_ff, d_model),
+                             ("experts", "expert_mlp", "embed"), init="scaled_fan_in"),
+    }
+
+
+def capacity(t_local: int, top_k: int, n_experts: int, factor: float,
+             min_capacity: int = 4) -> int:
+    c = math.ceil(t_local * top_k / n_experts * factor)
+    return max(min(max(c, min_capacity), t_local * top_k), 1)
+
+
+def router_topk(p_router, x, top_k: int):
+    """x: (T, d) → weights (T, k) fp32 (softmax over the selected k),
+    indices (T, k) int32, plus load-balancing aux loss (Switch-style)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p_router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # aux loss: n_experts * mean(frac_tokens_e * mean_prob_e)
+    n_experts = logits.shape[-1]
+    hard = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    aux = n_experts * jnp.mean(jnp.mean(hard, axis=0) * jnp.mean(probs, axis=0))
+    return w, idx, aux
+
+
+def _dispatch_indices(idx, n_experts: int, cap: int, e_start, e_local: int):
+    """Build the gather map for experts [e_start, e_start + e_local).
+
+    idx: (T, k) expert assignment. Returns:
+      src:  (e_local * cap,) int32 — source row in the flattened (T*k) stream
+            (T*k means "empty slot"),
+      sizes: (e_local,) int32 — valid rows per local expert (<= cap).
+    """
+    t, k = idx.shape
+    flat = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat, stable=True)  # rows grouped by expert
+    sorted_e = flat[order]
+    # Position of each sorted row within its expert group.
+    counts = jnp.bincount(flat, length=n_experts)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    # Keep only local experts and rows under capacity.
+    local_e = sorted_e - e_start
+    keep = (local_e >= 0) & (local_e < e_local) & (pos_in_e < cap)
+    dest = jnp.where(keep, local_e * cap + pos_in_e, e_local * cap)
+    src = jnp.full((e_local * cap + 1,), t * k, jnp.int32)
+    src = src.at[dest].set(order.astype(jnp.int32), mode="drop")[:-1]
+    local_counts = jax.lax.dynamic_slice_in_dim(counts, e_start, e_local)
+    sizes = jnp.minimum(local_counts, cap).astype(jnp.int32)
+    return src, sizes
+
+
+def _expert_ffn(up, gate, down, rows, sizes, act="silu", impl="einsum"):
+    """Grouped expert FFN over capacity buffers.
+
+    rows: (E_local*C, d) grouped by expert (fixed capacity C per expert);
+    sizes: (E_local,) valid rows per expert (only used by the ragged path).
+
+    impl="einsum" (default): reshape to (E_local, C, d) and run batched
+    einsums — flops = E_local*C*d*f = active_tokens*capacity_factor, the
+    GShard/megablox-equivalent dense-buffer formulation (MXU-native tiles,
+    no dynamic shapes). impl="ragged": jax.lax.ragged_dot — equivalent math,
+    but decomposes into a dense per-expert loop on non-TPU backends (kept
+    for comparison; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    fn = activation(act)
+    if impl == "ragged":
+        h_up = jax.lax.ragged_dot(rows, up, sizes)
+        h_gate = jax.lax.ragged_dot(rows, gate, sizes)
+        h = (fn(h_gate.astype(jnp.float32)) * h_up.astype(jnp.float32)
+             ).astype(rows.dtype)
+        return jax.lax.ragged_dot(h, down, sizes)
+    e_local = up.shape[0]
+    buf = rows.reshape(e_local, -1, rows.shape[-1])  # (E_local, C, d)
+    h_up = jnp.einsum("ecd,edf->ecf", buf, up)
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, gate)
+    h = (fn(h_gate.astype(jnp.float32)) * h_up.astype(jnp.float32)
+         ).astype(rows.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, down)
+    return out.reshape(rows.shape[0], -1)
+
+
+def moe_ffn_local(p, x, *, top_k: int, capacity_factor: float = 1.25,
+                  act: str = "silu", e_start=0, e_local: Optional[int] = None):
+    """MoE FFN on local rows for experts [e_start, e_start+e_local).
+
+    x: (T, d). Returns (y (T, d), aux_loss ()). Caller combines shards.
+    """
+    t, d = x.shape
+    n_experts = p["router"].shape[-1]
+    e_local = n_experts if e_local is None else e_local
+    w, idx, aux = router_topk(p["router"], x, top_k)
+    cap = capacity(t, top_k, n_experts, capacity_factor)
+    src, sizes = _dispatch_indices(idx, n_experts, cap, e_start, e_local)
+    # Gather rows (empty slots read row 0 but are zero-weighted on combine).
+    safe_src = jnp.minimum(src, t * top_k - 1)
+    rows = x[safe_src // top_k]  # (e_local*cap, d)
+    out_rows = _expert_ffn(p["up"], p["gate"], p["down"], rows, sizes, act)
+    # Combine: scatter-add weighted expert outputs back to token rows.
+    w_flat = w.reshape(-1)  # (T*k,)
+    row_w = jnp.where(src < t * top_k, w_flat[safe_src], 0.0)  # (e_local*cap,)
+    contrib = out_rows.astype(jnp.float32) * row_w[:, None]
+    y = jnp.zeros((t + 1, d), jnp.float32)
+    y = y.at[jnp.where(src < t * top_k, safe_src // top_k, t)].add(contrib,
+                                                                   mode="drop")
+    return y[:t].astype(x.dtype), aux
+
+
+def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25, act: str = "silu"):
+    """Distributed MoE FFN. x: (B, S, d) → (B, S, d), aux ().
+
+    When no mesh env is active, falls back to the local path.
+    """
+    env = current_env()
+    b, s, d = x.shape
+
+    if not env.active:
+        y, aux = moe_ffn_local(p, x.reshape(-1, d), top_k=top_k,
+                               capacity_factor=capacity_factor, act=act)
+        return y.reshape(b, s, d), aux
+
+    mesh = env.mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_ax = "model"
+    n_model = mesh.shape[model_ax]
+    n_experts = p["router"].shape[-1]
+    # Experts shard over model when divisible (expert parallelism). When not
+    # (granite: 40 experts on a 16-way axis), fall back to TOKEN-parallel
+    # MoE: sequence sharded over the model axis, experts replicated — every
+    # shard routes/computes only its own tokens, no collectives inside the
+    # block at all (EXPERIMENTS.md §Perf granite it.7).
+    ep = n_model if n_experts % n_model == 0 else 1
+    token_parallel = ep == 1 and s % n_model == 0
+    e_local = n_experts // ep
+
+    if token_parallel:
+        in_specs = (
+            {"router": P(), "up": P(), "gate": P(), "down": P()},
+            P(dp_axes, model_ax, None),
+        )
+        out_specs = (P(dp_axes, model_ax, None), P())
+
+        def tp_fn(p_loc, x_loc):
+            bl, sl, dl = x_loc.shape
+            y, aux = moe_ffn_local(p_loc, x_loc.reshape(-1, dl), top_k=top_k,
+                                   capacity_factor=capacity_factor, act=act)
+            aux = jax.lax.pmean(aux, dp_axes + (model_ax,))
+            return y.reshape(bl, sl, dl), aux
+
+        return jax.shard_map(tp_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(p, x)
+
+    expert_spec = P(model_ax) if ep > 1 else P()
+    in_specs = (
+        {
+            "router": P(),
+            "up": expert_spec,
+            "gate": expert_spec,
+            "down": expert_spec,
+        },
+        P(dp_axes, None, None),  # x: batch over DP, replicated over model
+    )
+    out_specs = (P(dp_axes, None, None), P())
+
+    def shard_fn(p_loc, x_loc):
+        bl, sl, dl = x_loc.shape
+        m_idx = jax.lax.axis_index(model_ax)
+        e_start = (m_idx * e_local) if ep > 1 else 0
+        y, aux = moe_ffn_local(p_loc, x_loc.reshape(-1, dl), top_k=top_k,
+                               capacity_factor=capacity_factor, act=act,
+                               e_start=e_start, e_local=e_local)
+        if ep > 1:
+            y = jax.lax.psum(y, model_ax)
+            aux = jax.lax.pmean(aux, model_ax)
+        else:
+            # Experts replicated: every model shard computed the same thing.
+            y = y / 1.0
+        aux = jax.lax.pmean(aux, dp_axes)
+        return y.reshape(bl, sl, dl), aux
+
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(p, x)
+    return y, aux

@@ -1,0 +1,110 @@
+"""Parameter definition & materialization.
+
+Layers declare parameters as trees of :class:`ParamDef` (shape + logical axes
++ initializer). Generic code turns a def-tree into:
+
+  * a concrete parameter tree (``materialize`` — pure & traceable, so
+    ``jax.eval_shape`` gives abstract params for the dry-run without ever
+    allocating 235B-parameter models), and
+  * a logical-axes tree (``axes_of`` — consumed by parallel.param_shardings).
+
+This is the no-flax substrate the whole model stack is built on.
+"""
+
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_map_with_path
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple  # logical axis names, same length as shape (None allowed)
+    init: str = "normal"  # normal | zeros | ones | scaled_fan_in | truncated
+    scale: Optional[float] = None
+    dtype: Optional[str] = None  # override model dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple) -> int:
+    # For (in, out) matrices fan-in is dim 0; for stacked expert weights
+    # (experts, in, out) it's dim 1; vectors have fan-in 1.
+    if len(shape) >= 2:
+        return shape[-2]
+    return 1
+
+
+def _init_leaf(key, d: ParamDef, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(d.dtype) if d.dtype else default_dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        scale = d.scale if d.scale is not None else 0.02
+        return (scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    if d.init == "scaled_fan_in":
+        scale = d.scale if d.scale is not None else 1.0
+        std = scale / math.sqrt(max(_fan_in(d.shape), 1))
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def materialize(key: jax.Array, defs, dtype=jnp.bfloat16):
+    """Turn a ParamDef tree into a parameter tree. Pure; eval_shape-able.
+
+    Each leaf gets an independent key derived by folding the leaf path's hash
+    into ``key`` so parameter values do not depend on tree iteration order.
+    """
+
+    def build(path: str, d: ParamDef):
+        # zlib.crc32, not hash(): Python salts str hashes per process, which
+        # would make init non-deterministic across restarts.
+        leaf_key = jax.random.fold_in(key, zlib.crc32(path.encode()) % (2**31))
+        return _init_leaf(leaf_key, d, dtype)
+
+    return tree_map_with_path(build, defs)
+
+
+def abstract(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree for a ParamDef tree (no allocation)."""
+    return jax.eval_shape(lambda: materialize(jax.random.key(0), defs, dtype))
+
+
+def axes_of(defs):
+    """Logical-axes tree (leaves = tuples) mirroring the params tree."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+# --- tiny declaration helpers used throughout repro.nn -------------------
+
+
+def matrix(d_in: int, d_out: int, ax_in: str, ax_out: str, **kw) -> ParamDef:
+    return ParamDef((d_in, d_out), (ax_in, ax_out), init="scaled_fan_in", **kw)
+
+
+def bias(d: int, ax: str, **kw) -> ParamDef:
+    return ParamDef((d,), (ax,), init="zeros", **kw)
+
+
+def norm_scale(d: int, ax: str = "embed") -> ParamDef:
+    # Norm scales stay fp32 for numerical robustness (maxtext convention).
+    return ParamDef((d,), (ax,), init="ones", dtype="float32")
+
+
+def embedding(vocab: int, d: int) -> ParamDef:
+    return ParamDef((vocab, d), ("vocab", "embed"), init="normal", scale=0.02)

@@ -1,0 +1,45 @@
+"""Matmul precision policy (hillclimb lever, EXPERIMENTS.md §Perf it.2).
+
+Default (baseline): interior einsums request fp32 outputs
+(``preferred_element_type=f32``) — numerically safest, but it materializes
+fp32 intermediates and makes every backward dot f32-wide.
+
+``bf16_interior``: interior matmuls emit bf16 (the TPU MXU accumulates in
+fp32 internally either way); fp32 is kept where it matters — logits/unembed,
+softmax/normalizer internals, RMS norms, router, recurrence coefficients.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax.numpy as jnp
+
+
+class _Policy(threading.local):
+    def __init__(self):
+        self.bf16_interior = False
+
+
+_P = _Policy()
+
+
+def interior_pref():
+    """preferred_element_type for interior matmuls (None = input dtype)."""
+    return None if _P.bf16_interior else jnp.float32
+
+
+def cast_interior(x, like_dtype):
+    """Cast an einsum output to the residual dtype (no-op under bf16)."""
+    return x.astype(like_dtype)
+
+
+@contextlib.contextmanager
+def bf16_interior(enabled: bool = True):
+    old = _P.bf16_interior
+    _P.bf16_interior = enabled
+    try:
+        yield
+    finally:
+        _P.bf16_interior = old

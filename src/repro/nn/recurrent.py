@@ -1,0 +1,332 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin), mLSTM and
+sLSTM (xLSTM). All sub-quadratic — these are the archs that run the 500k
+long-context shape.
+
+TPU adaptation notes (see DESIGN.md §2): the GPU reference implementations
+use custom CUDA scan kernels; here the linear recurrences are expressed as
+
+  * RG-LRU: ``jax.lax.associative_scan`` (log-depth, parallel, MXU-free) for
+    train/prefill and an O(1) step for decode;
+  * mLSTM: a *chunkwise-parallel* formulation (quadratic inside a chunk via
+    masked matmuls — MXU-friendly — linear across chunks via a carried
+    (C, n, m) state), the TPU-native analogue of the paper's fused kernel;
+  * sLSTM: inherently sequential (recurrent weights R), expressed as
+    ``lax.scan`` with per-step block-diagonal matmuls.
+
+Pure-jnp reference oracles for tests live alongside in this module
+(``*_ref`` functions, step-by-step scans).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import params as prm
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv1d (width w), used by RG-LRU and xLSTM blocks
+# --------------------------------------------------------------------------
+
+def def_causal_conv(width, channels):
+    return {
+        "w": prm.ParamDef((width, channels), ("conv", "lru"), init="scaled_fan_in"),
+        "b": prm.bias(channels, "lru"),
+    }
+
+
+def causal_conv(p, x):
+    """x: (B, S, C) → same shape; causal depthwise conv, width = p.w.shape[0]."""
+    width = p["w"].shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(width):
+        xj = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xj.astype(jnp.float32) * p["w"][width - 1 - j].astype(jnp.float32)
+    out = out + p["b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(p, x_t, state):
+    """x_t: (B, C); state: (B, width-1, C) past inputs. Returns (y_t, state')."""
+    width = p["w"].shape[0]
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, width, C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["w"].astype(jnp.float32)) + p["b"].astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+def conv_state_init(batch, width, channels, dtype):
+    return jnp.zeros((batch, width - 1, channels), dtype)
+
+
+# --------------------------------------------------------------------------
+# Block-diagonal linear (Griffin's gate projections; xLSTM recurrent R)
+# --------------------------------------------------------------------------
+
+def def_blockdiag(n_blocks, block_w, n_out_per_block=None):
+    out_w = n_out_per_block or block_w
+    return {
+        "w": prm.ParamDef((n_blocks, block_w, out_w), ("heads", "lru", None),
+                          init="scaled_fan_in"),
+        "b": prm.ParamDef((n_blocks, out_w), ("heads", None), init="zeros"),
+    }
+
+
+def blockdiag(p, x):
+    """x: (..., n_blocks, block_w) → (..., n_blocks, out_w).
+
+    Computed in fp32: these are small per-head gate projections, and the CPU
+    backend lacks a bf16xbf16→f32 thunk for multi-batch-dim dots.
+    """
+    y = jnp.einsum("...nb,nbo->...no", x.astype(jnp.float32),
+                   p["w"].astype(jnp.float32))
+    return (y + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+_RG_C = 8.0  # Griffin's fixed exponent scale
+_LAMBDA_SHIFT = -5.0  # softplus(raw - 5) ≈ 0.0067 → a ≈ 0.95 at r=1
+
+
+def def_rglru(width, n_heads):
+    block_w = width // n_heads
+    return {
+        "a_gate": def_blockdiag(n_heads, block_w),
+        "i_gate": def_blockdiag(n_heads, block_w),
+        "lam": prm.ParamDef((width,), ("lru",), init="zeros", dtype="float32"),
+    }
+
+
+def _rglru_coeffs(p, x, n_heads):
+    """x: (B, S, W) → log_a (B,S,W) fp32, gated input b (B,S,W) fp32."""
+    b_, s, w = x.shape
+    xh = x.reshape(b_, s, n_heads, w // n_heads)
+    r = jax.nn.sigmoid(blockdiag(p["a_gate"], xh).astype(jnp.float32)).reshape(b_, s, w)
+    i = jax.nn.sigmoid(blockdiag(p["i_gate"], xh).astype(jnp.float32)).reshape(b_, s, w)
+    log_a = -_RG_C * jax.nn.softplus(p["lam"] + _LAMBDA_SHIFT) * r  # (B,S,W)
+    gated_x = i * x.astype(jnp.float32)
+    # sqrt(1 - a^2) input normalizer (Griffin eq. 4), computed stably in logs.
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, multiplier * gated_x
+
+
+def rglru(p, x, n_heads, h0=None):
+    """Parallel RG-LRU over a sequence. x: (B,S,W) → (y (B,S,W), h_last)."""
+    log_a, b = _rglru_coeffs(p, x, n_heads)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x_t, h, n_heads):
+    """One decode step. x_t: (B, W); h: (B, W) fp32 state."""
+    log_a, b = _rglru_coeffs(p, x_t[:, None], n_heads)
+    h_new = jnp.exp(log_a[:, 0]) * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+def rglru_ref(p, x, n_heads, h0=None):
+    """Step-by-step oracle."""
+    log_a, b = _rglru_coeffs(p, x, n_heads)
+    h = jnp.zeros_like(x[:, 0], dtype=jnp.float32) if h0 is None else h0
+
+    def step(h, inputs):
+        la, bt = inputs
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (log_a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise parallel
+# --------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv) stabilized matrix memory C_hat
+    n: jax.Array  # (B, H, dk)    stabilized normalizer n_hat
+    m: jax.Array  # (B, H)        log stabilizer
+
+
+def mlstm_state_init(batch, n_heads, dk, dv):
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, dk, dv), jnp.float32),
+        n=jnp.zeros((batch, n_heads, dk), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, state=None, chunk=256):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k: (B, H, S, dk); v: (B, H, S, dv); i_gate/f_gate: (B, H, S) raw
+    (pre-activation) gates; f uses log-sigmoid, i uses exp with shared
+    stabilizer m. Returns (h (B,H,S,dv), final MLSTMState).
+    """
+    b, hn, s, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = mlstm_state_init(b, hn, dk, dv)
+    L = min(chunk, s)
+    assert s % L == 0
+    nc = s // L
+    scale = dk ** -0.5
+
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,H,S)
+    logi = i_gate.astype(jnp.float32)
+
+    def rc(x):  # reshape to chunks, chunk axis leading for scan
+        return x.reshape(b, hn, nc, L, *x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qc, kc, vc = rc(q * scale), rc(k), rc(v)
+    lf, li = rc(logf), rc(logi)
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry
+        qi, ki, vi, lfi, lii = inp  # (B,H,L,*)
+        bcum = jnp.cumsum(lfi, axis=-1)  # (B,H,L) inclusive log prod of f
+        btot = bcum[..., -1]
+        # log weight of intra source t for target j: bcum_j - bcum_t + li_t
+        g_src = lii - bcum  # (B,H,L)
+        # Stabilizers per target position.
+        idx = jnp.arange(L)
+        tri = idx[:, None] >= idx[None, :]  # (L, L) causal within chunk
+        intra_log = bcum[..., :, None] + g_src[..., None, :]  # (B,H,L,L)
+        intra_log = jnp.where(tri, intra_log, -jnp.inf)
+        m_intra = jnp.max(intra_log, axis=-1)  # (B,H,L)
+        m_inter = bcum + m0[..., None]  # (B,H,L)
+        m_j = jnp.maximum(m_inter, m_intra)
+        # Intra-chunk attention-style term.
+        d_mat = jnp.exp(intra_log - m_j[..., None])  # (B,H,L,L)
+        s_qk = jnp.einsum("bhld,bhtd->bhlt", qi.astype(jnp.float32),
+                          ki.astype(jnp.float32))
+        num_intra = jnp.einsum("bhlt,bhtv->bhlv", s_qk * d_mat,
+                               vi.astype(jnp.float32))
+        den_intra = jnp.sum(s_qk * d_mat, axis=-1)  # (B,H,L)
+        # Inter-chunk term from carried state.
+        w_inter = jnp.exp(m_inter - m_j)  # (B,H,L)
+        num_inter = jnp.einsum("bhld,bhdv->bhlv", qi.astype(jnp.float32), C0)
+        den_inter = jnp.einsum("bhld,bhd->bhl", qi.astype(jnp.float32), n0)
+        num = num_inter * w_inter[..., None] + num_intra
+        den = den_inter * w_inter + den_intra
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # State update to end of chunk.
+        m_new = jnp.maximum(btot + m0, jnp.max(lii + (btot[..., None] - bcum), axis=-1))
+        w_old = jnp.exp(btot + m0 - m_new)  # (B,H)
+        w_src = jnp.exp(lii + btot[..., None] - bcum - m_new[..., None])  # (B,H,L)
+        C_new = C0 * w_old[..., None, None] + jnp.einsum(
+            "bhld,bhlv->bhdv", ki.astype(jnp.float32) * w_src[..., None],
+            vi.astype(jnp.float32))
+        n_new = n0 * w_old[..., None] + jnp.sum(
+            ki.astype(jnp.float32) * w_src[..., None], axis=2)
+        return (C_new, n_new, m_new), h
+
+    (c, n, m), hs = jax.lax.scan(chunk_step, tuple(state), (qc, kc, vc, lf, li))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, hn, s, dv)
+    return h.astype(q.dtype), MLSTMState(c, n, m)
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, state: MLSTMState):
+    """One decode step. q,k: (B,H,dk); v: (B,H,dv); gates (B,H)."""
+    dk = q.shape[-1]
+    scale = dk ** -0.5
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    logi = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state.m, logi)
+    w_old = jnp.exp(logf + state.m - m_new)
+    w_in = jnp.exp(logi - m_new)
+    kf = k.astype(jnp.float32) * w_in[..., None]
+    c = state.c * w_old[..., None, None] + kf[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    n = state.n * w_old[..., None] + kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), MLSTMState(c, n, m_new)
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate, state=None):
+    """Step-by-step oracle for mlstm_chunkwise."""
+    b, hn, s, dk = q.shape
+    dv = v.shape[-1]
+    st = state or mlstm_state_init(b, hn, dk, dv)
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp
+        h, st = mlstm_step(qt, kt, vt, it, ft, st)
+        return st, h
+
+    xs = (q.swapaxes(0, 2).swapaxes(1, 2), k.swapaxes(0, 2).swapaxes(1, 2),
+          v.swapaxes(0, 2).swapaxes(1, 2), i_gate.transpose(2, 0, 1),
+          f_gate.transpose(2, 0, 1))
+    st, hs = jax.lax.scan(step, st, xs)
+    return hs.transpose(1, 2, 0, 3), st
+
+
+# --------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory with recurrence) — sequential scan
+# --------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H, dh)
+    h: jax.Array  # (B, H, dh) hidden fed back through R
+
+
+def slstm_state_init(batch, n_heads, dh):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return SLSTMState(z, z, jnp.full_like(z, -1e30), z)
+
+
+def def_slstm_core(n_heads, dh):
+    # Recurrent block-diagonal weights for the four gates (i, f, z, o).
+    return {g: prm.ParamDef((n_heads, dh, dh), ("heads", None, None),
+                            init="scaled_fan_in", scale=0.3)
+            for g in ("ri", "rf", "rz", "ro")}
+
+
+def slstm_step(p, x_gates, state: SLSTMState):
+    """One step. x_gates: dict of (B,H,dh) pre-activations from the input."""
+    hf = state.h
+    gi = x_gates["i"].astype(jnp.float32) + jnp.einsum("bhd,hde->bhe", hf, p["ri"].astype(jnp.float32))
+    gf = x_gates["f"].astype(jnp.float32) + jnp.einsum("bhd,hde->bhe", hf, p["rf"].astype(jnp.float32))
+    gz = x_gates["z"].astype(jnp.float32) + jnp.einsum("bhd,hde->bhe", hf, p["rz"].astype(jnp.float32))
+    go = x_gates["o"].astype(jnp.float32) + jnp.einsum("bhd,hde->bhe", hf, p["ro"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + state.m, gi)
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(logf + state.m - m_new)
+    c = f_p * state.c + i_p * jnp.tanh(gz)
+    n = f_p * state.n + i_p
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return h, SLSTMState(c, n, m_new, h)
+
+
+def slstm_scan(p, x_gates, state=None):
+    """x_gates: dict of (B, H, S, dh). Returns (h (B,H,S,dh), final state)."""
+    b, hn, s, dh = x_gates["i"].shape
+    st = state or slstm_state_init(b, hn, dh)
+
+    def step(st, inp):
+        h, st = slstm_step(p, inp, st)
+        return st, h
+
+    xs = {k: v.transpose(2, 0, 1, 3) for k, v in x_gates.items()}
+    st, hs = jax.lax.scan(step, st, xs)
+    return hs.transpose(1, 2, 0, 3).astype(x_gates["i"].dtype), st

@@ -1,0 +1,104 @@
+"""AdamW with mixed-precision master weights, global-norm clipping and
+schedules. Built from scratch (no optax): the optimizer state layout
+(fp32 master + m + v, all shardable with an extra ZeRO axis) is part of the
+distribution design, so we own it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # decay only matrices (dims >= 2), standard practice
+    decay_vectors: bool = False
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    master: dict  # fp32 master copy of params
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac, as fp32 scalar."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: fp32 params would otherwise alias their master buffer,
+    # breaking donation (same buffer donated twice).
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def abstract_state(params) -> OptState:
+    f32 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return OptState(m=f32, v=f32, master=f32)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: OptState, step, param_dtype):
+    """One AdamW step. grads in any dtype; math in fp32 on master weights.
+
+    Returns (new_params (cast to param_dtype), new_state, metrics).
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(cfg.beta1, t)
+    bc2 = 1.0 - jnp.power(cfg.beta2, t)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0:
+            decay = cfg.weight_decay if (w.ndim >= 2 or cfg.decay_vectors) else 0.0
+            step_ = step_ + decay * w
+        w = w - lr * step_
+        return m, v, w
+
+    zipped = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    is_triplet = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x[0], tuple)
+    m = jax.tree.map(lambda x: x[0], zipped, is_leaf=is_triplet)
+    v = jax.tree.map(lambda x: x[1], zipped, is_leaf=is_triplet)
+    master = jax.tree.map(lambda x: x[2], zipped, is_leaf=is_triplet)
+    # Cast back to each param's storage dtype (norm scales stay fp32).
+    new_params = jax.tree.map(lambda w, g: w.astype(g.dtype), master, grads)
+    del param_dtype
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(m, v, master), metrics

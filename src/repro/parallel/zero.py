@@ -1,0 +1,69 @@
+"""ZeRO-1: shard optimizer state (Adam m/v + fp32 master) over the DP axes.
+
+With pure DP, optimizer state is replicated — 12 fp32 bytes/param/device. At
+llama3-8b on a 512-chip mesh that replication wastes ~96 GB/device-group;
+ZeRO-1 cuts it by the DP degree. We insert the DP mesh axes into the first
+dimension of each leaf that (a) is not already sharded there and (b) is
+divisible — falling back to later dims, else leaving the leaf alone (tiny
+scales/biases don't matter).
+
+The parameter update then runs on DP-sharded optimizer state; XLA inserts
+reduce-scatter for the gradient → sharded-update → all-gather of new params,
+i.e. the canonical ZeRO-1 schedule emerges from sharding propagation.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.optim.adamw import OptState
+from repro.parallel.sharding import MeshEnv, resolve_spec
+
+
+def _dp_axes(env: MeshEnv) -> tuple:
+    axes = env.rules.get("batch") or ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in env.mesh.shape)
+
+
+def zero1_spec(param_spec: P, shape, env: MeshEnv) -> P:
+    """Insert the DP axes into the first divisible, DP-free dimension."""
+    dp = _dp_axes(env)
+    if not dp:
+        return param_spec
+    dp_size = 1
+    for a in dp:
+        dp_size *= env.axis_size(a)
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if any(a in used for a in dp):
+        return param_spec  # already DP-sharded somehow
+    for i, e in enumerate(entries):
+        cur = tuple(a for a in (e if isinstance(e, tuple) else (e,)) if a)
+        cur_size = 1
+        for a in cur:
+            cur_size *= env.axis_size(a)
+        if shape[i] % (cur_size * dp_size) == 0:
+            entries[i] = cur + dp if cur else (dp if len(dp) > 1 else dp[0])
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return param_spec
+
+
+def opt_state_shardings(axes_tree, abstract_params, env: MeshEnv) -> OptState:
+    """NamedShardings for OptState(m, v, master) with the ZeRO-1 axis."""
+    def one(axes, arr):
+        base = resolve_spec(tuple(axes), arr.shape, env)
+        spec = zero1_spec(base, arr.shape, env)
+        return NamedSharding(env.mesh, spec)
+
+    tree = jax.tree.map(one, axes_tree, abstract_params,
+                        is_leaf=lambda l: isinstance(l, tuple))
+    return OptState(m=tree, v=tree, master=tree)

@@ -1,0 +1,15 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_map_with_path,
+    path_str,
+)
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_paths",
+    "tree_map_with_path",
+    "path_str",
+]

@@ -1,0 +1,58 @@
+"""Small pytree utilities shared across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax key-path as a '/'-joined string, e.g. 'blocks/attn/wq'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    """Flatten a pytree into [(path_string, leaf), ...]."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(path_str(path), leaf) for path, leaf in leaves]
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree):
+    """tree_map where fn receives (path_string, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(path_str(path), leaf), tree
+    )
+
+
+def _leaf_count(x) -> int:
+    if hasattr(x, "shape"):
+        return int(np.prod(x.shape)) if x.shape else 1
+    return 1
+
+
+def _leaf_bytes(x) -> int:
+    if hasattr(x, "dtype") and hasattr(x, "shape"):
+        return _leaf_count(x) * np.dtype(x.dtype).itemsize
+    return 0
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all array leaves."""
+    return sum(_leaf_count(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all array leaves (works on ShapeDtypeStructs too)."""
+    return sum(_leaf_bytes(l) for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device
+count (1 CPU device); only dryrun.py forces 512 host devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with shape/
+dtype sweeps as required — plus the chunked-jnp fallback paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, rglru_scan
+from repro.nn.attention import flash_attention as chunked_attn
+from repro.nn.attention import naive_attention
+
+
+KEY = jax.random.key(42)
+
+
+def _qkv(b, h, kv, s, d, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, kv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, kv, s, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # (B, H, KV, S, D, causal, window)
+    (2, 4, 2, 256, 64, True, 0),     # GQA causal
+    (1, 8, 8, 128, 128, True, 0),    # MHA, mxu-wide head
+    (2, 4, 1, 256, 64, True, 64),    # MQA + local window
+    (1, 2, 2, 128, 64, False, 0),    # bidirectional (encoder)
+    (1, 15, 5, 128, 64, True, 0),    # smollm-style 15H/5KV grouping
+    (2, 2, 2, 512, 32, True, 128),   # long window
+]
+
+
+@pytest.mark.parametrize("b,h,kv,s,d,causal,window", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(b, h, kv, s, d, causal, window, dtype):
+    q, k, v = _qkv(b, h, kv, s, d, dtype)
+    out_ref = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          force="interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(out_ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d,causal,window", FLASH_CASES[:4])
+def test_chunked_jnp_matches_naive(b, h, kv, s, d, causal, window):
+    """The dry-run's chunked attention == O(S^2) oracle."""
+    q, k, v = _qkv(b, h, kv, s, d, jnp.float32)
+    out_naive = naive_attention(q, k, v, causal=causal, window=window)
+    out_chunk = chunked_attn(q, k, v, causal=causal, window=window, chunk=64)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_naive),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_decode_suffix():
+    """q as a suffix of the kv sequence (speculative/chunked prefill)."""
+    b, h, s, d = 1, 4, 256, 64
+    q, k, v = _qkv(b, h, h, s, d, jnp.float32)
+    q_tail = q[:, :, -64:]
+    out_full = ref.flash_attention_ref(q, k, v, causal=True)[:, :, -64:]
+    out_off = flash_attention(q_tail, k, v, causal=True, q_offset=s - 64,
+                              force="interpret")
+    np.testing.assert_allclose(np.asarray(out_off), np.asarray(out_full),
+                               atol=2e-5, rtol=2e-5)
+
+
+RGLRU_CASES = [
+    (8, 256, 128),
+    (2, 512, 256),
+    (1, 128, 512),
+    (16, 64, 128),
+]
+
+
+@pytest.mark.parametrize("b,s,w", RGLRU_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rglru_pallas_matches_ref(b, s, w, dtype, with_h0):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = (jax.nn.sigmoid(jax.random.normal(k1, (b, s, w))) * 0.2 + 0.79
+         ).astype(dtype)
+    bb = (jax.random.normal(k2, (b, s, w)) * 0.1).astype(dtype)
+    h0 = jax.random.normal(k3, (b, w)) if with_h0 else None
+    h_ref, hl_ref = ref.rglru_scan_ref(a, bb, h0)
+    h, hl = rglru_scan(a, bb, h0, force="interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(h_ref, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_ref), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,w", RGLRU_CASES[:2])
+def test_rglru_associative_scan_matches_ref(b, s, w):
+    """The dry-run's associative-scan path == sequential oracle."""
+    k1, k2 = jax.random.split(KEY)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, w))) * 0.2 + 0.79
+    bb = jax.random.normal(k2, (b, s, w)) * 0.1
+    h_ref, hl_ref = ref.rglru_scan_ref(a, bb)
+    h, hl = rglru_scan(a, bb, force="jnp")
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_mlstm_chunkwise_matches_stepwise():
+    """Chunkwise-parallel mLSTM == step-by-step recurrence."""
+    from repro.nn.recurrent import mlstm_chunkwise, mlstm_ref
+    b, h, s, d = 2, 3, 128, 32
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    ig = jax.random.normal(ks[3], (b, h, s)) * 0.5
+    fg = jax.random.normal(ks[4], (b, h, s)) * 0.5 + 2.0
+    out_c, st_c = mlstm_chunkwise(q, k, v, ig, fg, chunk=32)
+    out_r, st_r = mlstm_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_c.c), np.asarray(st_r.c),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_rglru_block_decode_matches_prefill():
+    """One-step decode == last position of a prefill (state handoff)."""
+    from repro.nn.recurrent import rglru, rglru_step, def_rglru
+    from repro.nn import params as prm
+    w, nh, b, s = 64, 2, 2, 16
+    p = prm.materialize(jax.random.key(1), def_rglru(w, nh), jnp.float32)
+    x = jax.random.normal(KEY, (b, s, w))
+    full, h_last = rglru(p, x, nh)
+    # replay: prefill first s-1 then decode the final token
+    part, h_prev = rglru(p, x[:, :-1], nh)
+    y_dec, h_dec = rglru_step(p, x[:, -1], h_prev, nh)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(full[:, -1]),
+                               atol=1e-5, rtol=1e-5)

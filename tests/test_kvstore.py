@@ -1,0 +1,87 @@
+"""EtcdLike coordination-store semantics: leases, CAS, watches."""
+
+import pytest
+
+from repro.core.kvstore import EtcdLike
+from repro.core.types import EventLog, SimClock
+
+
+@pytest.fixture
+def etcd():
+    clock = SimClock()
+    return clock, EtcdLike(clock, EventLog(clock))
+
+
+def test_put_get_delete(etcd):
+    _, kv = etcd
+    kv.put("/a/b", {"x": 1})
+    assert kv.get("/a/b") == {"x": 1}
+    kv.delete("/a/b")
+    assert kv.get("/a/b") is None
+
+
+def test_cas_semantics(etcd):
+    _, kv = etcd
+    assert kv.cas("/k", None, "v1")          # create iff absent
+    assert not kv.cas("/k", None, "v2")      # already exists
+    rev = kv.revision("/k")
+    assert kv.cas("/k", rev, "v2")
+    assert not kv.cas("/k", rev, "v3")       # stale revision
+    assert kv.get("/k") == "v2"
+
+
+def test_lease_expiry(etcd):
+    clock, kv = etcd
+    lease = kv.grant_lease(ttl=10.0)
+    kv.put("/hb/node1", "Ready", lease_id=lease)
+    clock.advance(5)
+    kv.sweep_leases()
+    assert kv.get("/hb/node1") == "Ready"
+    clock.advance(6)
+    kv.sweep_leases()
+    assert kv.get("/hb/node1") is None  # lease lapsed → key gone
+
+
+def test_keepalive_extends_lease(etcd):
+    clock, kv = etcd
+    lease = kv.grant_lease(ttl=10.0)
+    kv.put("/hb/n", "Ready", lease_id=lease)
+    for _ in range(5):
+        clock.advance(8)
+        assert kv.keepalive(lease)
+        kv.sweep_leases()
+        assert kv.get("/hb/n") == "Ready"
+
+
+def test_prefix_watch_fires_on_put_delete_expire(etcd):
+    clock, kv = etcd
+    seen = []
+    kv.watch("/jobs/j1/", lambda k, op, v: seen.append((k, op)))
+    kv.put("/jobs/j1/status", "RUNNING")
+    kv.put("/jobs/j2/status", "RUNNING")  # different prefix: not seen
+    kv.delete("/jobs/j1/status")
+    lease = kv.grant_lease(1.0)
+    kv.put("/jobs/j1/lease", 1, lease_id=lease)
+    clock.advance(2)
+    kv.sweep_leases()
+    ops = [op for _, op in seen]
+    assert ops == ["put", "delete", "put", "expired"]
+
+
+def test_prefix_query_and_delete(etcd):
+    _, kv = etcd
+    for i in range(3):
+        kv.put(f"/jobs/j/learners/{i}", i)
+    assert len(kv.prefix("/jobs/j/")) == 3
+    kv.delete_prefix("/jobs/j/")
+    assert kv.prefix("/jobs/j/") == {}
+
+
+def test_crash_makes_unavailable_and_restart_preserves_data(etcd):
+    _, kv = etcd
+    kv.put("/x", 1)
+    kv.crash()
+    with pytest.raises(ConnectionError):
+        kv.get("/x")
+    kv.restart()
+    assert kv.get("/x") == 1  # replicated etcd survives member crash

@@ -1,0 +1,215 @@
+"""End-to-end platform behaviour (FfDL §3): lifecycle, atomicity, status
+pipeline, HALT/RESUME, crash recovery of every component, admission."""
+
+import pytest
+
+from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
+
+
+def sim_job(name="j", **kw):
+    kw.setdefault("n_learners", 2)
+    kw.setdefault("chips_per_learner", 2)
+    kw.setdefault("sim_duration", 120)
+    return JobManifest(name=name, **kw)
+
+
+def test_job_lifecycle_status_sequence():
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    j = p.submit(sim_job())
+    assert p.run_until_terminal([j], max_sim_s=2000)
+    hist = [s[1] for s in p.status_history(j)]
+    # DL-specific status pipeline (paper C7), in order
+    for a, b in zip(["PENDING", "DEPLOYING", "DOWNLOADING", "PROCESSING",
+                     "STORING", "COMPLETED"],
+                    [hist.index(s) for s in
+                     ["PENDING", "DEPLOYING", "DOWNLOADING", "PROCESSING",
+                      "STORING", "COMPLETED"]]):
+        pass
+    order = [hist.index(s) for s in ["PENDING", "DOWNLOADING", "PROCESSING",
+                                     "STORING", "COMPLETED"]]
+    assert order == sorted(order)
+    assert p.status(j) == JobStatus.COMPLETED
+    # all chips returned
+    assert p.cluster.used_chips == 0
+
+
+def test_durable_before_ack_survives_total_core_crash():
+    """§3.2: a submitted job survives API+LCM crash before deployment."""
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(sim_job(n_learners=1, chips_per_learner=1))
+    # crash everything immediately
+    p.api_crash()
+    p.lcm.crash()
+    for _ in range(5):
+        p.tick()
+    # restart: LCM reconciles from the metastore; job completes
+    p.api_restart()
+    p.lcm.restart()
+    assert p.run_until_terminal([j], max_sim_s=2000)
+    assert p.status(j) == JobStatus.COMPLETED
+
+
+def test_metastore_journal_recovery(tmp_path):
+    """Catastrophic metastore loss → full rebuild from the WAL."""
+    from repro.core.metastore import MetaStore
+    from repro.core.types import SimClock
+
+    path = str(tmp_path / "wal.jsonl")
+    clock = SimClock()
+    m = MetaStore(clock, journal_path=path)
+    m.insert_job("job-1", sim_job())
+    m.update_status("job-1", JobStatus.PROCESSING, "running")
+    m2 = MetaStore.recover(SimClock(), path)
+    rec = m2.get("job-1")
+    assert rec is not None
+    assert rec.status == JobStatus.PROCESSING
+    assert rec.manifest.n_learners == 2
+
+
+def test_guardian_crash_mid_deploy_rolls_back_atomically():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(sim_job())
+    for _ in range(20):
+        p.tick()
+        if j in p.guardians and p.guardians[j].stage in (
+                "CREATE_PODS", "WAIT_RUNNING"):
+            break
+    g = p.guardians[j]
+    g.crash()
+    p.clock.call_later(2.0, g.restart)
+    assert p.run_until_terminal([j], max_sim_s=3000)
+    assert p.status(j) == JobStatus.COMPLETED
+    assert p.cluster.used_chips == 0  # no zombies (C2 atomicity)
+    assert p.events.count("rollback") >= 1
+
+
+def test_learner_crash_restarts_and_resumes():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=300))
+    for _ in range(100):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    p.run_for(100)  # accumulate progress past a checkpoint boundary
+    g = p.guardians[j]
+    g.runtimes[0].kill()
+    p.cluster.fail_pod(g.pods[0].name)
+    assert p.run_until_terminal([j], max_sim_s=5000)
+    assert p.status(j) == JobStatus.COMPLETED
+    hist = [s[1] for s in p.status_history(j)]
+    assert "RESUMED" in hist
+    assert p.meta.get(j).restarts == 1
+
+
+def test_node_failure_evicts_and_recovers():
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=600))
+    for _ in range(100):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    host = p.guardians[j].pods[0].host
+    p.cluster.fail_host(host)
+    assert p.run_until_terminal([j], max_sim_s=8000)
+    assert p.status(j) == JobStatus.COMPLETED
+    assert p.events.count("pod_evicted") >= 1
+    assert p.events.count("node_notready") == 1
+    # the failed host's pods moved elsewhere
+    assert all(pod.host != host for pod in p.guardians.get(j, g_dummy()).pods) \
+        if j in p.guardians else True
+
+
+def g_dummy():
+    class D:
+        pods = []
+    return D()
+
+
+def test_halt_resume_cycle():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=400))
+    for _ in range(100):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    p.run_for(150)
+    p.halt(j)
+    p.run_for(30)
+    assert p.status(j) == JobStatus.HALTED
+    assert p.cluster.used_chips == 0  # chips freed while halted
+    p.resume(j)
+    assert p.run_until_terminal([j], max_sim_s=5000)
+    assert p.status(j) == JobStatus.COMPLETED
+
+
+def test_admission_quota_rejection():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)  # 8 chips
+    p.admission.register_tenant("small", quota_chips=2)
+    p.submit(sim_job(tenant="small", n_learners=1, chips_per_learner=2))
+    p.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=2))
+    # third submission: over quota AND cluster busy enough → rejected later;
+    # at least over-quota accounting must kick in
+    p.run_for(120)  # both running: tenant holds 6 > 2 quota (opportunistic)
+    with pytest.raises(PermissionError):
+        # demand exceeding idle capacity while over quota
+        p.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=4))
+
+
+def test_oversized_job_rejected():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    with pytest.raises(ValueError):
+        p.submit(sim_job(n_learners=4, chips_per_learner=4))  # 16 > 8
+
+
+def test_logs_collected_and_searchable():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(JobManifest(name="t", arch="smollm-360m", n_learners=1,
+                             chips_per_learner=1, checkpoint_interval=10,
+                             train={"steps": 30, "batch": 2, "seq": 32}))
+    assert p.run_until_terminal([j], max_sim_s=4000)
+    # learner wrote log lines; collector indexed them
+    assert p.status(j) == JobStatus.COMPLETED
+
+
+def test_concurrent_tenants_isolated_results():
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    a = p.submit(sim_job(name="a", tenant="A"))
+    b = p.submit(sim_job(name="b", tenant="B"))
+    assert p.run_until_terminal([a, b], max_sim_s=4000)
+    assert [r["job_id"] for r in p.meta.history("A")] == [a]
+    assert [r["job_id"] for r in p.meta.history("B")] == [b]
+
+
+def test_straggler_mitigation_restarts_stalled_learner():
+    """Beyond-paper: a silently-stalled learner (alive pod, zero progress)
+    is detected by the Guardian's progress watchdog and restarted; the job
+    completes. Without mitigation it would hang forever."""
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=240, straggler_timeout_s=60,
+                         max_restarts=5))
+    for _ in range(200):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    g = p.guardians[j]
+    g.runtimes[1].stall()  # learner 1 silently stops making progress
+    assert p.run_until_terminal([j], max_sim_s=8000)
+    assert p.status(j) == JobStatus.COMPLETED
+    assert p.events.count("straggler_restart") >= 1
+
+
+def test_no_straggler_false_positive_on_global_slowdown():
+    """A global slowdown (everyone equally slow) must NOT trigger
+    straggler restarts — only relative stalls do."""
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=120, straggler_timeout_s=60))
+    for _ in range(200):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    g = p.guardians[j]
+    for rt in g.runtimes.values():
+        rt.slowdown = 10.0  # uniform contention, still progressing
+    assert p.run_until_terminal([j], max_sim_s=10000)
+    assert p.status(j) == JobStatus.COMPLETED
+    assert p.events.count("straggler_restart") == 0

@@ -1,0 +1,180 @@
+"""Scheduler invariants: gang atomicity, PACK fragmentation, BSA feasibility
+— unit + hypothesis property tests (FfDL §3.4-3.6)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsa import bsa_place
+from repro.core.cluster import ClusterModel
+from repro.core.kvstore import EtcdLike
+from repro.core.scheduler import GangRequest, GangScheduler, K8sDefaultScheduler
+from repro.core.types import EventLog, SimClock
+
+
+def make_cluster(n_hosts=4, chips=4):
+    clock = SimClock()
+    events = EventLog(clock)
+    etcd = EtcdLike(clock, events)
+    return clock, events, ClusterModel(n_hosts, chips, clock, etcd, events)
+
+
+# --------------------------------------------------------------------------
+# BSA properties
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_hosts=st.integers(1, 24),
+    chips=st.sampled_from([1, 2, 4, 8]),
+    n_pods=st.integers(1, 12),
+    cpp=st.integers(1, 8),
+    policy=st.sampled_from(["pack", "spread"]),
+    seed=st.integers(0, 5),
+)
+def test_bsa_respects_capacity_and_allornothing(n_hosts, chips, n_pods, cpp,
+                                                policy, seed):
+    _, _, cluster = make_cluster(n_hosts, chips)
+    hosts = cluster.schedulable_hosts()
+    rng = np.random.default_rng(seed)
+    out = bsa_place(hosts, n_pods, cpp, policy=policy, torus=cluster.torus,
+                    rng=rng)
+    feasible = (chips // cpp) * n_hosts >= n_pods if cpp <= chips else False
+    if out is None:
+        # never returns None on a feasible single-gang instance
+        assert not feasible
+        return
+    assert len(out) == n_pods  # all-or-nothing
+    # per-host capacity respected
+    from collections import Counter
+    used = Counter(out)
+    for hid, n in used.items():
+        assert n * cpp <= cluster.hosts[hid].n_chips
+
+
+def test_bsa_pack_beats_spread_on_fragmentation():
+    """The paper's §3.4 example: 4 x (1 learner, 1 chip) jobs on 4 hosts x 4
+    chips. PACK must leave a host with 4 free chips; SPREAD fragments."""
+    _, _, cluster = make_cluster(4, 4)
+    rng = np.random.default_rng(0)
+    # place 4 single-chip gangs sequentially, updating the cluster
+    from repro.core.types import Pod
+    for policy, expect_4chip_host in [("spread", False), ("pack", True)]:
+        _, _, cluster = make_cluster(4, 4)
+        for j in range(4):
+            out = bsa_place(cluster.schedulable_hosts(), 1, 1, policy=policy,
+                            torus=cluster.torus, rng=np.random.default_rng(j))
+            pod = Pod(name=f"p{policy}{j}", job_id=f"j{j}", kind="learner",
+                      chips=1)
+            assert cluster.bind_pod(pod, out[0])
+        frees = sorted(h.free_chips for h in cluster.hosts.values())
+        if expect_4chip_host:
+            # pack: a 4-chip job still fits somewhere
+            assert frees[-1] == 4, frees
+        else:
+            # default spread: all hosts nibbled
+            assert frees[-1] < 4, frees
+
+
+# --------------------------------------------------------------------------
+# Gang scheduler
+# --------------------------------------------------------------------------
+
+def test_gang_all_or_nothing_no_partial_holds():
+    """50 jobs x 2 learners x 2 chips on 15x4 chips: queue forms, but no job
+    ever holds a partial gang (the §3.5 deadlock is impossible)."""
+    clock, events, cluster = make_cluster(15, 4)
+    sched = GangScheduler(cluster, events, placement="pack")
+    placed = []
+    sched.on_placed = placed.append
+    for i in range(50):
+        sched.submit(GangRequest(f"j{i}", 2, 2, submitted_at=0.0))
+    sched.tick()
+    # every placed gang is complete; reserved chips match exactly
+    total_reserved = sum(sched._reserved_chips.values())
+    assert total_reserved == len(placed) * 4
+    assert total_reserved <= cluster.total_chips
+    # 15 hosts x 4 chips = 60 chips → exactly 15 gangs of 4 chips fit
+    assert len(placed) == 15
+    assert sched.queue_depth() == 35
+
+
+def test_gang_largest_first_on_same_instant():
+    clock, events, cluster = make_cluster(4, 4)
+    sched = GangScheduler(cluster, events)
+    placed = []
+    sched.on_placed = lambda r: placed.append(r.job_id)
+    sched.submit(GangRequest("small", 1, 1, submitted_at=5.0))
+    sched.submit(GangRequest("big", 2, 4, submitted_at=5.0))
+    sched.tick()
+    assert placed[0] == "big"  # largest gang first (§3.6)
+
+
+def test_gang_release_frees_reservation():
+    clock, events, cluster = make_cluster(2, 4)
+    sched = GangScheduler(cluster, events)
+    placed = []
+    sched.on_placed = placed.append
+    sched.submit(GangRequest("a", 2, 4, submitted_at=0.0))
+    sched.tick()
+    assert placed
+    sched.submit(GangRequest("b", 2, 4, submitted_at=1.0))
+    sched.tick()
+    assert sched.queue_depth() == 1  # b can't fit while a holds reservation
+    sched.release("a")
+    sched.tick()
+    assert sched.queue_depth() == 0  # b placed after release
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    jobs=st.lists(
+        st.tuples(st.integers(1, 4), st.integers(1, 4)), min_size=1,
+        max_size=20),
+    seed=st.integers(0, 3),
+)
+def test_gang_reservations_never_oversubscribe(jobs, seed):
+    """Property: at any point, reserved+bound chips <= cluster capacity."""
+    clock, events, cluster = make_cluster(6, 4)
+    sched = GangScheduler(cluster, events, seed=seed)
+    for i, (n, c) in enumerate(jobs):
+        if c > 4:
+            continue
+        sched.submit(GangRequest(f"j{i}", n, c, submitted_at=float(i)))
+        sched.tick()
+        reserved = sum(sched._reserved_chips.values())
+        assert cluster.used_chips + reserved <= cluster.total_chips
+
+
+# --------------------------------------------------------------------------
+# K8s-default baseline reproduces the deadlock pathology
+# --------------------------------------------------------------------------
+
+def test_k8s_default_partial_gangs_hold_chips():
+    """Over-subscribed synchronous jobs under pod-at-a-time scheduling leave
+    temporarily deadlocked learners (Fig 4) — the motivation for gang."""
+    deadlocks = 0
+    for seed in range(10):
+        clock, events, cluster = make_cluster(4, 2)  # 8 chips
+        sched = K8sDefaultScheduler(cluster, events, seed=seed)
+        # 4 jobs x 2 learners x 2 chips = 16 chips demand vs 8 supply
+        for i in range(4):
+            sched.submit(GangRequest(f"j{i}", 2, 2, submitted_at=0.0))
+        sched.tick()
+        deadlocks += sched.deadlocked_learners()
+    assert deadlocks > 0  # the pathology exists across seeds
+
+
+def test_gang_scheduler_zero_deadlocks_same_workload():
+    for seed in range(10):
+        clock, events, cluster = make_cluster(4, 2)
+        sched = GangScheduler(cluster, events, seed=seed)
+        placed = []
+        sched.on_placed = placed.append
+        for i in range(4):
+            sched.submit(GangRequest(f"j{i}", 2, 2, submitted_at=0.0))
+        sched.tick()
+        # placed gangs are complete; queued gangs hold nothing
+        reserved = sum(sched._reserved_chips.values())
+        assert reserved == sum(r.total_chips for r in placed)
+        assert len(placed) == 2  # 8 chips / 4 per gang
