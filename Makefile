@@ -1,0 +1,22 @@
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-fast bench-smoke bench examples
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q tests/test_api_gateway.py tests/test_platform.py \
+		tests/test_kvstore.py tests/test_scheduler.py
+
+bench-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py
+	PYTHONPATH=src:. $(PY) benchmarks/recovery.py
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+examples:
+	$(PY) examples/quickstart.py
+	$(PY) examples/multi_tenant.py

@@ -8,6 +8,7 @@
   §5.5       → benchmarks.scale        (680 chips, 70 vs 700 jobs)
   §5.6       → benchmarks.failures     (chaos campaign failure analysis)
   §Roofline  → benchmarks.roofline     (dry-run-derived roofline table)
+  §3.2       → benchmarks.api_tier     (replicated API availability/latency)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
 """
@@ -29,6 +30,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        api_tier,
         failures,
         gang,
         overhead,
@@ -40,6 +42,7 @@ def main() -> None:
     )
 
     all_benches = [
+        ("api_tier_s3_2", api_tier.main),
         ("overhead_table1_2", overhead.main),
         ("recovery_table3", recovery.main),
         ("spread_pack_fig3", spread_pack.main),

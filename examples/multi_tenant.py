@@ -1,9 +1,12 @@
 """Multi-tenant scheduling demo: quotas, opportunistic over-quota admission,
-reclamation preemption, PACK packing (FfDL §3.4-3.6).
+reclamation preemption, PACK packing (FfDL §3.4-3.6) — driven through the
+v1 API tier (§3.2): per-tenant keys, typed envelopes, and cross-tenant
+isolation enforced by the gateway.
 
     PYTHONPATH=src python examples/multi_tenant.py
 """
 
+from repro.api import ApiError, ErrorCode, SubmitRequest
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 
 
@@ -16,15 +19,34 @@ def main():
     p.admission.register_tenant("vision-team", quota_chips=16)
     p.admission.register_tenant("nlp-team", quota_chips=12)
     p.admission.register_tenant("interns", quota_chips=4, tier="free")
+    # each tenant talks to the replicated API tier with its own key
+    vision_key = p.auth.issue_key("vision-team")
+    nlp_key = p.auth.issue_key("nlp-team")
 
     banner("vision-team fills its quota AND borrows idle capacity")
-    v = [p.submit(JobManifest(name=f"vision-{i}", tenant="vision-team",
-                              n_learners=2, chips_per_learner=4,
-                              sim_duration=600))
+    v = [p.api.submit(vision_key, SubmitRequest(
+            manifest=JobManifest(name=f"vision-{i}", tenant="vision-team",
+                                 n_learners=2, chips_per_learner=4,
+                                 sim_duration=600),
+            idempotency_key=f"vision-{i}")).job_id
          for i in range(3)]  # 24 chips > 16 quota: third is opportunistic
     p.run_for(90)
     for j in v:
         print(f"  {j}: {p.status(j).value}")
+
+    banner("tenant isolation: nlp-team cannot touch vision-team's jobs")
+    try:
+        p.api.halt(nlp_key, v[0])
+    except ApiError as e:
+        assert e.code == ErrorCode.FORBIDDEN
+        print(f"  halt({v[0]}) with nlp key -> {e.code.value}")
+    dup = p.api.submit(vision_key, SubmitRequest(
+        manifest=JobManifest(name="vision-0", tenant="vision-team",
+                             n_learners=2, chips_per_learner=4,
+                             sim_duration=600),
+        idempotency_key="vision-0"))
+    print(f"  duplicate submit (same idempotency key) -> {dup.job_id} "
+          f"deduplicated={dup.deduplicated}")
     print(f"  utilization: {p.cluster.utilization():.0%}  "
           f"(over-quota jobs: {[k for k, o in p.admission.over_quota.items() if o]})")
 

@@ -1,0 +1,32 @@
+# The replicated, versioned API tier fronting the platform (FfDL §3.2):
+# typed envelopes + stable error codes, per-tenant auth, idempotent submit,
+# cursor pagination, and round-robin failover across stateless replicas.
+from repro.api.auth import ALL_TENANTS, AuthService, Principal, READ, WRITE
+from repro.api.gateway import ApiGateway
+from repro.api.lb import LoadBalancer
+from repro.api.types import (
+    API_VERSION,
+    ApiError,
+    ErrorCode,
+    JobView,
+    Page,
+    SubmitRequest,
+    SubmitResponse,
+)
+
+__all__ = [
+    "ALL_TENANTS",
+    "API_VERSION",
+    "ApiError",
+    "ApiGateway",
+    "AuthService",
+    "ErrorCode",
+    "JobView",
+    "LoadBalancer",
+    "Page",
+    "Principal",
+    "READ",
+    "SubmitRequest",
+    "SubmitResponse",
+    "WRITE",
+]

@@ -1,0 +1,250 @@
+"""ApiGateway: one stateless API-tier replica (FfDL §3.2).
+
+"The API layer stores all the metadata in MongoDB before acknowledging the
+request" — and the tier itself is a set of replicated, stateless REST
+services: any replica can serve any request, and a crashed replica loses
+nothing because all state lives in the metastore.
+
+Each :class:`ApiGateway` instance is one such replica. It is individually
+crashable (``crash()``/``restart()``); while down, every call raises
+``ApiError(UNAVAILABLE)`` *before any side effect*, so the load balancer
+can transparently retry on a healthy sibling. All replicas implement the
+full v1 surface:
+
+  * ``submit`` — validate → authenticate → admission → **durable before
+    ack** insert. Client-supplied idempotency keys are journaled with the
+    insert, so a duplicate submit (same tenant + key) returns the original
+    job id even after a metastore crash/recover;
+  * ``status``/``status_history``/``list_jobs`` — tenant-scoped reads;
+    listings are cursor-paginated;
+  * ``logs``/``search_logs`` — cursor-paginated reads of the log index;
+  * ``halt``/``resume``/``cancel`` — lifecycle writes, ownership-checked.
+
+A metastore outage surfaces as ``UNAVAILABLE`` too (retryable — though all
+replicas share the store, so the LB will exhaust them and propagate).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import asdict
+from typing import Optional
+
+from repro.api.auth import AuthService, Principal, READ, WRITE
+from repro.api.types import (
+    ApiError,
+    ErrorCode,
+    JobView,
+    Page,
+    SubmitRequest,
+    SubmitResponse,
+    check_version,
+)
+from repro.core.types import JobStatus, gang_chips
+
+DEFAULT_PAGE = 20
+
+
+def _parse_limit(limit):
+    """Page sizes must be positive; 0/negative would corrupt cursors
+    (skipped records, non-advancing pagination loops)."""
+    if limit is not None and (not isinstance(limit, int) or limit < 1):
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"limit must be a positive integer, got {limit!r}")
+    return limit
+
+
+def _parse_cursor(cursor) -> int:
+    """Offset cursors are opaque to clients; reject anything malformed
+    with a stable code instead of leaking a raw ValueError."""
+    if cursor is None:
+        return 0
+    try:
+        n = int(cursor)
+    except (TypeError, ValueError):
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"malformed cursor: {cursor!r}")
+    if n < 0:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"malformed cursor: {cursor!r}")
+    return n
+
+
+@contextmanager
+def _meta_guard():
+    """Translate metastore outages into the stable UNAVAILABLE code."""
+    try:
+        yield
+    except ConnectionError as e:
+        raise ApiError(ErrorCode.UNAVAILABLE, str(e) or "metastore down")
+
+
+class ApiGateway:
+    def __init__(self, platform, auth: AuthService, replica_id: str = "api-0"):
+        self.p = platform
+        self.auth = auth
+        self.replica_id = replica_id
+        self.alive = True
+
+    # -- replica lifecycle (chaos) --------------------------------------
+    def crash(self):
+        self.alive = False
+        self.p.events.emit("api", "replica_crashed", replica=self.replica_id)
+
+    def restart(self):
+        self.alive = True
+        self.p.events.emit("api", "api_restarted", replica=self.replica_id)
+
+    def _require(self, api_key: str, scope: str) -> Principal:
+        # Liveness first: a dead replica fails before touching any state.
+        if not self.alive:
+            raise ApiError(ErrorCode.UNAVAILABLE,
+                           f"replica {self.replica_id} is down",
+                           replica=self.replica_id)
+        return self.auth.require(api_key, scope)
+
+    def _owned_record(self, principal: Principal, job_id: str):
+        with _meta_guard():
+            rec = self.p.meta.get(job_id)
+        if rec is None:
+            raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
+                           job_id=job_id)
+        if not principal.owns(rec.manifest.tenant):
+            raise ApiError(ErrorCode.FORBIDDEN,
+                           f"job {job_id} belongs to another tenant",
+                           job_id=job_id)
+        return rec
+
+    # -- submit ----------------------------------------------------------
+    def submit(self, api_key: str, req: SubmitRequest) -> SubmitResponse:
+        principal = self._require(api_key, WRITE)
+        check_version(req.api_version)
+        m = req.manifest
+        if not principal.owns(m.tenant):
+            raise ApiError(ErrorCode.FORBIDDEN,
+                           f"key for tenant {principal.tenant!r} cannot "
+                           f"submit as {m.tenant!r}")
+        if m.n_learners < 1 or m.chips_per_learner < 0:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT, "invalid manifest")
+        if gang_chips(m) > self.p.cluster.total_chips:
+            raise ApiError(
+                ErrorCode.INVALID_ARGUMENT,
+                f"job needs {gang_chips(m)} chips; cluster has "
+                f"{self.p.cluster.total_chips}")
+        with _meta_guard():
+            if req.idempotency_key is not None:
+                existing = self.p.meta.find_idempotent(m.tenant,
+                                                       req.idempotency_key)
+                if existing is not None:
+                    # same key + different payload is a client bug: surface
+                    # it instead of silently dropping the new job
+                    prior = self.p.meta.get(existing)
+                    if prior is not None and \
+                            asdict(prior.manifest) != asdict(m):
+                        raise ApiError(
+                            ErrorCode.CONFLICT,
+                            f"idempotency key {req.idempotency_key!r} was "
+                            f"already used for {existing} with a different "
+                            f"manifest", job_id=existing)
+                    self.p.events.emit("api", "submit_deduplicated",
+                                       job=existing, tenant=m.tenant,
+                                       replica=self.replica_id)
+                    return SubmitResponse(job_id=existing, deduplicated=True)
+            ok, why = self.p.admission.check(m)
+            if not ok:
+                self.p.events.emit("api", "admission_rejected",
+                                   tenant=m.tenant, reason=why)
+                raise ApiError(ErrorCode.QUOTA_EXCEEDED,
+                               f"admission denied: {why}")
+            job_id = self.p._next_job_id()
+            # durable BEFORE ack (idempotency mapping rides the same WAL op)
+            self.p.meta.insert_job(job_id, m,
+                                   idempotency_key=req.idempotency_key)
+            self.p.admission.mark(job_id, m)
+        self.p.events.emit("api", "job_submitted", job=job_id, tenant=m.tenant,
+                           replica=self.replica_id)
+        return SubmitResponse(job_id=job_id)
+
+    # -- reads -----------------------------------------------------------
+    def status(self, api_key: str, job_id: str) -> JobView:
+        principal = self._require(api_key, READ)
+        return JobView.of(self._owned_record(principal, job_id))
+
+    def status_history(self, api_key: str, job_id: str) -> list:
+        principal = self._require(api_key, READ)
+        return list(self._owned_record(principal, job_id).status_history)
+
+    def list_jobs(self, api_key: str, tenant: Optional[str] = None,
+                  status: Optional[JobStatus] = None,
+                  cursor: Optional[str] = None,
+                  limit: int = DEFAULT_PAGE) -> "Page[JobView]":
+        principal = self._require(api_key, READ)
+        if tenant is None:
+            tenant = None if principal.is_admin else principal.tenant
+        elif not principal.owns(tenant):
+            raise ApiError(ErrorCode.FORBIDDEN,
+                           f"cannot list jobs of tenant {tenant!r}")
+        with _meta_guard():
+            recs, next_cursor = self.p.meta.jobs_page(
+                tenant=tenant, status=status, cursor=cursor,
+                limit=_parse_limit(limit))
+        return Page(items=[JobView.of(r) for r in recs],
+                    next_cursor=next_cursor)
+
+    def logs(self, api_key: str, job_id: str, cursor: Optional[str] = None,
+             limit: Optional[int] = None) -> "Page[str]":
+        principal = self._require(api_key, READ)
+        self._owned_record(principal, job_id)  # existence + ownership
+        lines, next_cursor = self.p.log_index.stream_page(
+            job_id, cursor=_parse_cursor(cursor), limit=_parse_limit(limit))
+        return Page(items=lines,
+                    next_cursor=None if next_cursor is None
+                    else str(next_cursor))
+
+    def search_logs(self, api_key: str, query: str,
+                    job_id: Optional[str] = None,
+                    cursor: Optional[str] = None,
+                    limit: Optional[int] = None) -> "Page":
+        principal = self._require(api_key, READ)
+        if job_id is not None:
+            self._owned_record(principal, job_id)
+            allow = None
+        elif principal.is_admin:
+            allow = None
+        else:
+            tenant_of = {}
+
+            def allow(jid, _memo=tenant_of):
+                if jid not in _memo:
+                    with _meta_guard():
+                        rec = self.p.meta.get(jid)
+                    _memo[jid] = rec.manifest.tenant if rec else None
+                return _memo[jid] == principal.tenant
+        recs, next_cursor = self.p.log_index.search_page(
+            query, job_id=job_id, cursor=_parse_cursor(cursor),
+            limit=_parse_limit(limit), allow=allow)
+        return Page(items=recs,
+                    next_cursor=None if next_cursor is None
+                    else str(next_cursor))
+
+    # -- lifecycle writes -------------------------------------------------
+    def halt(self, api_key: str, job_id: str, requeue: bool = False):
+        principal = self._require(api_key, WRITE)
+        self._owned_record(principal, job_id)
+        with _meta_guard():
+            self.p._halt_internal(job_id, requeue=requeue)
+
+    def resume(self, api_key: str, job_id: str):
+        principal = self._require(api_key, WRITE)
+        rec = self._owned_record(principal, job_id)
+        if rec.status != JobStatus.HALTED:
+            raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                           f"{job_id} is not HALTED")
+        with _meta_guard():
+            self.p._resume_internal(job_id)
+
+    def cancel(self, api_key: str, job_id: str):
+        principal = self._require(api_key, WRITE)
+        self._owned_record(principal, job_id)
+        with _meta_guard():
+            self.p._cancel_internal(job_id)

@@ -1,0 +1,86 @@
+"""Round-robin load balancer over stateless API replicas (FfDL §3.2).
+
+The paper's recovery claim for the API tier: replicas are stateless, so a
+crashed one is masked by routing to a healthy sibling — clients observe
+zero failed calls as long as one replica is up. The Kubernetes Service in
+front of FfDL's REST pods does exactly this; we reproduce it as a
+client-side balancer so ``benchmarks/api_tier.py`` can measure it.
+
+Routing: pure round-robin across replicas. A call that fails with a
+*retryable* ``ApiError`` (``UNAVAILABLE`` — raised by a dead replica before
+any side effect, so re-issuing is safe; ``submit`` dedup additionally rides
+on idempotency keys) fails over to the next replica, trying each at most
+once. Non-retryable errors (auth, validation, quota, not-found) propagate
+immediately — they would fail identically everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.api.gateway import ApiGateway
+from repro.api.types import ApiError, ErrorCode
+
+
+class LoadBalancer:
+    def __init__(self, replicas: list, events=None):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas: list[ApiGateway] = list(replicas)
+        self.events = events
+        self._rr = 0
+        self.stats = {"calls": 0, "failovers": 0, "exhausted": 0}
+
+    @property
+    def healthy_replicas(self) -> list:
+        return [r for r in self.replicas if r.alive]
+
+    def _call(self, method: str, *args, **kwargs):
+        self.stats["calls"] += 1
+        n = len(self.replicas)
+        last: Optional[ApiError] = None
+        for _ in range(n):
+            replica = self.replicas[self._rr % n]
+            self._rr += 1
+            try:
+                return getattr(replica, method)(*args, **kwargs)
+            except ApiError as e:
+                if not e.retryable:
+                    raise
+                last = e
+                self.stats["failovers"] += 1
+                if self.events is not None:
+                    self.events.emit("api", "lb_failover",
+                                     replica=replica.replica_id,
+                                     method=method)
+        self.stats["exhausted"] += 1
+        raise last if last is not None else ApiError(
+            ErrorCode.UNAVAILABLE, "no replicas configured")
+
+    # -- full v1 surface, delegated --------------------------------------
+    def submit(self, api_key, req):
+        return self._call("submit", api_key, req)
+
+    def status(self, api_key, job_id):
+        return self._call("status", api_key, job_id)
+
+    def status_history(self, api_key, job_id):
+        return self._call("status_history", api_key, job_id)
+
+    def list_jobs(self, api_key, **kwargs):
+        return self._call("list_jobs", api_key, **kwargs)
+
+    def logs(self, api_key, job_id, **kwargs):
+        return self._call("logs", api_key, job_id, **kwargs)
+
+    def search_logs(self, api_key, query, **kwargs):
+        return self._call("search_logs", api_key, query, **kwargs)
+
+    def halt(self, api_key, job_id, requeue: bool = False):
+        return self._call("halt", api_key, job_id, requeue=requeue)
+
+    def resume(self, api_key, job_id):
+        return self._call("resume", api_key, job_id)
+
+    def cancel(self, api_key, job_id):
+        return self._call("cancel", api_key, job_id)

@@ -1,0 +1,147 @@
+"""v1 API contract: versioned request/response envelopes + structured errors.
+
+FfDL's API tier (§3.2) is the platform's only public surface: every request
+is validated, authenticated per tenant, and answered with a typed response.
+This module is the wire contract for our reproduction of that tier:
+
+  * every request/response envelope carries ``api_version`` (currently
+    ``"v1"``); a gateway rejects versions it does not speak with a stable
+    ``UNSUPPORTED_VERSION`` error instead of silently misparsing;
+  * errors are ``ApiError`` with a stable :class:`ErrorCode` — clients (and
+    the load balancer) branch on ``err.code``, never on exception class or
+    message text;
+  * list-shaped responses are ``Page`` envelopes with an opaque
+    ``next_cursor`` — cursors stay stable under concurrent submits because
+    they key on monotonically increasing ids/offsets, not list positions.
+
+``ApiError.to_legacy()`` maps codes back onto the raw Python exceptions the
+pre-gateway facade raised (``ValueError``/``KeyError``/``PermissionError``/
+``ConnectionError``) so existing callers of ``FfDLPlatform`` keep working
+during the deprecation window.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Generic, List, Optional, TypeVar
+
+from repro.core.types import JobManifest, JobRecord
+
+API_VERSION = "v1"
+SUPPORTED_VERSIONS = ("v1",)
+
+T = TypeVar("T")
+
+
+class ErrorCode(str, Enum):
+    UNAUTHENTICATED = "UNAUTHENTICATED"        # missing/unknown/revoked key
+    FORBIDDEN = "FORBIDDEN"                    # authenticated, wrong tenant/scope
+    NOT_FOUND = "NOT_FOUND"                    # unknown job id
+    INVALID_ARGUMENT = "INVALID_ARGUMENT"      # malformed manifest/cursor
+    QUOTA_EXCEEDED = "QUOTA_EXCEEDED"          # admission control rejection
+    FAILED_PRECONDITION = "FAILED_PRECONDITION"  # e.g. resume on non-HALTED job
+    CONFLICT = "CONFLICT"                      # idempotency key reused with a
+    #                                            different payload
+    UNAVAILABLE = "UNAVAILABLE"                # replica/metastore down; retryable
+    UNSUPPORTED_VERSION = "UNSUPPORTED_VERSION"
+
+
+# Codes the load balancer may transparently retry on another replica.
+RETRYABLE = {ErrorCode.UNAVAILABLE}
+
+_LEGACY = {
+    ErrorCode.UNAUTHENTICATED: PermissionError,
+    ErrorCode.FORBIDDEN: PermissionError,
+    ErrorCode.NOT_FOUND: KeyError,
+    ErrorCode.INVALID_ARGUMENT: ValueError,
+    ErrorCode.QUOTA_EXCEEDED: PermissionError,
+    ErrorCode.FAILED_PRECONDITION: ValueError,
+    ErrorCode.CONFLICT: ValueError,
+    ErrorCode.UNAVAILABLE: ConnectionError,
+    ErrorCode.UNSUPPORTED_VERSION: ValueError,
+}
+
+
+class ApiError(Exception):
+    """Structured API failure with a stable, client-branchable code."""
+
+    def __init__(self, code: ErrorCode, message: str = "", **details):
+        super().__init__(f"[{code.value}] {message}")
+        self.code = code
+        self.message = message
+        self.details = details
+
+    @property
+    def retryable(self) -> bool:
+        return self.code in RETRYABLE
+
+    def to_legacy(self) -> Exception:
+        """Equivalent raw exception of the pre-gateway facade."""
+        exc = _LEGACY[self.code](self.message)
+        exc.__cause__ = self
+        return exc
+
+
+# --------------------------------------------------------------------------
+# Envelopes
+# --------------------------------------------------------------------------
+
+@dataclass
+class SubmitRequest:
+    manifest: JobManifest
+    # Client-supplied dedup token: two submits with the same (tenant, key)
+    # return the same job id, even across a metastore crash/recover — the
+    # mapping is journaled in the WAL before the first ack.
+    idempotency_key: Optional[str] = None
+    api_version: str = API_VERSION
+
+
+@dataclass
+class SubmitResponse:
+    job_id: str
+    deduplicated: bool = False   # True when an idempotency key was replayed
+    api_version: str = API_VERSION
+
+
+@dataclass
+class JobView:
+    """Tenant-visible projection of a JobRecord (no placement internals)."""
+
+    job_id: str
+    name: str
+    tenant: str
+    status: str
+    submitted_at: float
+    finished_at: Optional[float] = None
+    progress_step: int = 0
+    message: str = ""
+    api_version: str = API_VERSION
+
+    @classmethod
+    def of(cls, rec: JobRecord) -> "JobView":
+        return cls(job_id=rec.job_id, name=rec.manifest.name,
+                   tenant=rec.manifest.tenant, status=rec.status.value,
+                   submitted_at=rec.submitted_at, finished_at=rec.finished_at,
+                   progress_step=rec.progress_step, message=rec.message)
+
+
+@dataclass
+class Page(Generic[T]):
+    """One page of a cursor-paginated listing.
+
+    ``next_cursor`` is opaque to clients: pass it back verbatim to fetch the
+    next page; ``None`` means exhausted. Cursors remain valid under
+    concurrent submits/appends (new items only ever land after them).
+    """
+
+    items: List[T] = field(default_factory=list)
+    next_cursor: Optional[str] = None
+    api_version: str = API_VERSION
+
+
+def check_version(api_version: str):
+    if api_version not in SUPPORTED_VERSIONS:
+        raise ApiError(ErrorCode.UNSUPPORTED_VERSION,
+                       f"api_version {api_version!r} not in "
+                       f"{SUPPORTED_VERSIONS}")

@@ -27,7 +27,39 @@ from typing import Any, Optional
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:
+    import zstandard
+except ImportError:  # stdlib zlib fallback keeps checkpoints working
+    zstandard = None
+
+# One-byte codec tag so blobs round-trip across environments with and
+# without zstandard installed (a zstd blob read where only zlib exists
+# fails with a clear CheckpointError, not a raw codec error).
+_TAG_ZLIB = b"\x01"
+_TAG_ZSTD = b"\x02"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"  # legacy untagged frames
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return _TAG_ZSTD + zstandard.ZstdCompressor(level=1).compress(payload)
+    return _TAG_ZLIB + zlib.compress(payload, 1)
+
+
+def _decompress(blob: bytes) -> bytes:
+    tag = blob[:1]
+    if tag == _TAG_ZSTD or blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise CheckpointError(
+                "checkpoint blob is zstd-compressed but the zstandard "
+                "module is not installed (see requirements-dev.txt)")
+        body = blob[1:] if tag == _TAG_ZSTD else blob
+        return zstandard.ZstdDecompressor().decompress(body)
+    body = blob[1:] if tag == _TAG_ZLIB else blob
+    return zlib.decompress(body)
 
 from repro.utils.trees import tree_flatten_with_paths
 
@@ -48,11 +80,11 @@ def _encode_leaf(arr) -> bytes:
         "shape": list(np_arr.shape),
         "data": np_arr.tobytes(),
     })
-    return zstandard.ZstdCompressor(level=1).compress(payload)
+    return _compress(payload)
 
 
 def _decode_leaf(blob: bytes):
-    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob))
+    payload = msgpack.unpackb(_decompress(blob))
     return np.frombuffer(payload["data"],
                          dtype=np.dtype(payload["dtype"])).reshape(payload["shape"])
 

@@ -1,8 +1,10 @@
 # The paper's primary contribution: the FfDL multi-tenant platform —
 # scheduler (gang/BSA/PACK), lifecycle (LCM/Guardian), coordination
 # (etcd-like), metadata (Mongo-like), helpers, admission, chaos.
+# ``FfDLPlatform`` is exported lazily (PEP 562): the platform pulls in the
+# API tier (repro.api), whose modules import repro.core.types — importing
+# it eagerly here would close that loop into a cycle.
 from repro.core.chaos import ChaosConfig, ChaosMonkey
-from repro.core.platform import FfDLPlatform
 from repro.core.types import (
     EventLog,
     JobManifest,
@@ -27,3 +29,10 @@ __all__ = [
     "SimClock",
     "WallClock",
 ]
+
+
+def __getattr__(name):
+    if name == "FfDLPlatform":
+        from repro.core.platform import FfDLPlatform
+        return FfDLPlatform
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

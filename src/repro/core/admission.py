@@ -124,5 +124,6 @@ class AdmissionController:
                                  reason="quota_reclaim" if
                                  self.over_quota.get(victim.job_id)
                                  else "free_tier_heavy_load")
-                self.p.halt(victim.job_id, requeue=True)
+                # control-plane action: must work even with the API tier down
+                self.p._halt_internal(victim.job_id, requeue=True)
                 reclaimed += gang_chips(victim.manifest)

@@ -30,20 +30,59 @@ class LogRecord:
 
 
 class LogIndex:
-    """ElasticSearch-like: append + substring search, per-job streams."""
+    """ElasticSearch-like: append + substring search, per-job streams.
+
+    Both streams and searches are append-only, so integer offsets make
+    stable pagination cursors: a page served earlier never shifts when new
+    records arrive (they only land past every existing cursor). The
+    API gateway serves its ``logs``/``search_logs`` pages from
+    ``stream_page``/``search_page``.
+    """
 
     def __init__(self):
         self.records: list[LogRecord] = []
+        self._by_job: dict[str, list[LogRecord]] = defaultdict(list)
 
     def append(self, rec: LogRecord):
         self.records.append(rec)
+        self._by_job[rec.job_id].append(rec)
 
     def search(self, query: str, job_id: Optional[str] = None) -> list[LogRecord]:
-        return [r for r in self.records
-                if query in r.line and (job_id is None or r.job_id == job_id)]
+        pool = self.records if job_id is None else self._by_job.get(job_id, [])
+        return [r for r in pool if query in r.line]
 
     def stream(self, job_id: str) -> list[str]:
-        return [r.line for r in self.records if r.job_id == job_id]
+        return [r.line for r in self._by_job.get(job_id, [])]
+
+    def stream_page(self, job_id: str, cursor: int = 0,
+                    limit: Optional[int] = None
+                    ) -> tuple[list[str], Optional[int]]:
+        """One page of a job's log stream. The cursor is the offset into the
+        per-job record sequence; ``None`` next-cursor means exhausted."""
+        recs = self._by_job.get(job_id, [])
+        if limit is None:
+            return [r.line for r in recs[cursor:]], None
+        page = recs[cursor:cursor + limit]
+        nxt = cursor + len(page)
+        return [r.line for r in page], (nxt if nxt < len(recs) else None)
+
+    def search_page(self, query: str, job_id: Optional[str] = None,
+                    cursor: int = 0, limit: Optional[int] = None,
+                    allow=None) -> tuple[list[LogRecord], Optional[int]]:
+        """Paginated substring search. The cursor is the scan offset into
+        the (append-only) record sequence. ``allow(job_id) -> bool``
+        optionally restricts matches (tenant scoping in the gateway)."""
+        pool = self.records if job_id is None else self._by_job.get(job_id, [])
+        out: list[LogRecord] = []
+        i = cursor
+        while i < len(pool):
+            r = pool[i]
+            i += 1
+            if query in r.line and (allow is None or allow(r.job_id)):
+                out.append(r)
+                if limit is not None and len(out) >= limit:
+                    break
+        return out, (i if i < len(pool) else None)
 
 
 class LogCollector:

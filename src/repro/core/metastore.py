@@ -10,6 +10,12 @@ We reproduce exactly that contract: ``insert_job`` is durable-before-ack
 (write-ahead journal appended and flushed before returning), and the whole
 store can be rebuilt from the journal after a crash (``recover``).
 Long-lived (spans jobs), per-tenant query-able job history included.
+
+API-tier support: the idempotency-key index (``find_idempotent``) rides the
+same WAL record as the insert, so duplicate-submit detection survives a
+catastrophic crash/recover; ``jobs_page`` serves the gateway's
+cursor-paginated, tenant-scoped listings (cursors key on the monotonically
+increasing job id, so pages are stable under concurrent submits).
 """
 
 from __future__ import annotations
@@ -27,6 +33,8 @@ class MetaStore:
         self.clock = clock
         self._jobs: dict[str, JobRecord] = {}
         self._journal: list[dict] = []  # in-memory WAL (file-backed if path)
+        # (tenant, idempotency_key) → job_id; rebuilt from the WAL on recover
+        self._idem: dict[tuple[str, str], str] = {}
         self.journal_path = journal_path
         self._fh = open(journal_path, "a") if journal_path else None
         self.available = True
@@ -72,21 +80,34 @@ class MetaStore:
                             submitted_at=op["ts"])
             rec.set_status(op["ts"], JobStatus.PENDING, "recovered")
             self._jobs[op["job_id"]] = rec
+            if op.get("idem"):
+                self._idem[(m.tenant, op["idem"])] = op["job_id"]
         elif op["op"] == "status" and op["job_id"] in self._jobs:
             self._jobs[op["job_id"]].set_status(
                 op["ts"], JobStatus(op["status"]), op.get("msg", ""))
 
     # -- API ----------------------------------------------------------------
-    def insert_job(self, job_id: str, manifest: JobManifest) -> JobRecord:
-        """Durable before ack — the WAL append happens before returning."""
+    def insert_job(self, job_id: str, manifest: JobManifest,
+                   idempotency_key: Optional[str] = None) -> JobRecord:
+        """Durable before ack — the WAL append happens before returning.
+        The idempotency mapping rides the same WAL record as the insert, so
+        duplicate detection survives crash/recover."""
         self._check()
         rec = JobRecord(job_id=job_id, manifest=manifest,
                         submitted_at=self.clock.now())
         rec.set_status(self.clock.now(), JobStatus.PENDING, "accepted")
         self._jobs[job_id] = rec
+        if idempotency_key is not None:
+            self._idem[(manifest.tenant, idempotency_key)] = job_id
         self._append({"op": "insert", "job_id": job_id, "ts": self.clock.now(),
-                      "manifest": asdict(manifest)})
+                      "manifest": asdict(manifest),
+                      "idem": idempotency_key})
         return rec
+
+    def find_idempotent(self, tenant: str, key: str) -> Optional[str]:
+        """Job id previously acked for this (tenant, idempotency_key)."""
+        self._check()
+        return self._idem.get((tenant, key))
 
     def get(self, job_id: str) -> Optional[JobRecord]:
         self._check()
@@ -112,6 +133,37 @@ class MetaStore:
                 continue
             out.append(rec)
         return sorted(out, key=lambda r: r.submitted_at)
+
+    def jobs_page(self, tenant: Optional[str] = None,
+                  status: Optional[JobStatus] = None,
+                  cursor: Optional[str] = None,
+                  limit: int = 20) -> tuple[list[JobRecord], Optional[str]]:
+        """Cursor-paginated job listing in job-id order.
+
+        The cursor is the last job id of the previous page; job ids are
+        zero-padded and monotonically increasing, so already-served pages
+        never shift when new jobs are submitted concurrently.
+        Returns ``(records, next_cursor)``; ``next_cursor`` is ``None``
+        once exhausted.
+        """
+        self._check()
+        if limit is not None and limit < 1:
+            raise ValueError(f"limit must be >= 1, got {limit}")
+        matches = []
+        for job_id in sorted(self._jobs):
+            if cursor is not None and job_id <= cursor:
+                continue
+            rec = self._jobs[job_id]
+            if tenant and rec.manifest.tenant != tenant:
+                continue
+            if status and rec.status != status:
+                continue
+            matches.append(rec)
+            if limit is not None and len(matches) > limit:
+                break
+        if limit is not None and len(matches) > limit:
+            return matches[:limit], matches[limit - 1].job_id
+        return matches, None
 
     def history(self, tenant: str) -> list[dict]:
         """Per-tenant job history (the 'business artifact' query)."""

@@ -1,6 +1,30 @@
 """FfDLPlatform: the facade wiring all microservices together (FfDL Fig 1-2).
 
-API-layer semantics reproduced:
+The public API surface lives in :mod:`repro.api` (FfDL §3.2): a tier of
+**stateless, replicated** gateways (``ApiGateway``) behind a round-robin
+``LoadBalancer``, speaking the versioned v1 contract — typed
+request/response envelopes, per-tenant API-key auth with scope checks,
+structured ``ApiError`` codes, client-supplied idempotency keys on
+``submit`` (deduplicated durably via the metastore WAL), and
+cursor-paginated listings. Crash any single replica and idempotent calls
+still succeed (``benchmarks/api_tier.py`` measures this recovery claim).
+
+This class now plays two roles:
+
+  * **control plane** — owns and ticks every microservice: chaos → cluster
+    (heartbeats/evictions) → LCM (reconcile) → guardians (deploy/monitor)
+    → admission (preemption) → scheduler (gang placement) → metrics.
+    Internal lifecycle actions (``_halt_internal``/``_resume_internal``,
+    used by admission preemption and requeue timers) bypass the API tier:
+    they must keep working while every gateway replica is down;
+  * **deprecated facade** — ``submit``/``status``/``logs``/``halt``/… are
+    thin shims that route through the load balancer with an operator key
+    and translate ``ApiError`` back to the legacy raw exceptions
+    (``ValueError``/``KeyError``/``PermissionError``/``ConnectionError``).
+    New code should call ``platform.api`` (the balancer) or a single
+    replica directly with a tenant-scoped key from ``platform.auth``.
+
+API-layer semantics reproduced (all via the gateway):
   * ``submit`` validates, persists to the metastore **before acking** and
     returns a job id — jobs survive any subsequent component crash;
   * ``status``/``status_history`` read the metastore (user-visible,
@@ -11,9 +35,7 @@ API-layer semantics reproduced:
     public methods (recovery-time benchmark).
 
 ``tick()`` is one platform scheduling round; ``run_until`` drives the
-simulated clock. Components ticked in dependency order: chaos → cluster
-(heartbeats/evictions) → LCM (reconcile) → guardians (deploy/monitor) →
-admission (preemption) → scheduler (gang placement) → metrics.
+simulated clock.
 """
 
 from __future__ import annotations
@@ -21,6 +43,10 @@ from __future__ import annotations
 import itertools
 from typing import Optional
 
+from repro.api.auth import ALL_TENANTS, AuthService
+from repro.api.gateway import ApiGateway
+from repro.api.lb import LoadBalancer
+from repro.api.types import ApiError, SubmitRequest
 from repro.core.admission import AdmissionController
 from repro.core.chaos import ChaosConfig, ChaosMonkey
 from repro.core.cluster import ClusterModel
@@ -45,7 +71,8 @@ class FfDLPlatform:
                  placement: str = "pack", scheduler: str = "gang",
                  chaos: Optional[ChaosConfig] = None, clock=None,
                  tick_period: float = 1.0, seed: int = 0,
-                 objstore_bandwidth: Optional[float] = None):
+                 objstore_bandwidth: Optional[float] = None,
+                 n_api_replicas: int = 3):
         self.clock = clock or SimClock()
         self.tick_period = tick_period
         self.events = EventLog(self.clock)
@@ -72,64 +99,101 @@ class FfDLPlatform:
         self.guardians: dict[str, object] = {}
         self.volumes: dict[str, JobVolume] = {}
         self._job_ctr = itertools.count(1)
-        self._api_up = True
+        # ------------------------------------------------ API tier (§3.2)
+        self.auth = AuthService(seed=seed)
+        # operator credential backing the deprecated facade methods below
+        self._root_key = self.auth.issue_key(ALL_TENANTS)
+        self.api_replicas = [
+            ApiGateway(self, self.auth, replica_id=f"api-{i}")
+            for i in range(max(1, n_api_replicas))]
+        self.api = LoadBalancer(self.api_replicas, events=self.events)
 
-    # ---------------------------------------------------------------- API
-    def _api_check(self):
-        if not self._api_up:
-            raise ConnectionError("API service unavailable")
+    # ------------------------------------------------- API tier lifecycle
+    @property
+    def _api_up(self) -> bool:
+        return any(r.alive for r in self.api_replicas)
 
-    def api_crash(self):
-        self._api_up = False
+    def api_crash(self, replica: Optional[int] = None):
+        """Crash one replica (by index) or, by default, the whole tier."""
+        targets = (self.api_replicas if replica is None
+                   else [self.api_replicas[replica]])
+        for r in targets:
+            r.alive = False  # silent: a dead replica emits nothing
 
-    def api_restart(self):
-        self._api_up = True
-        self.events.emit("api", "api_restarted")
+    def api_restart(self, replica: Optional[int] = None):
+        targets = (self.api_replicas if replica is None
+                   else [self.api_replicas[replica]])
+        for r in targets:
+            if not r.alive:
+                r.restart()
 
-    def submit(self, manifest: JobManifest) -> str:
+    # --------------------------------------- deprecated facade (legacy API)
+    # Thin shims over the gateway tier; they keep the seed's raw-exception
+    # contract. New code: use ``platform.api`` with a tenant-scoped key.
+    def submit(self, manifest: JobManifest,
+               idempotency_key: Optional[str] = None) -> str:
         """Durable-before-ack submission (§3.2)."""
-        self._api_check()
-        if manifest.n_learners < 1 or manifest.chips_per_learner < 0:
-            raise ValueError("invalid manifest")
-        from repro.core.types import gang_chips
-        if gang_chips(manifest) > self.cluster.total_chips:
-            raise ValueError(
-                f"job needs {gang_chips(manifest)} chips; cluster has "
-                f"{self.cluster.total_chips}")
-        ok, why = self.admission.check(manifest)
-        if not ok:
-            self.events.emit("api", "admission_rejected",
-                             tenant=manifest.tenant, reason=why)
-            raise PermissionError(f"admission denied: {why}")
-        job_id = f"job-{next(self._job_ctr):05d}"
-        self.meta.insert_job(job_id, manifest)  # durable BEFORE ack
-        self.admission.mark(job_id, manifest)
-        self.events.emit("api", "job_submitted", job=job_id,
-                         tenant=manifest.tenant)
-        return job_id
+        try:
+            return self.api.submit(
+                self._root_key,
+                SubmitRequest(manifest=manifest,
+                              idempotency_key=idempotency_key)).job_id
+        except ApiError as e:
+            raise e.to_legacy()
 
     def status(self, job_id: str) -> JobStatus:
-        self._api_check()
-        rec = self.meta.get(job_id)
-        if rec is None:
-            raise KeyError(job_id)
-        return rec.status
+        try:
+            return JobStatus(self.api.status(self._root_key, job_id).status)
+        except ApiError as e:
+            raise e.to_legacy()
 
     def status_history(self, job_id: str) -> list:
-        self._api_check()
-        return list(self.meta.get(job_id).status_history)
+        try:
+            return self.api.status_history(self._root_key, job_id)
+        except ApiError as e:
+            raise e.to_legacy()
 
     def logs(self, job_id: str) -> list[str]:
-        self._api_check()
-        return self.log_index.stream(job_id)
+        try:
+            return self.api.logs(self._root_key, job_id).items
+        except ApiError as e:
+            raise e.to_legacy()
 
     def search_logs(self, query: str, job_id: Optional[str] = None):
-        self._api_check()
-        return self.log_index.search(query, job_id)
+        try:
+            return self.api.search_logs(self._root_key, query,
+                                        job_id=job_id).items
+        except ApiError as e:
+            raise e.to_legacy()
 
     def halt(self, job_id: str, requeue: bool = False):
         """HALT: checkpoint and stop; optionally auto-resume (preemption)."""
-        self._api_check()
+        try:
+            self.api.halt(self._root_key, job_id, requeue=requeue)
+        except ApiError as e:
+            raise e.to_legacy()
+
+    def resume(self, job_id: str):
+        """RESUME a HALTED job: fresh deployment, learners restore from the
+        latest checkpoint automatically."""
+        try:
+            self.api.resume(self._root_key, job_id)
+        except ApiError as e:
+            raise e.to_legacy()
+
+    def cancel(self, job_id: str):
+        try:
+            self.api.cancel(self._root_key, job_id)
+        except ApiError as e:
+            raise e.to_legacy()
+
+    # --------------------------------------------- internal control plane
+    # These bypass the API tier: admission preemption and requeue timers
+    # must keep working while every gateway replica is crashed.
+    def _next_job_id(self) -> str:
+        return f"job-{next(self._job_ctr):05d}"
+
+    def _halt_internal(self, job_id: str, requeue: bool = False):
         g = self.guardians.get(job_id)
         if g is not None:
             g.halt()
@@ -140,20 +204,14 @@ class FfDLPlatform:
             def do_resume(job_id=job_id):
                 rec = self.meta.get(job_id)
                 if rec is not None and rec.status == JobStatus.HALTED:
-                    self.resume(job_id)
+                    self._resume_internal(job_id)
             self.clock.call_later(3 * self.tick_period, do_resume)
 
-    def resume(self, job_id: str):
-        """RESUME a HALTED job: fresh deployment, learners restore from the
-        latest checkpoint automatically."""
-        rec = self.meta.get(job_id)
-        if rec is None or rec.status != JobStatus.HALTED:
-            raise ValueError(f"{job_id} is not HALTED")
+    def _resume_internal(self, job_id: str):
         self.guardians.pop(job_id, None)
         self.meta.update_status(job_id, JobStatus.RESUMED, "user resume")
 
-    def cancel(self, job_id: str):
-        self._api_check()
+    def _cancel_internal(self, job_id: str):
         g = self.guardians.get(job_id)
         if g is not None:
             g._fail("user cancelled")

@@ -35,6 +35,7 @@ from repro.launch.mesh import (
     HBM_BW,
     ICI_BW,
     PEAK_FLOPS_BF16,
+    compat_cost_analysis,
     make_env,
     make_production_mesh,
 )
@@ -182,7 +183,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis()
+    cost = compat_cost_analysis(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     # Loop-aware accounting (XLA's cost_analysis counts while bodies once —

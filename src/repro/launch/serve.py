@@ -33,7 +33,7 @@ def main():
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_tiny_config
-    from repro.launch.mesh import make_env
+    from repro.launch.mesh import compat_make_mesh, make_env
     from repro.launch.train import parse_mesh
     from repro.models import encdec, steps
     from repro.parallel import null_env, use_env
@@ -41,8 +41,7 @@ def main():
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
     mesh_shape = parse_mesh(args.mesh)
     if mesh_shape is not None:
-        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh(mesh_shape, ("data", "model"))
         overrides = {"kv_seq": "model"} if args.ctx_parallel else {}
         env = make_env(mesh, overrides=overrides)
     else:

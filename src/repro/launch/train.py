@@ -57,7 +57,7 @@ def main():
     from repro.configs import get_config, get_tiny_config
     from repro.data.objectstore import DirBucket
     from repro.data.pipeline import DataConfig, SyntheticLM
-    from repro.launch.mesh import make_env
+    from repro.launch.mesh import compat_make_mesh, make_env
     from repro.models import steps
     from repro.models.steps import TrainState
     from repro.optim import adamw
@@ -79,8 +79,7 @@ def main():
                 f"mesh {args.mesh} needs {need} devices, have "
                 f"{jax.device_count()} (set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={need} for CPU)")
-        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh(mesh_shape, ("data", "model"))
         overrides = {}
         if args.sp:
             overrides["seq"] = "model"

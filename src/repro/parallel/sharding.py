@@ -108,7 +108,11 @@ def use_env(env: MeshEnv):
     _ENVS.stack.append(env)
     try:
         if env.mesh is not None:
-            with jax.set_mesh(env.mesh):
+            # newer jax: jax.set_mesh(mesh); older jax: the Mesh object is
+            # itself the context manager
+            cm = (jax.set_mesh(env.mesh) if hasattr(jax, "set_mesh")
+                  else env.mesh)
+            with cm:
                 yield env
         else:
             yield env

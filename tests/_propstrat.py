@@ -1,0 +1,75 @@
+"""Vendored fallback property-testing strategies.
+
+Minimal, deterministic stand-ins for the slice of the ``hypothesis`` API
+our tests use (``given``/``settings``/``st.integers``/``st.lists``/
+``st.sampled_from``), for environments where the real library is not
+installed (see requirements-dev.txt). Unlike hypothesis there is no
+shrinking or adaptive search — just a fixed-seed random sweep of
+``max_examples`` cases, which keeps the property tests meaningful and
+reproducible rather than skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 10)
+            rng = random.Random(0xFFD1)
+            for _ in range(n):
+                drawn = {name: s.example(rng)
+                         for name, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        return wrapper
+    return deco

@@ -1,0 +1,318 @@
+"""The replicated API tier (FfDL §3.2): typed envelopes, tenant auth,
+idempotent submit (durable across metastore recovery), cursor pagination,
+and load-balancer failover across stateless replicas."""
+
+import pytest
+
+from repro.api import (
+    ApiError,
+    ErrorCode,
+    LoadBalancer,
+    SubmitRequest,
+)
+from repro.api.auth import READ
+from repro.core import FfDLPlatform, JobManifest, JobStatus
+from repro.core.metastore import MetaStore
+
+
+def sim_job(name="j", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, **kw)
+
+
+@pytest.fixture
+def p():
+    return FfDLPlatform(n_hosts=4, chips_per_host=4, n_api_replicas=3)
+
+
+# ---------------------------------------------------------------- auth
+
+
+def test_unknown_key_unauthenticated(p):
+    with pytest.raises(ApiError) as ei:
+        p.api.submit("ffdl-bogus", SubmitRequest(manifest=sim_job()))
+    assert ei.value.code == ErrorCode.UNAUTHENTICATED
+
+
+def test_read_only_key_cannot_submit(p):
+    key = p.auth.issue_key("team-a", scopes=(READ,))
+    with pytest.raises(ApiError) as ei:
+        p.api.submit(key, SubmitRequest(manifest=sim_job(tenant="team-a")))
+    assert ei.value.code == ErrorCode.FORBIDDEN
+
+
+def test_cross_tenant_access_rejected(p):
+    key_a = p.auth.issue_key("team-a")
+    key_b = p.auth.issue_key("team-b")
+    job = p.api.submit(
+        key_a, SubmitRequest(manifest=sim_job(tenant="team-a"))).job_id
+    # tenant B can neither read, list, nor halt A's job
+    for call in (lambda: p.api.status(key_b, job),
+                 lambda: p.api.status_history(key_b, job),
+                 lambda: p.api.logs(key_b, job),
+                 lambda: p.api.halt(key_b, job),
+                 lambda: p.api.cancel(key_b, job)):
+        with pytest.raises(ApiError) as ei:
+            call()
+        assert ei.value.code == ErrorCode.FORBIDDEN
+    # B cannot submit on behalf of A either
+    with pytest.raises(ApiError) as ei:
+        p.api.submit(key_b, SubmitRequest(manifest=sim_job(tenant="team-a")))
+    assert ei.value.code == ErrorCode.FORBIDDEN
+    # B's listing never shows A's jobs
+    page = p.api.list_jobs(key_b)
+    assert page.items == []
+
+
+def test_unsupported_api_version_rejected(p):
+    key = p.auth.issue_key("team-a")
+    with pytest.raises(ApiError) as ei:
+        p.api.submit(key, SubmitRequest(manifest=sim_job(tenant="team-a"),
+                                        api_version="v9"))
+    assert ei.value.code == ErrorCode.UNSUPPORTED_VERSION
+
+
+# ---------------------------------------------------------- idempotency
+
+
+def test_idempotent_resubmit_returns_same_job(p):
+    key = p.auth.issue_key("team-a")
+    req = SubmitRequest(manifest=sim_job(tenant="team-a"),
+                        idempotency_key="retry-42")
+    r1 = p.api.submit(key, req)
+    r2 = p.api.submit(key, req)
+    assert r1.job_id == r2.job_id
+    assert not r1.deduplicated and r2.deduplicated
+    assert len(p.meta.jobs(tenant="team-a")) == 1
+
+
+def test_idempotency_keys_are_tenant_scoped(p):
+    ka, kb = p.auth.issue_key("team-a"), p.auth.issue_key("team-b")
+    ra = p.api.submit(ka, SubmitRequest(manifest=sim_job(tenant="team-a"),
+                                        idempotency_key="k1"))
+    rb = p.api.submit(kb, SubmitRequest(manifest=sim_job(tenant="team-b"),
+                                        idempotency_key="k1"))
+    assert ra.job_id != rb.job_id and not rb.deduplicated
+
+
+def test_idempotent_resubmit_survives_metastore_recovery(p):
+    """The dedup index rides the WAL: rebuild the store from the journal
+    (catastrophic crash) and a duplicate submit still returns the old id."""
+    key = p.auth.issue_key("team-a")
+    req = SubmitRequest(manifest=sim_job(tenant="team-a"),
+                        idempotency_key="retry-7")
+    job = p.api.submit(key, req).job_id
+    journal = list(p.meta._journal)
+    p.meta.crash()
+    with pytest.raises(ApiError) as ei:  # outage is visible + retryable code
+        p.api.submit(key, req)
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+    rebuilt = MetaStore(p.clock)
+    rebuilt.replay_journal(journal)
+    p.meta = rebuilt
+    r = p.api.submit(key, req)
+    assert r.job_id == job and r.deduplicated
+    assert len(p.meta.jobs(tenant="team-a")) == 1
+
+
+# ----------------------------------------------------------- pagination
+
+
+def test_list_jobs_cursor_stable_under_concurrent_submits(p):
+    key = p.auth.issue_key("team-a")
+    ids = [p.api.submit(key, SubmitRequest(
+        manifest=sim_job(name=f"j{i}", tenant="team-a"))).job_id
+        for i in range(5)]
+    page1 = p.api.list_jobs(key, limit=2)
+    assert [v.job_id for v in page1.items] == ids[:2]
+    # concurrent submits land between page fetches
+    late = [p.api.submit(key, SubmitRequest(
+        manifest=sim_job(name=f"late{i}", tenant="team-a"))).job_id
+        for i in range(2)]
+    page2 = p.api.list_jobs(key, cursor=page1.next_cursor, limit=2)
+    assert [v.job_id for v in page2.items] == ids[2:4]
+    # walking to exhaustion sees every job exactly once, in order
+    seen, cursor = [], None
+    while True:
+        page = p.api.list_jobs(key, cursor=cursor, limit=3)
+        seen += [v.job_id for v in page.items]
+        cursor = page.next_cursor
+        if cursor is None:
+            break
+    assert seen == ids + late
+
+
+def test_logs_pagination_round_trip(p):
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a", sim_duration=120))).job_id
+    assert p.run_until_terminal([j], max_sim_s=3000)
+    full = p.logs(j)
+    paged, cursor = [], None
+    while True:
+        page = p.api.logs(key, j, cursor=cursor, limit=2)
+        paged += page.items
+        cursor = page.next_cursor
+        if cursor is None:
+            break
+    assert paged == full
+
+
+def test_search_logs_tenant_scoped(p):
+    from repro.core.helpers import LogRecord
+    ka, kb = p.auth.issue_key("team-a"), p.auth.issue_key("team-b")
+    ja = p.api.submit(ka, SubmitRequest(
+        manifest=sim_job(name="a", tenant="team-a", sim_duration=60))).job_id
+    jb = p.api.submit(kb, SubmitRequest(
+        manifest=sim_job(name="b", tenant="team-b", sim_duration=60))).job_id
+    for jid in (ja, jb):
+        for i in range(3):
+            p.log_index.append(LogRecord(0.0, jid, 0, f"step {i} loss=1.0"))
+    hits_a = p.api.search_logs(ka, "loss").items
+    assert hits_a and all(r.job_id == ja for r in hits_a)
+    # admin (operator facade) sees both tenants
+    assert {r.job_id for r in p.search_logs("loss")} == {ja, jb}
+
+
+def test_invalid_limit_rejected_with_stable_code(p):
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    for bad in (0, -1, "five"):
+        for call in (lambda: p.api.list_jobs(key, limit=bad),
+                     lambda: p.api.logs(key, j, limit=bad),
+                     lambda: p.api.search_logs(key, "x", limit=bad)):
+            with pytest.raises(ApiError) as ei:
+                call()
+            assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+def test_idempotency_key_reuse_with_different_manifest_conflicts(p):
+    key = p.auth.issue_key("team-a")
+    p.api.submit(key, SubmitRequest(
+        manifest=sim_job(name="a", tenant="team-a"),
+        idempotency_key="K"))
+    with pytest.raises(ApiError) as ei:
+        p.api.submit(key, SubmitRequest(
+            manifest=sim_job(name="b", tenant="team-a", n_learners=2),
+            idempotency_key="K"))
+    assert ei.value.code == ErrorCode.CONFLICT
+    assert len(p.meta.jobs(tenant="team-a")) == 1
+
+
+def test_malformed_cursor_rejected_with_stable_code(p):
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    for bad in ("abc", "-5"):
+        with pytest.raises(ApiError) as ei:
+            p.api.logs(key, j, cursor=bad)
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+        with pytest.raises(ApiError) as ei:
+            p.api.search_logs(key, "x", cursor=bad)
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+# ------------------------------------------------- replica failover (LB)
+
+
+def test_lb_masks_single_replica_crash(p):
+    """Rolling single-replica crashes: zero failed idempotent calls."""
+    key = p.auth.issue_key("team-a")
+    n = len(p.api_replicas)
+    ids = []
+    for i in range(3 * n):
+        p.api_crash(replica=i % n)           # exactly one replica down
+        r = p.api.submit(key, SubmitRequest(
+            manifest=sim_job(name=f"j{i}", tenant="team-a"),
+            idempotency_key=f"sub-{i}"))
+        ids.append(r.job_id)
+        assert p.api.status(key, r.job_id).status == "PENDING"
+        p.api_restart(replica=i % n)
+    assert len(set(ids)) == 3 * n
+    assert p.api.stats["failovers"] > 0
+    assert p.api.stats["exhausted"] == 0
+
+
+def test_all_replicas_down_is_unavailable(p):
+    key = p.auth.issue_key("team-a")
+    p.api_crash()
+    with pytest.raises(ApiError) as ei:
+        p.api.list_jobs(key)
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+    p.api_restart()
+    assert p.api.list_jobs(key).items == []
+
+
+def test_single_replica_gateway_direct():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4, n_api_replicas=1)
+    gw = p.api_replicas[0]
+    key = p.auth.issue_key("team-a")
+    job = gw.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    assert gw.status(key, job).tenant == "team-a"
+    gw.crash()
+    with pytest.raises(ApiError) as ei:
+        gw.status(key, job)
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+
+
+# ------------------------------------- legacy facade bugfixes (satellites)
+
+
+def test_resume_requires_api_up():
+    """resume() used to skip the API check and worked while the tier was
+    down; it must fail like every other endpoint now."""
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    j = p.submit(sim_job(sim_duration=300))
+    for _ in range(100):
+        p.tick()
+        if p.meta.get(j).status == JobStatus.PROCESSING:
+            break
+    p.halt(j)
+    p.run_for(30)
+    assert p.status(j) == JobStatus.HALTED
+    p.api_crash()
+    with pytest.raises(ConnectionError):
+        p.resume(j)
+    p.api_restart()
+    p.resume(j)
+    assert p.run_until_terminal([j], max_sim_s=5000)
+    assert p.status(j) == JobStatus.COMPLETED
+
+
+def test_unknown_job_raises_keyerror_on_all_endpoints():
+    """status_history() used to AttributeError on None; halt() leaked a
+    metastore internal KeyError. All endpoints: stable NOT_FOUND."""
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    for call in (lambda: p.status("job-nope"),
+                 lambda: p.status_history("job-nope"),
+                 lambda: p.logs("job-nope"),
+                 lambda: p.halt("job-nope"),
+                 lambda: p.resume("job-nope"),
+                 lambda: p.cancel("job-nope")):
+        with pytest.raises(KeyError):
+            call()
+
+
+def test_preemption_requeue_works_while_api_down():
+    """Admission preemption is control-plane: it must halt+requeue via the
+    internal path even when every gateway replica is crashed."""
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)  # 8 chips
+    p.admission.register_tenant("a", quota_chips=4)
+    p.admission.register_tenant("b", quota_chips=4)
+    # tenant a runs over quota opportunistically (8 chips on idle cluster)
+    ja = p.submit(sim_job(name="big-a", tenant="a", n_learners=2,
+                          chips_per_learner=4, sim_duration=600))
+    p.run_for(60)
+    # tenant b claims its quota back; the API tier being down must not matter
+    jb = p.submit(sim_job(name="b", tenant="b", n_learners=1,
+                          chips_per_learner=4, sim_duration=60))
+    p.api_crash()
+    p.run_for(200)
+    p.api_restart()
+    assert p.events.count("preempt") >= 1
+    assert p.run_until_terminal([jb], max_sim_s=4000)
+    assert p.status(jb) == JobStatus.COMPLETED

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # vendored fixed-seed fallback strategies (see requirements-dev.txt)
+    from _propstrat import given, settings, st
 
 from repro.data.objectstore import (
     BlockCache,

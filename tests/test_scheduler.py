@@ -3,7 +3,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # vendored fixed-seed fallback strategies (see requirements-dev.txt)
+    from _propstrat import given, settings, st
 
 from repro.core.bsa import bsa_place
 from repro.core.cluster import ClusterModel

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.mesh import make_env
+from repro.launch.mesh import compat_make_mesh, make_env
 from repro.parallel.sharding import (
     MULTI_POD_RULES,
     SINGLE_POD_RULES,
@@ -23,8 +23,7 @@ pytestmark = pytest.mark.skipif(
 
 @pytest.fixture(scope="module")
 def env():
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
     return make_env(mesh)
 
 
@@ -151,8 +150,7 @@ def test_elastic_restore_onto_different_mesh(env):
         ckpt.save(bucket, "run", 2, st)
 
     # node failure → restart on a DIFFERENT mesh shape
-    mesh_b = jax.make_mesh((4, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = compat_make_mesh((4, 1), ("data", "model"))
     env_b = make_env(mesh_b)
     with use_env(env_b):
         sh_b = shardings_for(env_b)
