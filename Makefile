@@ -1,14 +1,24 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench examples
+.PHONY: test test-fast bench-smoke bench examples serve docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_api_gateway.py tests/test_platform.py \
+		tests/test_http_api.py tests/test_ratelimit.py \
 		tests/test_kvstore.py tests/test_scheduler.py
+
+# local platform + HTTP API on :8084; prints one API key per tenant
+serve:
+	$(PY) -m repro.api.cli serve --port 8084 --tenant demo --tenant staging
+
+# the docs are a contract: CLI must parse, docs/api.md must match the code
+docs-check:
+	$(PY) -m repro.api.cli --help > /dev/null
+	$(PY) -m pytest -q tests/test_docs_api.py
 
 bench-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py

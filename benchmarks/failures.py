@@ -18,6 +18,7 @@ from collections import Counter
 
 import numpy as np
 
+from repro.api import ApiClient
 from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
 
 
@@ -37,6 +38,7 @@ def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
     )
     p = FfDLPlatform(n_hosts=24, chips_per_host=4, chaos=chaos, seed=seed,
                      tick_period=2.0)
+    c = ApiClient.for_platform(p)
     rng = np.random.default_rng(seed)
 
     month_s = 3600.0 * 10  # compressed "month" of cluster time
@@ -53,7 +55,7 @@ def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
             while ai < len(arrivals) and arrivals[ai] <= p.clock.now():
                 n_l = int(rng.choice([1, 1, 2, 4], p=[.5, .2, .2, .1]))
                 cpl = int(rng.choice([1, 2], p=[.7, .3]))
-                jobs.append(p.submit(JobManifest(
+                jobs.append(c.submit(JobManifest(
                     name=f"m{month}-{ai}", n_learners=n_l,
                     chips_per_learner=cpl,
                     sim_duration=float(rng.uniform(900, 3600)),

@@ -22,6 +22,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import ApiClient
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 
 
@@ -50,7 +51,8 @@ def _bare_metal(arch: str, steps: int, batch: int, seq: int, donate=False):
 
 def _through_platform(arch: str, steps: int, batch: int, seq: int):
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(JobManifest(
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(
         name="bench", arch=arch, n_learners=1, chips_per_learner=2,
         checkpoint_interval=10 ** 9,  # no checkpoints: platform cost only
         train={"steps": steps, "batch": batch, "seq": seq}))
@@ -67,7 +69,7 @@ def _through_platform(arch: str, steps: int, batch: int, seq: int):
         p.tick()
     dt = time.perf_counter() - t0
     done = p.run_until_terminal([j], max_sim_s=1000)
-    assert done and p.status(j) == JobStatus.COMPLETED
+    assert done and c.status(j) == JobStatus.COMPLETED
     n_steps = steps - start_step
     return n_steps * batch * seq / dt
 

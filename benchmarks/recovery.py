@@ -10,6 +10,7 @@ Guardian monitoring, controller relaying, learner PROCESSING again).
 
 from __future__ import annotations
 
+from repro.api import ApiClient
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 
 
@@ -41,7 +42,8 @@ def run() -> dict:
 
     # -- LCM: crash before it created the job's guardian ------------------
     p = FfDLPlatform(n_hosts=2, chips_per_host=4, tick_period=0.5)
-    j = p.submit(JobManifest(name="r", n_learners=1, chips_per_learner=1,
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(name="r", n_learners=1, chips_per_learner=1,
                              sim_duration=200))
     p.lcm.crash()
     p.clock.call_later(4.0, p.lcm.restart)
@@ -49,7 +51,8 @@ def run() -> dict:
 
     # -- Guardian: crash while monitoring; K8s Job restarts it -----------
     p = FfDLPlatform(n_hosts=2, chips_per_host=4, tick_period=0.5)
-    j = p.submit(JobManifest(name="g", n_learners=1, chips_per_learner=1,
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(name="g", n_learners=1, chips_per_learner=1,
                              sim_duration=500))
     _until(p, lambda: j in p.guardians and p.guardians[j].stage == "MONITOR")
     g = p.guardians[j]
@@ -59,13 +62,14 @@ def run() -> dict:
 
     # -- Helper (controller): restart + status relay resumes --------------
     p = FfDLPlatform(n_hosts=2, chips_per_host=4, tick_period=0.5)
-    j = p.submit(JobManifest(name="h", n_learners=1, chips_per_learner=1,
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(name="h", n_learners=1, chips_per_learner=1,
                              sim_duration=500))
     _until(p, lambda: p.meta.get(j).status == JobStatus.PROCESSING)
-    c = p.guardians[j].controller
-    c.crash()
+    ctrl = p.guardians[j].controller
+    ctrl.crash()
     p.etcd.delete(f"/jobs/{j}/learners/0/status")  # stale state gone
-    p.clock.call_later(3.0, c.restart)
+    p.clock.call_later(3.0, ctrl.restart)
     results["Helper"] = _until(
         p, lambda: p.etcd.get(f"/jobs/{j}/learners/0/status") is not None)
 
@@ -74,7 +78,8 @@ def run() -> dict:
     # store and volumes — not the subsequent data re-download)
     from repro.core.types import PodPhase
     p = FfDLPlatform(n_hosts=2, chips_per_host=4, tick_period=0.5)
-    j = p.submit(JobManifest(name="l", n_learners=1, chips_per_learner=1,
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(name="l", n_learners=1, chips_per_learner=1,
                              sim_duration=500, max_restarts=5))
     _until(p, lambda: p.meta.get(j).status == JobStatus.PROCESSING)
     g = p.guardians[j]

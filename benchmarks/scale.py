@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import ApiClient
 from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
 
 # job classes: (label, n_jobs_LL, n_jobs_HL, start_s, base_duration_s,
@@ -40,6 +41,7 @@ def run_scenario(heavy: bool, seed=0):
     p = FfDLPlatform(n_hosts=170, chips_per_host=4, seed=seed,
                      chaos=ChaosConfig(seed=seed),
                      tick_period=5.0)
+    c = ApiClient.for_platform(p)
     # a few faulty hosts (the paper found 12/700 jobs on bad nodes)
     faulty = [f"host-{i:04d}" for i in (7, 33, 101)] if heavy else []
 
@@ -70,7 +72,7 @@ def run_scenario(heavy: bool, seed=0):
     while p.clock.now() < t_end:
         while idx < len(pending) and pending[idx][0] <= p.clock.now():
             start, label, m = pending[idx]
-            jid = p.submit(m)
+            jid = c.submit(m)
             jobs_by_class[label].append(jid)
             runtimes[jid] = (label, p.clock.now())
             idx += 1

@@ -6,6 +6,7 @@ crashes, node failures, and guardian/controller crashes (FfDL §3.8, §5.6).
 
 from collections import Counter
 
+from repro.api import ApiClient
 from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
 
 
@@ -19,12 +20,13 @@ def main():
         host_recovery_s=90.0,
     )
     p = FfDLPlatform(n_hosts=8, chips_per_host=4, chaos=chaos, seed=3)
+    c = ApiClient.for_platform(p)
 
-    jobs = [p.submit(JobManifest(name=f"sim-{i}", n_learners=2,
+    jobs = [c.submit(JobManifest(name=f"sim-{i}", n_learners=2,
                                  chips_per_learner=2, sim_duration=300,
                                  max_restarts=20))
             for i in range(5)]
-    jobs.append(p.submit(JobManifest(
+    jobs.append(c.submit(JobManifest(
         name="real-train", arch="smollm-360m", n_learners=1,
         chips_per_learner=2, checkpoint_interval=15, max_restarts=20,
         train={"steps": 80, "batch": 4, "seq": 64})))
@@ -34,7 +36,7 @@ def main():
     ok = p.run_until_terminal(jobs, max_sim_s=50000)
 
     print("\n--- outcome ---")
-    statuses = Counter(p.status(j).value for j in jobs)
+    statuses = Counter(c.status(j).value for j in jobs)
     print(f"job outcomes: {dict(statuses)}")
     assert ok and statuses.get("COMPLETED", 0) == len(jobs), statuses
 
@@ -50,7 +52,7 @@ def main():
 
     print("\n--- recovery timeline of the real training job ---")
     j = jobs[-1]
-    for ts, status, msg in p.status_history(j):
+    for ts, status, msg in c.status_history(j):
         print(f"  {ts:8.1f}s  {status:12s} {msg}")
     print(f"\nno leaked chips: {p.cluster.used_chips} in use  OK")
 

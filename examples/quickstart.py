@@ -7,6 +7,7 @@ Shows the user-facing surface of the platform (FfDL §3.1): a manifest is
 status pipeline, logs, results.
 """
 
+from repro.api import ApiClient
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 
 
@@ -14,14 +15,17 @@ def main():
     # a small cluster: 4 hosts x 4 chips
     platform = FfDLPlatform(n_hosts=4, chips_per_host=4, placement="pack")
     platform.admission.register_tenant("demo-team", quota_chips=12)
+    # every user-facing call goes through the v1 API tier with a
+    # tenant-scoped key (the raw platform facade is gone)
+    client = ApiClient.for_platform(platform, tenant="demo-team")
 
     # 1) a simulated job (what the scheduling benchmarks use)
-    sim = platform.submit(JobManifest(
+    sim = client.submit(JobManifest(
         name="preprocessing-sim", tenant="demo-team",
         n_learners=2, chips_per_learner=2, sim_duration=120))
 
     # 2) a real JAX training job: tiny llama-family model, 40 steps
-    train = platform.submit(JobManifest(
+    train = client.submit(JobManifest(
         name="smollm-tiny-train", tenant="demo-team",
         n_learners=1, chips_per_learner=2,
         arch="smollm-360m", checkpoint_interval=20,
@@ -32,18 +36,18 @@ def main():
     while True:
         platform.tick()
         for j in (sim, train):
-            st = platform.status(j)
+            st = client.status(j)
             if last.get(j) != st:
                 rec = platform.meta.get(j)
                 print(f"[t={platform.clock.now():7.1f}s] {j} "
                       f"{st.value:12s} step={rec.progress_step}")
                 last[j] = st
-        if all(platform.status(j) in (JobStatus.COMPLETED, JobStatus.FAILED)
+        if all(client.status(j) in (JobStatus.COMPLETED, JobStatus.FAILED)
                for j in (sim, train)):
             break
 
     print("\nstatus history of the training job:")
-    for ts, status, msg in platform.status_history(train):
+    for ts, status, msg in client.status_history(train):
         print(f"  {ts:8.1f}s  {status:12s} {msg}")
 
     print(f"\ncluster utilization now: {platform.cluster.utilization():.0%}")

@@ -13,6 +13,7 @@ checkpoint metadata trail.
 import argparse
 
 from repro.ckpt import checkpoint as ckpt
+from repro.api import ApiClient
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 from repro.data.objectstore import MountedBucket
 
@@ -33,7 +34,8 @@ def main():
         })
 
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(JobManifest(
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(
         name="e2e-train", arch="smollm-360m", n_learners=1,
         chips_per_learner=4, checkpoint_interval=25,
         train={"steps": steps, "batch": 8, "seq": 128, "lr": 1.5e-3,
@@ -42,7 +44,7 @@ def main():
     n_params = None
     halted = False
     print(f"submitted {j}: ~100M-param decoder, {steps} steps")
-    while p.status(j) not in (JobStatus.COMPLETED, JobStatus.FAILED):
+    while c.status(j) not in (JobStatus.COMPLETED, JobStatus.FAILED):
         p.tick()
         rec = p.meta.get(j)
         g = p.guardians.get(j)
@@ -62,14 +64,14 @@ def main():
                 and rec.progress_step >= steps // 3:
             print(f"-> HALT at step {rec.progress_step} "
                   "(checkpoint + free chips)")
-            p.halt(j)
+            c.halt(j)
             halted = True
         if halted and rec.status == JobStatus.HALTED:
             print(f"-> chips free: {p.cluster.used_chips} in use; RESUME")
-            p.resume(j)
+            c.resume(j)
             halted = "resumed"
 
-    print(f"\nfinal status: {p.status(j).value}")
+    print(f"\nfinal status: {c.status(j).value}")
     bucket = MountedBucket(p.objstore, "results")
     trail = []
     for s in ckpt.steps_available(bucket, f"{j}/ckpt"):
@@ -82,7 +84,7 @@ def main():
     if len(trail) >= 2:
         assert trail[-1][1] < trail[0][1], "loss did not decrease!"
         print(f"loss decreased {trail[0][1]:.3f} -> {trail[-1][1]:.3f}  OK")
-    hist = [s for _, s, _ in p.status_history(j)]
+    hist = [s for _, s, _ in c.status_history(j)]
     assert "HALTED" in hist and "RESUMED" in hist
     print("HALT/RESUME exercised through the status pipeline  OK")
 

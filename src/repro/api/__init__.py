@@ -1,9 +1,14 @@
 # The replicated, versioned API tier fronting the platform (FfDL §3.2):
 # typed envelopes + stable error codes, per-tenant auth, idempotent submit,
-# cursor pagination, and round-robin failover across stateless replicas.
+# cursor pagination, round-robin failover across stateless replicas, a
+# JSON-over-HTTP transport with per-tenant rate limiting, and the `ffdl`
+# CLI speaking only the wire protocol (python -m repro.api.cli).
 from repro.api.auth import ALL_TENANTS, AuthService, Principal, READ, WRITE
+from repro.api.client import ApiClient
 from repro.api.gateway import ApiGateway
+from repro.api.http import ApiHttpServer, HttpTransport, ROUTES, STATUS_OF
 from repro.api.lb import LoadBalancer
+from repro.api.ratelimit import RateLimitConfig, RateLimitedApi, TokenBucket
 from repro.api.types import (
     API_VERSION,
     ApiError,
@@ -17,16 +22,24 @@ from repro.api.types import (
 __all__ = [
     "ALL_TENANTS",
     "API_VERSION",
+    "ApiClient",
     "ApiError",
     "ApiGateway",
+    "ApiHttpServer",
     "AuthService",
     "ErrorCode",
+    "HttpTransport",
     "JobView",
     "LoadBalancer",
     "Page",
     "Principal",
+    "RateLimitConfig",
+    "RateLimitedApi",
     "READ",
+    "ROUTES",
+    "STATUS_OF",
     "SubmitRequest",
     "SubmitResponse",
+    "TokenBucket",
     "WRITE",
 ]

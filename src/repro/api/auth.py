@@ -66,6 +66,12 @@ class AuthService:
     def revoke(self, key: str):
         self._keys.pop(key, None)
 
+    def peek(self, api_key: str):
+        """Resolve a key without raising — ``None`` for unknown keys. Used
+        by the rate limiter to pick a bucket before authentication runs
+        (unauthenticated floods must be throttleable too)."""
+        return self._keys.get(api_key)
+
     def authenticate(self, api_key: str) -> Principal:
         principal = self._keys.get(api_key)
         if principal is None:

@@ -1,0 +1,288 @@
+"""``ffdl`` — the thin CLI for the v1 API tier.
+
+Speaks ONLY the wire protocol (JSON over HTTP via
+:class:`~repro.api.http.HttpTransport`); it has no in-process shortcut to
+the platform, so everything it can do, any HTTP client can do.
+
+    python -m repro.api.cli serve --port 8084 --tenant demo --rate 200
+    export FFDL_ENDPOINT=http://127.0.0.1:8084 FFDL_API_KEY=ffdl-...
+    python -m repro.api.cli submit --name train1 --learners 2 --chips 2 \
+        --sim-duration 120 --idempotency-key train1-try1
+    python -m repro.api.cli list --limit 10
+    python -m repro.api.cli status job-00001
+    python -m repro.api.cli logs job-00001
+    python -m repro.api.cli halt job-00001 && python -m repro.api.cli resume job-00001
+
+``serve`` boots a local simulated platform, prints one API key per
+``--tenant``, and ticks the simulation in the foreground so submitted jobs
+actually run — the zero-to-aha path for ``make serve``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.api.http import ApiHttpServer, HttpTransport
+from repro.api.ratelimit import RateLimitConfig
+from repro.api.types import ApiError
+from repro.core.types import JobManifest
+
+DEFAULT_ENDPOINT = "http://127.0.0.1:8084"
+
+
+def _transport(args) -> HttpTransport:
+    return HttpTransport(args.endpoint)
+
+
+def _key(args) -> str:
+    if not args.key:
+        sys.exit("error: no API key (pass --key or set FFDL_API_KEY)")
+    return args.key
+
+
+def _print_json(obj):
+    print(json.dumps(obj, indent=2, default=str))
+
+
+def _view_row(v) -> str:
+    return (f"{v.job_id:12s} {v.tenant:12s} {v.status:12s} "
+            f"step={v.progress_step:<6d} {v.name}")
+
+
+# --------------------------------------------------------------------------
+# Subcommands
+# --------------------------------------------------------------------------
+
+def cmd_serve(args) -> int:
+    from repro.core.platform import FfDLPlatform
+    p = FfDLPlatform(n_hosts=args.hosts, chips_per_host=args.chips_per_host)
+    rate = None
+    if args.rate:
+        rate = RateLimitConfig(rate=args.rate, burst=args.burst,
+                               max_inflight=args.max_inflight)
+    server = ApiHttpServer(p, host=args.host, port=args.port, rate_limit=rate)
+    print(f"ffdl API server listening on {server.base_url}")
+    for tenant in args.tenant or ["demo"]:
+        print(f"  tenant {tenant!r}: API key "
+              f"{p.auth.issue_key(tenant)}")
+    limited = f"rate={args.rate}/s burst={args.burst}" if rate else "off"
+    print(f"  rate limiting: {limited}")
+    print("ticking simulation; Ctrl-C to stop")
+    with server:
+        try:
+            while True:
+                time.sleep(args.tick_period)
+                with server.lock:
+                    p.tick()
+        except KeyboardInterrupt:
+            print("\nbye")
+    return 0
+
+
+def cmd_health(args) -> int:
+    out = _transport(args).health()
+    _print_json(out)
+    return 0 if out.get("status") == "ok" else 1
+
+
+def cmd_submit(args) -> int:
+    manifest = JobManifest(
+        name=args.name, tenant=args.tenant, n_learners=args.learners,
+        chips_per_learner=args.chips, sim_duration=args.sim_duration,
+        **(json.loads(args.extra) if args.extra else {}))
+    from repro.api.types import SubmitRequest
+    resp = _transport(args).submit(
+        _key(args), SubmitRequest(manifest=manifest,
+                                  idempotency_key=args.idempotency_key))
+    dedup = " (deduplicated)" if resp.deduplicated else ""
+    print(f"{resp.job_id}{dedup}")
+    return 0
+
+
+def cmd_list(args) -> int:
+    t = _transport(args)
+    cursor = args.cursor
+    while True:
+        page = t.list_jobs(_key(args), tenant=args.tenant,
+                           status=args.status, cursor=cursor,
+                           limit=args.limit)
+        for v in page.items:
+            print(_view_row(v))
+        cursor = page.next_cursor
+        if cursor is None or not args.all:
+            if cursor is not None:
+                print(f"# next cursor: {cursor}  (pass --cursor or --all)")
+            return 0
+
+
+def cmd_status(args) -> int:
+    v = _transport(args).status(_key(args), args.job_id)
+    _print_json({"job_id": v.job_id, "name": v.name, "tenant": v.tenant,
+                 "status": v.status, "progress_step": v.progress_step,
+                 "submitted_at": v.submitted_at,
+                 "finished_at": v.finished_at, "message": v.message})
+    return 0
+
+
+def cmd_history(args) -> int:
+    for ts, status, msg in _transport(args).status_history(_key(args),
+                                                           args.job_id):
+        print(f"{ts:10.1f}  {status:12s} {msg}")
+    return 0
+
+
+def cmd_logs(args) -> int:
+    t = _transport(args)
+    cursor = args.cursor
+    while True:
+        page = t.logs(_key(args), args.job_id, cursor=cursor,
+                      limit=args.limit)
+        for line in page.items:
+            print(line)
+        cursor = page.next_cursor
+        if cursor is None:
+            return 0
+        if args.limit is not None:  # --limit means exactly one page
+            print(f"# next cursor: {cursor}  (pass --cursor to continue)")
+            return 0
+
+
+def cmd_search(args) -> int:
+    page = _transport(args).search_logs(_key(args), args.query,
+                                        job_id=args.job, cursor=args.cursor,
+                                        limit=args.limit)
+    for rec in page.items:
+        print(f"{rec.job_id} learner={rec.learner} {rec.line}")
+    if page.next_cursor is not None:
+        print(f"# next cursor: {page.next_cursor}  (pass --cursor)")
+    return 0
+
+
+def cmd_halt(args) -> int:
+    _transport(args).halt(_key(args), args.job_id, requeue=args.requeue)
+    print(f"{args.job_id} halted")
+    return 0
+
+
+def cmd_resume(args) -> int:
+    _transport(args).resume(_key(args), args.job_id)
+    print(f"{args.job_id} resumed")
+    return 0
+
+
+def cmd_cancel(args) -> int:
+    _transport(args).cancel(_key(args), args.job_id)
+    print(f"{args.job_id} cancelled")
+    return 0
+
+
+# --------------------------------------------------------------------------
+# Parser
+# --------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="ffdl",
+        description="CLI for the FfDL v1 HTTP API (see docs/api.md)")
+    ap.add_argument("--endpoint",
+                    default=os.environ.get("FFDL_ENDPOINT", DEFAULT_ENDPOINT),
+                    help="API base URL (env FFDL_ENDPOINT)")
+    ap.add_argument("--key", default=os.environ.get("FFDL_API_KEY"),
+                    help="tenant API key (env FFDL_API_KEY)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    s = sub.add_parser("serve", help="run a local platform + HTTP server")
+    s.add_argument("--host", default="127.0.0.1")
+    s.add_argument("--port", type=int, default=8084)
+    s.add_argument("--hosts", type=int, default=8)
+    s.add_argument("--chips-per-host", type=int, default=4)
+    s.add_argument("--tenant", action="append",
+                   help="issue a key for this tenant (repeatable)")
+    s.add_argument("--rate", type=float, default=200.0,
+                   help="per-tenant req/s (0 disables rate limiting)")
+    s.add_argument("--burst", type=int, default=100)
+    s.add_argument("--max-inflight", type=int, default=64)
+    s.add_argument("--tick-period", type=float, default=0.05,
+                   help="wall seconds between simulation ticks")
+    s.set_defaults(fn=cmd_serve)
+
+    s = sub.add_parser("health", help="GET /v1/health")
+    s.set_defaults(fn=cmd_health)
+
+    s = sub.add_parser("submit", help="POST /v1/jobs")
+    s.add_argument("--name", required=True)
+    s.add_argument("--tenant", default="demo")
+    s.add_argument("--learners", type=int, default=1)
+    s.add_argument("--chips", type=int, default=1,
+                   help="chips per learner")
+    s.add_argument("--sim-duration", type=float, default=120.0)
+    s.add_argument("--idempotency-key",
+                   help="sent as the Idempotency-Key header")
+    s.add_argument("--extra", help="extra manifest fields as a JSON object")
+    s.set_defaults(fn=cmd_submit)
+
+    s = sub.add_parser("list", help="GET /v1/jobs (cursor-paginated)")
+    s.add_argument("--tenant")
+    s.add_argument("--status")
+    s.add_argument("--cursor")
+    s.add_argument("--limit", type=int, default=20)
+    s.add_argument("--all", action="store_true",
+                   help="follow next_cursor to exhaustion")
+    s.set_defaults(fn=cmd_list)
+
+    s = sub.add_parser("status", help="GET /v1/jobs/{id}")
+    s.add_argument("job_id")
+    s.set_defaults(fn=cmd_status)
+
+    s = sub.add_parser("history", help="GET /v1/jobs/{id}/history")
+    s.add_argument("job_id")
+    s.set_defaults(fn=cmd_history)
+
+    s = sub.add_parser("logs", help="GET /v1/jobs/{id}/logs")
+    s.add_argument("job_id")
+    s.add_argument("--cursor")
+    s.add_argument("--limit", type=int,
+                   help="print at most this many lines (one page); "
+                        "default: follow cursors to the end")
+    s.set_defaults(fn=cmd_logs)
+
+    s = sub.add_parser("search", help="GET /v1/logs/search")
+    s.add_argument("query")
+    s.add_argument("--job", help="restrict to one job id")
+    s.add_argument("--cursor")
+    s.add_argument("--limit", type=int)
+    s.set_defaults(fn=cmd_search)
+
+    s = sub.add_parser("halt", help="POST /v1/jobs/{id}/halt")
+    s.add_argument("job_id")
+    s.add_argument("--requeue", action="store_true")
+    s.set_defaults(fn=cmd_halt)
+
+    s = sub.add_parser("resume", help="POST /v1/jobs/{id}/resume")
+    s.add_argument("job_id")
+    s.set_defaults(fn=cmd_resume)
+
+    s = sub.add_parser("cancel", help="DELETE /v1/jobs/{id}")
+    s.add_argument("job_id")
+    s.set_defaults(fn=cmd_cancel)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except ApiError as e:
+        msg = f"error [{e.code.value}]: {e.message}"
+        if e.retry_after is not None:
+            msg += f" (retry after {e.retry_after}s)"
+        print(msg, file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,105 @@
+"""Tenant-scoped convenience client over any v1 transport.
+
+``ApiClient`` binds an API key to a *transport* — anything exposing the
+nine v1 verbs with ``(api_key, ...)`` signatures: the in-process
+``LoadBalancer``, a single ``ApiGateway`` replica, a ``RateLimitedApi``
+front, or :class:`repro.api.http.HttpTransport` for a remote server. The
+same calling code therefore works in-process and over the wire.
+
+It replaces the retired ``FfDLPlatform.submit/status/...`` facade with the
+same ergonomic return shapes (job ids, ``JobStatus``, plain lists) but the
+v1 error contract: every failure is an ``ApiError`` with a stable code —
+never a raw ``KeyError``/``ValueError``/``PermissionError``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.api.auth import ALL_TENANTS, READ, WRITE
+from repro.api.types import Page, SubmitRequest, SubmitResponse
+from repro.core.types import JobManifest, JobStatus
+
+
+class ApiClient:
+    def __init__(self, transport, api_key: str):
+        self.transport = transport
+        self.api_key = api_key
+
+    @classmethod
+    def for_platform(cls, platform, tenant: str = ALL_TENANTS,
+                     scopes: tuple = (READ, WRITE)) -> "ApiClient":
+        """Mint a key for ``tenant`` and bind it to the platform's load
+        balancer. The default ``"*"`` tenant is an operator credential —
+        tests/ops tooling; real tenants should pass their own name."""
+        return cls(platform.api, platform.auth.issue_key(tenant, scopes))
+
+    # -- submit -----------------------------------------------------------
+    def submit(self, manifest: JobManifest,
+               idempotency_key: Optional[str] = None) -> str:
+        """Durable-before-ack submit; returns the job id. Use
+        :meth:`submit_envelope` when the ``deduplicated`` flag matters."""
+        return self.submit_envelope(manifest, idempotency_key).job_id
+
+    def submit_envelope(self, manifest: JobManifest,
+                        idempotency_key: Optional[str] = None
+                        ) -> SubmitResponse:
+        return self.transport.submit(
+            self.api_key, SubmitRequest(manifest=manifest,
+                                        idempotency_key=idempotency_key))
+
+    # -- reads ------------------------------------------------------------
+    def status(self, job_id: str) -> JobStatus:
+        return JobStatus(self.transport.status(self.api_key, job_id).status)
+
+    def view(self, job_id: str):
+        """The full tenant-visible ``JobView`` projection."""
+        return self.transport.status(self.api_key, job_id)
+
+    def status_history(self, job_id: str) -> list:
+        return self.transport.status_history(self.api_key, job_id)
+
+    def list_jobs(self, **kwargs) -> Page:
+        return self.transport.list_jobs(self.api_key, **kwargs)
+
+    def logs(self, job_id: str, cursor: Optional[str] = None,
+             limit: Optional[int] = None) -> list:
+        """All log lines (auto-paginates when the transport pages)."""
+        if limit is not None:
+            return self.transport.logs(self.api_key, job_id, cursor=cursor,
+                                       limit=limit).items
+        out, cur = [], cursor
+        while True:
+            page = self.transport.logs(self.api_key, job_id, cursor=cur)
+            out += page.items
+            cur = page.next_cursor
+            if cur is None:
+                return out
+
+    def search_logs(self, query: str, job_id: Optional[str] = None,
+                    cursor: Optional[str] = None,
+                    limit: Optional[int] = None) -> list:
+        """All matches (auto-paginates, like :meth:`logs`); with ``limit``
+        set, exactly one page of at most that many records."""
+        if limit is not None:
+            return self.transport.search_logs(
+                self.api_key, query, job_id=job_id, cursor=cursor,
+                limit=limit).items
+        out, cur = [], cursor
+        while True:
+            page = self.transport.search_logs(self.api_key, query,
+                                              job_id=job_id, cursor=cur)
+            out += page.items
+            cur = page.next_cursor
+            if cur is None:
+                return out
+
+    # -- lifecycle writes -------------------------------------------------
+    def halt(self, job_id: str, requeue: bool = False):
+        return self.transport.halt(self.api_key, job_id, requeue=requeue)
+
+    def resume(self, job_id: str):
+        return self.transport.resume(self.api_key, job_id)
+
+    def cancel(self, job_id: str):
+        return self.transport.cancel(self.api_key, job_id)

@@ -26,6 +26,7 @@ replicas share the store, so the LB will exhaust them and propagate).
 
 from __future__ import annotations
 
+import re
 from contextlib import contextmanager
 from dataclasses import asdict
 from typing import Optional
@@ -40,18 +41,35 @@ from repro.api.types import (
     SubmitResponse,
     check_version,
 )
-from repro.core.types import JobStatus, gang_chips
+from repro.core.types import JobStatus, TERMINAL, gang_chips
 
 DEFAULT_PAGE = 20
+# Upper bound on any page size: one tenant must not be able to drag the
+# whole metastore/log index through a single call (multi-tenant fairness).
+MAX_PAGE = 1000
 
 
 def _parse_limit(limit):
     """Page sizes must be positive; 0/negative would corrupt cursors
-    (skipped records, non-advancing pagination loops)."""
+    (skipped records, non-advancing pagination loops). Oversized pages are
+    rejected rather than clamped so clients learn the real contract."""
     if limit is not None and (not isinstance(limit, int) or limit < 1):
         raise ApiError(ErrorCode.INVALID_ARGUMENT,
                        f"limit must be a positive integer, got {limit!r}")
+    if limit is not None and limit > MAX_PAGE:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"limit {limit} exceeds maximum page size {MAX_PAGE}")
     return limit
+
+
+def _parse_job_cursor(cursor):
+    """list_jobs cursors are job ids minted by jobs_page; anything else
+    would silently compare lexically against real ids and return an empty
+    listing — reject it with the stable code instead."""
+    if cursor is not None and not re.fullmatch(r"job-\d+", str(cursor)):
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"malformed cursor: {cursor!r}")
+    return cursor
 
 
 def _parse_cursor(cursor) -> int:
@@ -186,8 +204,9 @@ class ApiGateway:
                            f"cannot list jobs of tenant {tenant!r}")
         with _meta_guard():
             recs, next_cursor = self.p.meta.jobs_page(
-                tenant=tenant, status=status, cursor=cursor,
-                limit=_parse_limit(limit))
+                tenant=tenant, status=status,
+                cursor=_parse_job_cursor(cursor),
+                limit=_parse_limit(limit) or DEFAULT_PAGE)
         return Page(items=[JobView.of(r) for r in recs],
                     next_cursor=next_cursor)
 
@@ -195,8 +214,11 @@ class ApiGateway:
              limit: Optional[int] = None) -> "Page[str]":
         principal = self._require(api_key, READ)
         self._owned_record(principal, job_id)  # existence + ownership
+        # no limit means "a full page", never "the whole stream": MAX_PAGE
+        # bounds every single call (clients follow next_cursor)
         lines, next_cursor = self.p.log_index.stream_page(
-            job_id, cursor=_parse_cursor(cursor), limit=_parse_limit(limit))
+            job_id, cursor=_parse_cursor(cursor),
+            limit=_parse_limit(limit) or MAX_PAGE)
         return Page(items=lines,
                     next_cursor=None if next_cursor is None
                     else str(next_cursor))
@@ -222,7 +244,7 @@ class ApiGateway:
                 return _memo[jid] == principal.tenant
         recs, next_cursor = self.p.log_index.search_page(
             query, job_id=job_id, cursor=_parse_cursor(cursor),
-            limit=_parse_limit(limit), allow=allow)
+            limit=_parse_limit(limit) or MAX_PAGE, allow=allow)
         return Page(items=recs,
                     next_cursor=None if next_cursor is None
                     else str(next_cursor))
@@ -230,7 +252,12 @@ class ApiGateway:
     # -- lifecycle writes -------------------------------------------------
     def halt(self, api_key: str, job_id: str, requeue: bool = False):
         principal = self._require(api_key, WRITE)
-        self._owned_record(principal, job_id)
+        rec = self._owned_record(principal, job_id)
+        # a late/retried halt must never rewrite a terminal record
+        # (COMPLETED → HALTED would let resume() re-run a finished job)
+        if rec.status in TERMINAL:
+            raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                           f"{job_id} is already {rec.status.value}")
         with _meta_guard():
             self.p._halt_internal(job_id, requeue=requeue)
 
@@ -245,6 +272,9 @@ class ApiGateway:
 
     def cancel(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
-        self._owned_record(principal, job_id)
+        rec = self._owned_record(principal, job_id)
+        if rec.status in TERMINAL:
+            raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                           f"{job_id} is already {rec.status.value}")
         with _meta_guard():
             self.p._cancel_internal(job_id)

@@ -1,0 +1,663 @@
+"""JSON-over-HTTP transport for the v1 API tier (FfDL §3.2).
+
+FfDL's user-facing surface is a replicated REST tier behind a load
+balancer; this module serves our v1 envelope contract over a real wire
+using only the stdlib (``http.server``, threaded — no new dependencies).
+The full contract is written down in ``docs/api.md`` and pinned by
+``tests/test_docs_api.py``.
+
+Server side
+    :class:`ApiHttpServer` mounts the routes below over a platform's
+    ``LoadBalancer`` (so HTTP composes with replica crash-masking) with an
+    optional :class:`~repro.api.ratelimit.RateLimitedApi` front (per-tenant
+    token buckets + bounded in-flight gate → 429 with ``Retry-After``).
+    The simulation core is not thread-safe, so gateway calls are
+    serialized under ``server.lock``; throttled calls are rejected *before*
+    that lock, which is what keeps a flooding tenant cheap.
+
+Client side
+    :class:`HttpTransport` speaks the wire protocol and re-raises wire
+    errors as ``ApiError`` with the original stable code — the same
+    contract as the in-process transports, so
+    ``ApiClient(HttpTransport(url), key)`` behaves like
+    ``ApiClient(platform.api, key)``.
+
+Routes (``{job_id}`` is a path segment)::
+
+    GET    /v1/health                   liveness + replica counts (no auth)
+    POST   /v1/jobs                     submit        (201; 200 when deduped)
+    GET    /v1/jobs                     list_jobs     (tenant,status,cursor,limit)
+    GET    /v1/jobs/{job_id}            status → JobView
+    GET    /v1/jobs/{job_id}/history    status_history
+    GET    /v1/jobs/{job_id}/logs       logs          (cursor,limit)
+    GET    /v1/logs/search              search_logs   (q,job_id,cursor,limit)
+    POST   /v1/jobs/{job_id}/halt       halt          (body: {"requeue": bool})
+    POST   /v1/jobs/{job_id}/resume     resume
+    DELETE /v1/jobs/{job_id}            cancel
+
+Headers: ``Authorization: Bearer <key>`` on every authenticated route;
+``Idempotency-Key`` on submit; ``Retry-After`` on 429/503 responses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import http.client
+import json
+import math
+import socket
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib import parse as urlparse
+
+from repro.api.ratelimit import RateLimitConfig, RateLimitedApi
+from repro.api.types import (
+    API_VERSION,
+    ApiError,
+    ErrorCode,
+    JobView,
+    Page,
+    SubmitRequest,
+    SubmitResponse,
+)
+from repro.core.helpers import LogRecord
+from repro.core.types import JobManifest, JobStatus
+
+# Stable ErrorCode → HTTP status mapping. docs/api.md documents exactly
+# this table and tests/test_docs_api.py fails if they ever diverge (or if
+# a new code is added without a mapping).
+STATUS_OF = {
+    ErrorCode.UNAUTHENTICATED: 401,
+    ErrorCode.FORBIDDEN: 403,
+    ErrorCode.NOT_FOUND: 404,
+    ErrorCode.INVALID_ARGUMENT: 400,
+    ErrorCode.QUOTA_EXCEEDED: 429,
+    ErrorCode.FAILED_PRECONDITION: 409,
+    ErrorCode.CONFLICT: 409,
+    ErrorCode.UNAVAILABLE: 503,
+    ErrorCode.UNSUPPORTED_VERSION: 400,
+    ErrorCode.RATE_LIMITED: 429,
+}
+
+# Canonical route table (docs/api.md is checked against this).
+ROUTES = (
+    ("GET", "/v1/health"),
+    ("POST", "/v1/jobs"),
+    ("GET", "/v1/jobs"),
+    ("GET", "/v1/jobs/{job_id}"),
+    ("GET", "/v1/jobs/{job_id}/history"),
+    ("GET", "/v1/jobs/{job_id}/logs"),
+    ("GET", "/v1/logs/search"),
+    ("POST", "/v1/jobs/{job_id}/halt"),
+    ("POST", "/v1/jobs/{job_id}/resume"),
+    ("DELETE", "/v1/jobs/{job_id}"),
+)
+
+MAX_BODY_BYTES = 1 << 20  # a manifest is small; reject anything bigger
+# An oversized-but-bounded body is still drained (so the 400 envelope is
+# delivered cleanly and the keep-alive connection survives); beyond this
+# cap we stop reading and close the connection instead.
+MAX_DRAIN_BYTES = 4 * MAX_BODY_BYTES
+
+_MANIFEST_FIELDS = {f.name for f in dataclasses.fields(JobManifest)}
+
+
+# --------------------------------------------------------------------------
+# Wire codecs
+# --------------------------------------------------------------------------
+
+def manifest_from_wire(d) -> JobManifest:
+    if not isinstance(d, dict):
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       "manifest must be a JSON object")
+    unknown = sorted(set(d) - _MANIFEST_FIELDS)
+    if unknown:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"unknown manifest fields: {unknown}")
+    if "name" not in d:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT, "manifest.name is required")
+    try:
+        return JobManifest(**d)
+    except TypeError as e:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT, f"bad manifest: {e}")
+
+
+def error_to_wire(err: ApiError) -> dict:
+    return {"api_version": API_VERSION,
+            "error": {"code": err.code.value, "message": err.message,
+                      "details": err.details}}
+
+
+def _page_to_wire(page: Page, items) -> dict:
+    return {"api_version": API_VERSION, "items": items,
+            "next_cursor": page.next_cursor}
+
+
+def _search_rec_to_wire(rec) -> dict:
+    if isinstance(rec, LogRecord):
+        return dataclasses.asdict(rec)
+    return dict(rec)
+
+
+# --------------------------------------------------------------------------
+# Server
+# --------------------------------------------------------------------------
+
+class _Serialized:
+    """Serialize v1 verb calls under one lock (the sim is single-threaded).
+
+    Exposes the same nine-verb surface so it stacks under RateLimitedApi:
+    throttling happens before the lock, real work inside it.
+    """
+
+    _VERBS = ("submit", "status", "status_history", "list_jobs", "logs",
+              "search_logs", "halt", "resume", "cancel")
+
+    def __init__(self, inner, lock: threading.Lock):
+        self._inner = inner
+        self._lock = lock
+
+    def __getattr__(self, name):
+        if name not in self._VERBS:
+            raise AttributeError(name)
+        inner_fn = getattr(self._inner, name)
+
+        def call(*args, **kwargs):
+            with self._lock:
+                return inner_fn(*args, **kwargs)
+
+        return call
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    # One buffered write per response + no Nagle: without these, the
+    # status line / headers / body go out as separate small segments and
+    # loopback latency jumps to the delayed-ACK timer (~40ms tails).
+    wbufsize = -1
+    disable_nagle_algorithm = True
+    timeout = 30  # bound stuck reads; a stalled client can't pin a thread
+    ctx: "ApiHttpServer"  # bound per-server via a dynamic subclass
+
+    # -- plumbing ---------------------------------------------------------
+    def log_message(self, *_args):  # no stderr noise from the test suite
+        pass
+
+    def _send_json(self, status: int, payload: dict,
+                   extra_headers: Optional[dict] = None):
+        self._drain_unread_body()  # keep-alive: never leave request bytes
+        body = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra_headers or {}).items():
+            self.send_header(k, str(v))
+        if self.close_connection:  # e.g. an undrainable oversized body
+            self.send_header("Connection", "close")
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_error_envelope(self, err: ApiError):
+        headers = {}
+        if err.code == ErrorCode.RATE_LIMITED:
+            headers["Retry-After"] = max(1, math.ceil(err.retry_after or 0))
+        elif err.code == ErrorCode.UNAVAILABLE:
+            headers["Retry-After"] = 1
+        self._send_json(STATUS_OF[err.code], error_to_wire(err), headers)
+
+    def _api_key(self) -> str:
+        auth = self.headers.get("Authorization")
+        if auth is None:
+            raise ApiError(ErrorCode.UNAUTHENTICATED,
+                           "missing Authorization header")
+        scheme, _, key = auth.partition(" ")
+        if scheme.lower() != "bearer" or not key.strip():
+            raise ApiError(ErrorCode.UNAUTHENTICATED,
+                           "Authorization must be 'Bearer <api-key>'")
+        return key.strip()
+
+    def _content_length(self) -> int:
+        """Never trust the header: a negative value would turn
+        ``rfile.read`` into read-until-EOF (thread pinned until the client
+        hangs up), a non-numeric one would escape as ValueError."""
+        raw = self.headers.get("Content-Length") or "0"
+        try:
+            n = int(raw)
+        except ValueError:
+            n = -1
+        if n < 0:
+            self.close_connection = True  # can't know where the body ends
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"invalid Content-Length: {raw!r}")
+        return n
+
+    def _json_body(self) -> dict:
+        length = self._content_length()
+        if length > MAX_BODY_BYTES:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"request body exceeds {MAX_BODY_BYTES} bytes")
+        raw = self.rfile.read(length) if length else b""
+        self._body_read = True
+        if not raw:
+            return {}
+        try:
+            body = json.loads(raw)
+        except ValueError:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "request body is not valid JSON")
+        if not isinstance(body, dict):
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "request body must be a JSON object")
+        return body
+
+    @staticmethod
+    def _int_param(qs: dict, name: str) -> Optional[int]:
+        raw = qs.get(name, [None])[0]
+        if raw is None:
+            return None
+        try:
+            return int(raw)
+        except ValueError:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"{name} must be an integer, got {raw!r}")
+
+    # -- routing ----------------------------------------------------------
+    @staticmethod
+    def _known_route(method: str, parts: list) -> bool:
+        """ROUTES is the authoritative table: anything it doesn't name is a
+        404 *before* auth, so probing the route space needs no credential
+        and a typo'd URL isn't misreported as an auth failure."""
+        for m, template in ROUTES:
+            t_parts = [p for p in template.split("/") if p]
+            if m == method and len(t_parts) == len(parts) and all(
+                    tp.startswith("{") or tp == pp
+                    for tp, pp in zip(t_parts, parts)):
+                return True
+        return False
+
+    def _route(self, method: str):
+        split = urlparse.urlsplit(self.path)
+        qs = urlparse.parse_qs(split.query)
+        parts = [p for p in split.path.split("/") if p]
+        api = self.ctx.api
+
+        if not self._known_route(method, parts):
+            raise ApiError(ErrorCode.NOT_FOUND,
+                           f"no route for {method} {split.path}")
+        if method == "GET" and parts == ["v1", "health"]:
+            return self._health()
+
+        key = self._api_key()
+
+        if parts[:2] == ["v1", "jobs"]:
+            if method == "POST" and len(parts) == 2:
+                return self._submit(api, key)
+            if method == "GET" and len(parts) == 2:
+                return self._list(api, key, qs)
+            if len(parts) == 3:
+                job_id = parts[2]
+                if method == "GET":
+                    view = api.status(key, job_id)
+                    return self._send_json(200, dataclasses.asdict(view))
+                if method == "DELETE":
+                    api.cancel(key, job_id)
+                    return self._send_json(
+                        200, {"api_version": API_VERSION, "ok": True})
+            if len(parts) == 4:
+                job_id, tail = parts[2], parts[3]
+                if method == "GET" and tail == "history":
+                    hist = api.status_history(key, job_id)
+                    return self._send_json(
+                        200, {"api_version": API_VERSION,
+                              "items": [list(h) for h in hist]})
+                if method == "GET" and tail == "logs":
+                    page = api.logs(key, job_id,
+                                    cursor=qs.get("cursor", [None])[0],
+                                    limit=self._int_param(qs, "limit"))
+                    return self._send_json(
+                        200, _page_to_wire(page, page.items))
+                if method == "POST" and tail == "halt":
+                    body = self._json_body()
+                    api.halt(key, job_id,
+                             requeue=bool(body.get("requeue", False)))
+                    return self._send_json(
+                        200, {"api_version": API_VERSION, "ok": True})
+                if method == "POST" and tail == "resume":
+                    api.resume(key, job_id)
+                    return self._send_json(
+                        200, {"api_version": API_VERSION, "ok": True})
+        elif method == "GET" and parts == ["v1", "logs", "search"]:
+            query = qs.get("q", [None])[0]
+            if query is None:
+                raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                               "missing query parameter 'q'")
+            page = api.search_logs(key, query,
+                                   job_id=qs.get("job_id", [None])[0],
+                                   cursor=qs.get("cursor", [None])[0],
+                                   limit=self._int_param(qs, "limit"))
+            return self._send_json(200, _page_to_wire(
+                page, [_search_rec_to_wire(r) for r in page.items]))
+
+        raise ApiError(ErrorCode.NOT_FOUND,
+                       f"no route for {method} {split.path}")
+
+    def _health(self):
+        replicas = self.ctx.platform.api_replicas
+        alive = sum(1 for r in replicas if r.alive)
+        status = "ok" if alive == len(replicas) else \
+            ("degraded" if alive else "down")
+        self._send_json(200 if alive else 503,
+                        {"api_version": API_VERSION, "status": status,
+                         "replicas_alive": alive,
+                         "replicas_total": len(replicas)})
+
+    def _submit(self, api, key: str):
+        body = self._json_body()
+        if "manifest" not in body:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "body must carry a 'manifest' object")
+        # header wins over body: retried requests re-send the same header
+        idem = self.headers.get("Idempotency-Key") \
+            or body.get("idempotency_key")
+        req = SubmitRequest(
+            manifest=manifest_from_wire(body["manifest"]),
+            idempotency_key=idem,
+            api_version=body.get("api_version", API_VERSION))
+        resp = api.submit(key, req)
+        self._send_json(200 if resp.deduplicated else 201,
+                        dataclasses.asdict(resp))
+
+    def _list(self, api, key: str, qs: dict):
+        status_raw = qs.get("status", [None])[0]
+        status = None
+        if status_raw is not None:
+            try:
+                status = JobStatus(status_raw)
+            except ValueError:
+                raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                               f"unknown status {status_raw!r}")
+        kwargs = {"tenant": qs.get("tenant", [None])[0], "status": status,
+                  "cursor": qs.get("cursor", [None])[0]}
+        limit = self._int_param(qs, "limit")
+        if limit is not None:
+            kwargs["limit"] = limit
+        page = api.list_jobs(key, **kwargs)
+        self._send_json(200, _page_to_wire(
+            page, [dataclasses.asdict(v) for v in page.items]))
+
+    def _drain_unread_body(self):
+        """A route that never called ``_json_body`` (no-body verbs, or a
+        failure before the read) leaves the request body on the socket;
+        consume it or the next keep-alive request desyncs. A body too big
+        to be worth draining forces the connection closed instead — never
+        let the leftover bytes be parsed as the next request."""
+        if getattr(self, "_body_read", False):
+            return
+        self._body_read = True
+        try:
+            length = self._content_length()
+        except ApiError:
+            return  # connection already flagged for close
+        if 0 < length <= MAX_DRAIN_BYTES:
+            self.rfile.read(length)
+        elif length > MAX_DRAIN_BYTES:
+            self.close_connection = True
+
+    def _handle(self, method: str):
+        self._body_read = False
+        try:
+            self._route(method)
+        except ApiError as e:
+            self._send_error_envelope(e)
+        except Exception as e:  # noqa: BLE001 — never leak a traceback page
+            self._send_error_envelope(
+                ApiError(ErrorCode.UNAVAILABLE, f"internal error: {e}"))
+
+    def do_GET(self):
+        self._handle("GET")
+
+    def do_POST(self):
+        self._handle("POST")
+
+    def do_DELETE(self):
+        self._handle("DELETE")
+
+    # Unused verbs still get the v1 404 envelope, not a bare 501 page.
+    def do_PUT(self):
+        self._handle("PUT")
+
+    def do_PATCH(self):
+        self._handle("PATCH")
+
+
+class ApiHttpServer:
+    """Threaded stdlib HTTP server over a platform's API tier.
+
+    ``rate_limit`` installs a :class:`RateLimitedApi` front (per-tenant
+    token buckets + bounded in-flight gate). ``lock`` serializes all
+    platform access — hold it when ticking the simulation from another
+    thread (``with server.lock: platform.tick()``).
+    """
+
+    def __init__(self, platform, host: str = "127.0.0.1", port: int = 0,
+                 rate_limit: Optional[RateLimitConfig] = None,
+                 per_tenant: Optional[dict] = None):
+        self.platform = platform
+        self.lock = threading.Lock()
+        serialized = _Serialized(platform.api, self.lock)
+        self.ratelimiter = None
+        if rate_limit is not None:
+            self.ratelimiter = RateLimitedApi(serialized, platform.auth,
+                                              rate_limit, per_tenant)
+        self.api = self.ratelimiter or serialized
+        handler = type("BoundHandler", (_Handler,), {"ctx": self})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_port
+
+    @property
+    def base_url(self) -> str:
+        host = self._httpd.server_address[0]
+        return f"http://{host}:{self.port}"
+
+    def start(self) -> "ApiHttpServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        kwargs={"poll_interval": 0.05},
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def __enter__(self) -> "ApiHttpServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+# --------------------------------------------------------------------------
+# Client transport
+# --------------------------------------------------------------------------
+
+class HttpTransport:
+    """v1 verb surface over the wire — drop-in for the in-process
+    ``LoadBalancer`` anywhere a transport is expected (``ApiClient``,
+    benchmarks, the ``ffdl`` CLI).
+
+    Connections are persistent (HTTP/1.1 keep-alive) and thread-local, so
+    concurrent tenant clients measure the API tier — not per-request TCP
+    and thread churn. A connection the server dropped is retried once on a
+    fresh socket before surfacing UNAVAILABLE.
+    """
+
+    def __init__(self, base_url: str, timeout: float = 10.0):
+        self.base_url = base_url.rstrip("/")
+        split = urlparse.urlsplit(self.base_url)
+        if split.scheme != "http" or split.hostname is None:
+            raise ValueError(f"expected an http:// URL, got {base_url!r}")
+        self._host = split.hostname
+        self._port = split.port or 80
+        self.timeout = timeout
+        self._local = threading.local()
+
+    # -- low-level --------------------------------------------------------
+    def _drop_conn(self):
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+        self._local.conn = None
+
+    def _conn(self) -> http.client.HTTPConnection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = http.client.HTTPConnection(self._host, self._port,
+                                              timeout=self.timeout)
+            conn.connect()
+            conn.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._local.conn = conn
+        return conn
+
+    def _request(self, method: str, path: str, api_key: Optional[str] = None,
+                 body: Optional[dict] = None, query: Optional[dict] = None,
+                 headers: Optional[dict] = None,
+                 allow_error_status: bool = False) -> tuple[int, dict]:
+        if query:
+            qs = {k: v for k, v in query.items() if v is not None}
+            if qs:
+                path += "?" + urlparse.urlencode(qs)
+        data = json.dumps(body).encode() if body is not None else None
+        hdrs = {"Content-Type": "application/json"}
+        if api_key is not None:
+            hdrs["Authorization"] = f"Bearer {api_key}"
+        for k, v in (headers or {}).items():
+            if v is not None:
+                hdrs[k] = v
+
+        # Retry policy: a reused keep-alive socket may have been closed by
+        # the server since the last call; such failures are retried once on
+        # a fresh socket — but ONLY when the request cannot have executed
+        # (send-phase failure) or the verb is idempotent (GET). A write
+        # that succeeded followed by a read failure on a mutating verb is
+        # surfaced as UNAVAILABLE instead of silently re-executing it.
+        status = payload = None
+        for attempt in (0, 1):
+            reused = getattr(self._local, "conn", None) is not None
+            conn = self._conn()
+            try:
+                conn.request(method, path, body=data, headers=hdrs)
+            except (http.client.HTTPException, OSError) as e:
+                self._drop_conn()
+                if reused and attempt == 0:
+                    continue  # stale keep-alive socket; nothing was served
+                raise ApiError(ErrorCode.UNAVAILABLE,
+                               f"cannot reach API server: {e}") from None
+            try:
+                resp = conn.getresponse()
+                status, payload = resp.status, resp.read()
+                break
+            except (http.client.HTTPException, OSError) as e:
+                self._drop_conn()
+                if reused and attempt == 0 and method == "GET":
+                    continue
+                raise ApiError(
+                    ErrorCode.UNAVAILABLE,
+                    f"connection lost awaiting response: {e}") from None
+
+        if status >= 400 and not allow_error_status:
+            try:
+                wire = json.loads(payload)["error"]
+                if not isinstance(wire, dict) or "code" not in wire:
+                    wire = None
+            except (ValueError, KeyError, TypeError):
+                wire = None
+            if wire is None:
+                err = ApiError(ErrorCode.UNAVAILABLE,
+                               f"HTTP {status}: undecodable error body")
+            else:
+                try:
+                    code = ErrorCode(wire["code"])
+                    extra = {}
+                except ValueError:
+                    # a newer server's code this client doesn't know: keep
+                    # the raw string and fall back to a NON-retryable code
+                    # (UNAVAILABLE would invite blind re-execution)
+                    code = ErrorCode.FAILED_PRECONDITION
+                    extra = {"wire_code": wire["code"]}
+                err = ApiError(code, wire.get("message", ""),
+                               **{**wire.get("details", {}), **extra})
+            err.details.setdefault("http_status", status)
+            raise err
+        try:
+            return status, json.loads(payload or b"{}")
+        except ValueError as e:
+            raise ApiError(ErrorCode.UNAVAILABLE,
+                           f"undecodable response body: {e}") from None
+
+    def health(self) -> dict:
+        """Health is special: a fully-down tier answers 503 with a valid
+        health body (replica counts included), not an error envelope."""
+        try:
+            return self._request("GET", "/v1/health",
+                                 allow_error_status=True)[1]
+        except ApiError as e:
+            return {"status": "down", "error": e.message,
+                    **{k: v for k, v in e.details.items()}}
+
+    # -- full v1 surface --------------------------------------------------
+    def submit(self, api_key, req: SubmitRequest) -> SubmitResponse:
+        body = {"manifest": dataclasses.asdict(req.manifest),
+                "api_version": req.api_version}
+        _, d = self._request("POST", "/v1/jobs", api_key, body=body,
+                             headers={"Idempotency-Key": req.idempotency_key})
+        return SubmitResponse(**d)
+
+    def status(self, api_key, job_id) -> JobView:
+        _, d = self._request("GET", f"/v1/jobs/{job_id}", api_key)
+        return JobView(**d)
+
+    def status_history(self, api_key, job_id) -> list:
+        _, d = self._request("GET", f"/v1/jobs/{job_id}/history", api_key)
+        return [tuple(h) for h in d["items"]]
+
+    def list_jobs(self, api_key, tenant=None, status=None, cursor=None,
+                  limit=None) -> Page:
+        _, d = self._request(
+            "GET", "/v1/jobs", api_key,
+            query={"tenant": tenant,
+                   "status": getattr(status, "value", status),
+                   "cursor": cursor, "limit": limit})
+        return Page(items=[JobView(**v) for v in d["items"]],
+                    next_cursor=d["next_cursor"])
+
+    def logs(self, api_key, job_id, cursor=None, limit=None) -> Page:
+        _, d = self._request("GET", f"/v1/jobs/{job_id}/logs", api_key,
+                             query={"cursor": cursor, "limit": limit})
+        return Page(items=d["items"], next_cursor=d["next_cursor"])
+
+    def search_logs(self, api_key, query, job_id=None, cursor=None,
+                    limit=None) -> Page:
+        _, d = self._request("GET", "/v1/logs/search", api_key,
+                             query={"q": query, "job_id": job_id,
+                                    "cursor": cursor, "limit": limit})
+        return Page(items=[LogRecord(**r) for r in d["items"]],
+                    next_cursor=d["next_cursor"])
+
+    def halt(self, api_key, job_id, requeue: bool = False):
+        self._request("POST", f"/v1/jobs/{job_id}/halt", api_key,
+                      body={"requeue": requeue})
+
+    def resume(self, api_key, job_id):
+        self._request("POST", f"/v1/jobs/{job_id}/resume", api_key, body={})
+
+    def cancel(self, api_key, job_id):
+        self._request("DELETE", f"/v1/jobs/{job_id}", api_key)

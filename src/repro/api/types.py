@@ -14,10 +14,14 @@ This module is the wire contract for our reproduction of that tier:
     ``next_cursor`` — cursors stay stable under concurrent submits because
     they key on monotonically increasing ids/offsets, not list positions.
 
-``ApiError.to_legacy()`` maps codes back onto the raw Python exceptions the
-pre-gateway facade raised (``ValueError``/``KeyError``/``PermissionError``/
-``ConnectionError``) so existing callers of ``FfDLPlatform`` keep working
-during the deprecation window.
+The same contract is served over two transports: in-process (the
+``LoadBalancer`` / ``ApiGateway`` objects) and JSON-over-HTTP
+(:mod:`repro.api.http`), where every ``ErrorCode`` maps to a stable HTTP
+status (see ``repro.api.http.STATUS_OF`` and ``docs/api.md``).
+
+The pre-gateway raw-exception facade (``ApiError.to_legacy()`` plus the
+``FfDLPlatform.submit/status/...`` shims) was removed once every caller
+migrated to tenant-scoped keys; clients now always see ``ApiError``.
 """
 
 from __future__ import annotations
@@ -45,22 +49,14 @@ class ErrorCode(str, Enum):
     #                                            different payload
     UNAVAILABLE = "UNAVAILABLE"                # replica/metastore down; retryable
     UNSUPPORTED_VERSION = "UNSUPPORTED_VERSION"
+    RATE_LIMITED = "RATE_LIMITED"              # per-tenant backpressure (429);
+    #                                            details carry ``retry_after``
 
 
 # Codes the load balancer may transparently retry on another replica.
+# RATE_LIMITED is deliberately NOT here: it is raised by the admission
+# front *before* the balancer, and failing over would defeat backpressure.
 RETRYABLE = {ErrorCode.UNAVAILABLE}
-
-_LEGACY = {
-    ErrorCode.UNAUTHENTICATED: PermissionError,
-    ErrorCode.FORBIDDEN: PermissionError,
-    ErrorCode.NOT_FOUND: KeyError,
-    ErrorCode.INVALID_ARGUMENT: ValueError,
-    ErrorCode.QUOTA_EXCEEDED: PermissionError,
-    ErrorCode.FAILED_PRECONDITION: ValueError,
-    ErrorCode.CONFLICT: ValueError,
-    ErrorCode.UNAVAILABLE: ConnectionError,
-    ErrorCode.UNSUPPORTED_VERSION: ValueError,
-}
 
 
 class ApiError(Exception):
@@ -76,11 +72,10 @@ class ApiError(Exception):
     def retryable(self) -> bool:
         return self.code in RETRYABLE
 
-    def to_legacy(self) -> Exception:
-        """Equivalent raw exception of the pre-gateway facade."""
-        exc = _LEGACY[self.code](self.message)
-        exc.__cause__ = self
-        return exc
+    @property
+    def retry_after(self) -> Optional[float]:
+        """Seconds the client should wait before retrying (RATE_LIMITED)."""
+        return self.details.get("retry_after")
 
 
 # --------------------------------------------------------------------------

@@ -9,20 +9,21 @@ structured ``ApiError`` codes, client-supplied idempotency keys on
 cursor-paginated listings. Crash any single replica and idempotent calls
 still succeed (``benchmarks/api_tier.py`` measures this recovery claim).
 
-This class now plays two roles:
+This class is the **control plane**: it owns and ticks every microservice:
+chaos → cluster (heartbeats/evictions) → LCM (reconcile) → guardians
+(deploy/monitor) → admission (preemption) → scheduler (gang placement) →
+metrics. Internal lifecycle actions (``_halt_internal``/
+``_resume_internal``, used by admission preemption and requeue timers)
+bypass the API tier: they must keep working while every gateway replica
+is down.
 
-  * **control plane** — owns and ticks every microservice: chaos → cluster
-    (heartbeats/evictions) → LCM (reconcile) → guardians (deploy/monitor)
-    → admission (preemption) → scheduler (gang placement) → metrics.
-    Internal lifecycle actions (``_halt_internal``/``_resume_internal``,
-    used by admission preemption and requeue timers) bypass the API tier:
-    they must keep working while every gateway replica is down;
-  * **deprecated facade** — ``submit``/``status``/``logs``/``halt``/… are
-    thin shims that route through the load balancer with an operator key
-    and translate ``ApiError`` back to the legacy raw exceptions
-    (``ValueError``/``KeyError``/``PermissionError``/``ConnectionError``).
-    New code should call ``platform.api`` (the balancer) or a single
-    replica directly with a tenant-scoped key from ``platform.auth``.
+All *user-facing* operations go through the API tier with a tenant-scoped
+key — in-process via ``platform.api`` (the balancer), ergonomically via
+``ApiClient.for_platform(platform, tenant)``, or over the wire via
+``repro.api.http``. The pre-gateway raw-exception facade
+(``platform.submit()`` & friends, which translated ``ApiError`` back to
+``ValueError``/``KeyError``/...) is retired: every caller sees the stable
+``ApiError`` codes now.
 
 API-layer semantics reproduced (all via the gateway):
   * ``submit`` validates, persists to the metastore **before acking** and
@@ -43,10 +44,9 @@ from __future__ import annotations
 import itertools
 from typing import Optional
 
-from repro.api.auth import ALL_TENANTS, AuthService
+from repro.api.auth import AuthService
 from repro.api.gateway import ApiGateway
 from repro.api.lb import LoadBalancer
-from repro.api.types import ApiError, SubmitRequest
 from repro.core.admission import AdmissionController
 from repro.core.chaos import ChaosConfig, ChaosMonkey
 from repro.core.cluster import ClusterModel
@@ -58,7 +58,6 @@ from repro.core.metastore import MetaStore
 from repro.core.scheduler import GangScheduler, K8sDefaultScheduler
 from repro.core.types import (
     EventLog,
-    JobManifest,
     JobStatus,
     SimClock,
     TERMINAL,
@@ -101,8 +100,6 @@ class FfDLPlatform:
         self._job_ctr = itertools.count(1)
         # ------------------------------------------------ API tier (§3.2)
         self.auth = AuthService(seed=seed)
-        # operator credential backing the deprecated facade methods below
-        self._root_key = self.auth.issue_key(ALL_TENANTS)
         self.api_replicas = [
             ApiGateway(self, self.auth, replica_id=f"api-{i}")
             for i in range(max(1, n_api_replicas))]
@@ -126,66 +123,6 @@ class FfDLPlatform:
         for r in targets:
             if not r.alive:
                 r.restart()
-
-    # --------------------------------------- deprecated facade (legacy API)
-    # Thin shims over the gateway tier; they keep the seed's raw-exception
-    # contract. New code: use ``platform.api`` with a tenant-scoped key.
-    def submit(self, manifest: JobManifest,
-               idempotency_key: Optional[str] = None) -> str:
-        """Durable-before-ack submission (§3.2)."""
-        try:
-            return self.api.submit(
-                self._root_key,
-                SubmitRequest(manifest=manifest,
-                              idempotency_key=idempotency_key)).job_id
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def status(self, job_id: str) -> JobStatus:
-        try:
-            return JobStatus(self.api.status(self._root_key, job_id).status)
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def status_history(self, job_id: str) -> list:
-        try:
-            return self.api.status_history(self._root_key, job_id)
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def logs(self, job_id: str) -> list[str]:
-        try:
-            return self.api.logs(self._root_key, job_id).items
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def search_logs(self, query: str, job_id: Optional[str] = None):
-        try:
-            return self.api.search_logs(self._root_key, query,
-                                        job_id=job_id).items
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def halt(self, job_id: str, requeue: bool = False):
-        """HALT: checkpoint and stop; optionally auto-resume (preemption)."""
-        try:
-            self.api.halt(self._root_key, job_id, requeue=requeue)
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def resume(self, job_id: str):
-        """RESUME a HALTED job: fresh deployment, learners restore from the
-        latest checkpoint automatically."""
-        try:
-            self.api.resume(self._root_key, job_id)
-        except ApiError as e:
-            raise e.to_legacy()
-
-    def cancel(self, job_id: str):
-        try:
-            self.api.cancel(self._root_key, job_id)
-        except ApiError as e:
-            raise e.to_legacy()
 
     # --------------------------------------------- internal control plane
     # These bypass the API tier: admission preemption and requeue timers

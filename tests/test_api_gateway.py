@@ -5,6 +5,7 @@ and load-balancer failover across stateless replicas."""
 import pytest
 
 from repro.api import (
+    ApiClient,
     ApiError,
     ErrorCode,
     LoadBalancer,
@@ -149,7 +150,7 @@ def test_logs_pagination_round_trip(p):
     j = p.api.submit(key, SubmitRequest(
         manifest=sim_job(tenant="team-a", sim_duration=120))).job_id
     assert p.run_until_terminal([j], max_sim_s=3000)
-    full = p.logs(j)
+    full = ApiClient(p.api, key).logs(j)
     paged, cursor = [], None
     while True:
         page = p.api.logs(key, j, cursor=cursor, limit=2)
@@ -172,8 +173,9 @@ def test_search_logs_tenant_scoped(p):
             p.log_index.append(LogRecord(0.0, jid, 0, f"step {i} loss=1.0"))
     hits_a = p.api.search_logs(ka, "loss").items
     assert hits_a and all(r.job_id == ja for r in hits_a)
-    # admin (operator facade) sees both tenants
-    assert {r.job_id for r in p.search_logs("loss")} == {ja, jb}
+    # an operator ("*"-tenant) client sees both tenants
+    ops = ApiClient.for_platform(p)
+    assert {r.job_id for r in ops.search_logs("loss")} == {ja, jb}
 
 
 def test_invalid_limit_rejected_with_stable_code(p):
@@ -259,42 +261,121 @@ def test_single_replica_gateway_direct():
     assert ei.value.code == ErrorCode.UNAVAILABLE
 
 
-# ------------------------------------- legacy facade bugfixes (satellites)
+# -------------------------------- retired facade / ApiClient (satellites)
+
+
+def test_legacy_facade_shims_are_gone():
+    """The pre-gateway raw-exception shims are retired: FfDLPlatform no
+    longer exposes user-facing verbs; clients go through the API tier."""
+    for verb in ("submit", "status", "status_history", "logs", "search_logs",
+                 "halt", "resume", "cancel"):
+        assert not hasattr(FfDLPlatform, verb), verb
+    from repro.api import ApiError as E
+    assert not hasattr(E, "to_legacy")
 
 
 def test_resume_requires_api_up():
-    """resume() used to skip the API check and worked while the tier was
-    down; it must fail like every other endpoint now."""
+    """resume() must fail with a stable retryable code while the whole
+    API tier is down, like every other endpoint."""
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=300))
+    c = ApiClient.for_platform(p)
+    j = c.submit(sim_job(sim_duration=300))
     for _ in range(100):
         p.tick()
         if p.meta.get(j).status == JobStatus.PROCESSING:
             break
-    p.halt(j)
+    c.halt(j)
     p.run_for(30)
-    assert p.status(j) == JobStatus.HALTED
+    assert c.status(j) == JobStatus.HALTED
     p.api_crash()
-    with pytest.raises(ConnectionError):
-        p.resume(j)
+    with pytest.raises(ApiError) as ei:
+        c.resume(j)
+    assert ei.value.code == ErrorCode.UNAVAILABLE
     p.api_restart()
-    p.resume(j)
+    c.resume(j)
     assert p.run_until_terminal([j], max_sim_s=5000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
 
 
-def test_unknown_job_raises_keyerror_on_all_endpoints():
+def test_unknown_job_not_found_on_all_endpoints():
     """status_history() used to AttributeError on None; halt() leaked a
     metastore internal KeyError. All endpoints: stable NOT_FOUND."""
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    for call in (lambda: p.status("job-nope"),
-                 lambda: p.status_history("job-nope"),
-                 lambda: p.logs("job-nope"),
-                 lambda: p.halt("job-nope"),
-                 lambda: p.resume("job-nope"),
-                 lambda: p.cancel("job-nope")):
-        with pytest.raises(KeyError):
+    c = ApiClient.for_platform(p)
+    for call in (lambda: c.status("job-nope"),
+                 lambda: c.status_history("job-nope"),
+                 lambda: c.logs("job-nope"),
+                 lambda: c.halt("job-nope"),
+                 lambda: c.resume("job-nope"),
+                 lambda: c.cancel("job-nope")):
+        with pytest.raises(ApiError) as ei:
             call()
+        assert ei.value.code == ErrorCode.NOT_FOUND
+
+
+def test_oversized_page_limit_rejected(p):
+    key = p.auth.issue_key("team-a")
+    with pytest.raises(ApiError) as ei:
+        p.api.list_jobs(key, limit=10 ** 6)
+    assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+def test_malformed_list_cursor_rejected(p):
+    """A garbage cursor must be a stable error, not a silent empty page
+    (it would otherwise compare lexically against job ids)."""
+    key = p.auth.issue_key("team-a")
+    p.api.submit(key, SubmitRequest(manifest=sim_job(tenant="team-a")))
+    for bad in ("zzz-garbage", "job-", "42"):
+        with pytest.raises(ApiError) as ei:
+            p.api.list_jobs(key, cursor=bad)
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+def test_logs_without_limit_still_paged(p):
+    """Omitting limit means one MAX_PAGE-bounded page, never the whole
+    stream in a single call (multi-tenant fairness)."""
+    from repro.api.gateway import MAX_PAGE
+    from repro.core.helpers import LogRecord
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    for i in range(MAX_PAGE + 5):
+        p.log_index.append(LogRecord(0.0, j, 0, f"line {i}"))
+    page = p.api.logs(key, j)
+    assert len(page.items) == MAX_PAGE
+    assert page.next_cursor is not None
+    # ApiClient still reassembles the full stream by following cursors
+    assert len(ApiClient(p.api, key).logs(j)) == MAX_PAGE + 5
+
+
+def test_search_logs_auto_paginates_past_max_page(p):
+    from repro.api.gateway import MAX_PAGE
+    from repro.core.helpers import LogRecord
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    for i in range(MAX_PAGE + 3):
+        p.log_index.append(LogRecord(0.0, j, 0, f"needle {i}"))
+    # one transport call is MAX_PAGE-bounded...
+    page = p.api.search_logs(key, "needle")
+    assert len(page.items) == MAX_PAGE and page.next_cursor is not None
+    # ...but the client follows cursors to completion
+    assert len(ApiClient(p.api, key).search_logs("needle")) == MAX_PAGE + 3
+
+
+def test_halt_and_cancel_on_terminal_job_rejected():
+    """A late/retried halt or cancel must not rewrite a terminal record
+    (COMPLETED -> HALTED would let resume() re-run a finished job)."""
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    c = ApiClient.for_platform(p)
+    j = c.submit(sim_job(sim_duration=60))
+    assert p.run_until_terminal([j], max_sim_s=2000)
+    assert c.status(j) == JobStatus.COMPLETED
+    for call in (lambda: c.halt(j), lambda: c.cancel(j)):
+        with pytest.raises(ApiError) as ei:
+            call()
+        assert ei.value.code == ErrorCode.FAILED_PRECONDITION
+    assert c.status(j) == JobStatus.COMPLETED  # record untouched
 
 
 def test_preemption_requeue_works_while_api_down():
@@ -303,16 +384,18 @@ def test_preemption_requeue_works_while_api_down():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)  # 8 chips
     p.admission.register_tenant("a", quota_chips=4)
     p.admission.register_tenant("b", quota_chips=4)
+    ca = ApiClient.for_platform(p, tenant="a")
+    cb = ApiClient.for_platform(p, tenant="b")
     # tenant a runs over quota opportunistically (8 chips on idle cluster)
-    ja = p.submit(sim_job(name="big-a", tenant="a", n_learners=2,
-                          chips_per_learner=4, sim_duration=600))
+    ja = ca.submit(sim_job(name="big-a", tenant="a", n_learners=2,
+                           chips_per_learner=4, sim_duration=600))
     p.run_for(60)
     # tenant b claims its quota back; the API tier being down must not matter
-    jb = p.submit(sim_job(name="b", tenant="b", n_learners=1,
-                          chips_per_learner=4, sim_duration=60))
+    jb = cb.submit(sim_job(name="b", tenant="b", n_learners=1,
+                           chips_per_learner=4, sim_duration=60))
     p.api_crash()
     p.run_for(200)
     p.api_restart()
     assert p.events.count("preempt") >= 1
     assert p.run_until_terminal([jb], max_sim_s=4000)
-    assert p.status(jb) == JobStatus.COMPLETED
+    assert cb.status(jb) == JobStatus.COMPLETED

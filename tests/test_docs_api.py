@@ -1,0 +1,83 @@
+"""docs/api.md is the wire contract — these tests fail the build when the
+code and the document drift: every route, every ErrorCode, and the exact
+code→HTTP-status table must match `repro.api.http`.
+"""
+
+import pathlib
+import re
+
+from repro.api import ErrorCode, ROUTES, STATUS_OF
+
+DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
+ARCH = DOCS.parent / "architecture.md"
+README = DOCS.parent.parent / "README.md"
+
+
+def _api_md() -> str:
+    assert DOCS.exists(), "docs/api.md is part of the v1 contract"
+    return DOCS.read_text()
+
+
+def test_status_of_covers_every_error_code():
+    """Adding an ErrorCode without choosing its HTTP status is a bug."""
+    assert set(STATUS_OF) == set(ErrorCode)
+
+
+def test_every_error_code_documented_with_correct_status():
+    """The docs table `| `CODE` | status | ...` must equal STATUS_OF —
+    not just mention the codes, but map them to the same numbers."""
+    doc = _api_md()
+    rows = dict(re.findall(r"^\| `([A-Z_]+)` \| (\d{3}) \|", doc,
+                           flags=re.MULTILINE))
+    documented = {code: int(status) for code, status in rows.items()}
+    expected = {c.value: s for c, s in STATUS_OF.items()}
+    assert documented == expected
+
+
+def test_every_route_documented():
+    doc = _api_md()
+    for method, path in ROUTES:
+        assert re.search(rf"`{method} {re.escape(path)}`", doc), \
+            f"route {method} {path} missing from docs/api.md"
+
+
+def test_no_phantom_routes_documented():
+    """Docs must not advertise `VERB /v1/...` routes the server lacks."""
+    doc = _api_md()
+    advertised = set(re.findall(r"`(GET|POST|PUT|PATCH|DELETE) (/v1/[^` ]*)`",
+                                doc))
+    assert advertised <= set(ROUTES), advertised - set(ROUTES)
+
+
+def test_headers_documented():
+    doc = _api_md()
+    for header in ("Authorization", "Idempotency-Key", "Retry-After",
+                   "Content-Type"):
+        assert header in doc, f"header {header} missing from docs/api.md"
+
+
+def test_pagination_semantics_documented():
+    doc = _api_md()
+    for term in ("next_cursor", "opaque", "MAX_PAGE"):
+        assert term in doc
+
+
+def test_architecture_doc_maps_api_modules():
+    """docs/architecture.md must reference every repro.api module and be
+    linked from the top-level README."""
+    assert ARCH.exists()
+    arch = ARCH.read_text()
+    api_dir = pathlib.Path(__file__).resolve().parent.parent / \
+        "src" / "repro" / "api"
+    for mod in sorted(api_dir.glob("*.py")):
+        if mod.name in ("__init__.py", "cli.py", "client.py",
+                        "types.py", "auth.py"):
+            continue  # named via their classes below
+        assert f"api/{mod.name}" in arch, f"{mod.name} missing"
+    for name in ("ApiGateway", "LoadBalancer", "RateLimitedApi",
+                 "ApiHttpServer", "ApiClient", "ffdl"):
+        assert name in arch, f"{name} missing from architecture.md"
+    assert README.exists(), "top-level README.md must exist"
+    readme = README.read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/api.md" in readme

@@ -1,0 +1,434 @@
+"""The v1 contract over a REAL HTTP server: wire envelopes, header auth,
+idempotency through concurrent sockets, stable error→status mapping, 429
+backpressure with Retry-After, and the `ffdl` CLI speaking only the wire.
+"""
+
+import http.client
+import json
+import threading
+
+import pytest
+
+from repro.api import (
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    HttpTransport,
+    RateLimitConfig,
+    STATUS_OF,
+    SubmitRequest,
+)
+from repro.core import FfDLPlatform, JobManifest, JobStatus
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+@pytest.fixture
+def served():
+    """(platform, server, transport, tenant key) around a live server."""
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    server = ApiHttpServer(p)
+    with server:
+        yield p, server, HttpTransport(server.base_url), \
+            p.auth.issue_key("team-a")
+
+
+def _raw(server, method, path, body=None, headers=None):
+    """Raw request, bypassing HttpTransport — for malformed payloads and
+    header assertions."""
+    conn = http.client.HTTPConnection("127.0.0.1", server.port, timeout=10)
+    try:
+        conn.request(method, path, body=body, headers=headers or {})
+        resp = conn.getresponse()
+        return resp.status, dict(resp.getheaders()), resp.read()
+    finally:
+        conn.close()
+
+
+def _wire_code(payload: bytes) -> str:
+    return json.loads(payload)["error"]["code"]
+
+
+# ----------------------------------------------------------- edge cases
+
+
+def test_malformed_json_body_is_invalid_argument(served):
+    p, server, _, key = served
+    status, _, payload = _raw(server, "POST", "/v1/jobs",
+                              body=b"{not json!",
+                              headers={"Authorization": f"Bearer {key}"})
+    assert status == 400
+    assert _wire_code(payload) == "INVALID_ARGUMENT"
+
+
+def test_missing_auth_header_is_401(served):
+    _, server, _, _ = served
+    status, _, payload = _raw(server, "GET", "/v1/jobs")
+    assert status == 401
+    assert _wire_code(payload) == "UNAUTHENTICATED"
+
+
+def test_non_bearer_auth_scheme_is_401(served):
+    _, server, _, key = served
+    status, _, payload = _raw(server, "GET", "/v1/jobs",
+                              headers={"Authorization": f"Basic {key}"})
+    assert status == 401
+    assert _wire_code(payload) == "UNAUTHENTICATED"
+
+
+def test_unknown_key_is_401(served):
+    _, _, transport, _ = served
+    with pytest.raises(ApiError) as ei:
+        transport.list_jobs("ffdl-bogus")
+    assert ei.value.code == ErrorCode.UNAUTHENTICATED
+    assert ei.value.details["http_status"] == 401
+
+
+def test_oversized_limit_is_400(served):
+    _, _, transport, key = served
+    with pytest.raises(ApiError) as ei:
+        transport.list_jobs(key, limit=10 ** 6)
+    assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+    assert ei.value.details["http_status"] == 400
+
+
+def test_non_integer_limit_is_400(served):
+    _, server, _, key = served
+    status, _, payload = _raw(server, "GET", "/v1/jobs?limit=lots",
+                              headers={"Authorization": f"Bearer {key}"})
+    assert status == 400
+    assert _wire_code(payload) == "INVALID_ARGUMENT"
+
+
+def test_unknown_route_is_404_envelope_even_without_auth(served):
+    _, server, _, _ = served
+    for method, path in (("GET", "/nope"), ("GET", "/v1/nope"),
+                         ("PUT", "/v1/jobs"), ("POST", "/v1/health")):
+        status, _, payload = _raw(server, method, path)
+        assert status == 404, (method, path)
+        assert _wire_code(payload) == "NOT_FOUND"
+
+
+def test_unknown_job_is_404(served):
+    _, _, transport, key = served
+    with pytest.raises(ApiError) as ei:
+        transport.status(key, "job-nope")
+    assert ei.value.code == ErrorCode.NOT_FOUND
+    assert ei.value.details["http_status"] == 404
+
+
+def test_cross_tenant_access_is_403(served):
+    p, _, transport, key = served
+    other = p.auth.issue_key("team-b")
+    job = transport.submit(key, SubmitRequest(manifest=sim_job())).job_id
+    with pytest.raises(ApiError) as ei:
+        transport.halt(other, job)
+    assert ei.value.code == ErrorCode.FORBIDDEN
+    assert ei.value.details["http_status"] == 403
+
+
+def test_unsupported_version_is_400(served):
+    _, _, transport, key = served
+    with pytest.raises(ApiError) as ei:
+        transport.submit(key, SubmitRequest(manifest=sim_job(),
+                                            api_version="v9"))
+    assert ei.value.code == ErrorCode.UNSUPPORTED_VERSION
+    assert ei.value.details["http_status"] == 400
+
+
+def test_oversized_body_rejected_without_desyncing_keepalive(served):
+    """A >1MiB body is refused with a 400 envelope, fully drained, and the
+    keep-alive connection stays usable — the leftover bytes must never be
+    parsed as the next request."""
+    _, server, _, key = served
+    big = b'{"manifest": {"name": "' + b"x" * (1 << 21) + b'"}}'
+    conn = http.client.HTTPConnection("127.0.0.1", server.port, timeout=10)
+    try:
+        conn.request("POST", "/v1/jobs", body=big,
+                     headers={"Authorization": f"Bearer {key}"})
+        resp = conn.getresponse()
+        payload = resp.read()
+        assert resp.status == 400
+        assert _wire_code(payload) == "INVALID_ARGUMENT"
+        # same connection, next request: still a clean v1 envelope
+        conn.request("GET", "/v1/jobs",
+                     headers={"Authorization": f"Bearer {key}"})
+        resp2 = conn.getresponse()
+        assert resp2.status == 200
+        assert json.loads(resp2.read())["items"] == []
+    finally:
+        conn.close()
+
+
+def test_bogus_content_length_rejected_cleanly(served):
+    """Negative or non-numeric Content-Length must produce a 400 envelope
+    and a closed connection — never a blocked thread or a raw traceback."""
+    _, server, _, key = served
+    import socket as socket_mod
+    for bad in ("-1", "abc"):
+        s = socket_mod.create_connection(("127.0.0.1", server.port),
+                                         timeout=10)
+        try:
+            s.sendall((f"POST /v1/jobs HTTP/1.1\r\nHost: t\r\n"
+                       f"Authorization: Bearer {key}\r\n"
+                       f"Content-Length: {bad}\r\n\r\n").encode())
+            resp = b""
+            while True:
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                resp += chunk
+            assert b" 400 " in resp.split(b"\r\n", 1)[0], bad
+            assert b"INVALID_ARGUMENT" in resp, bad
+        finally:
+            s.close()
+
+
+def test_health_body_survives_total_outage(served):
+    """A fully-down tier answers 503 with a real health body — the client
+    must surface the replica counts, not an 'undecodable error'."""
+    p, _, transport, _ = served
+    p.api_crash()
+    h = transport.health()
+    assert h["status"] == "down"
+    assert h["replicas_alive"] == 0 and h["replicas_total"] == 3
+    assert "error" not in h
+    p.api_restart()
+
+
+def test_unknown_manifest_field_rejected(served):
+    _, server, _, key = served
+    body = json.dumps({"manifest": {"name": "x", "evil_field": 1}})
+    status, _, payload = _raw(server, "POST", "/v1/jobs", body=body,
+                              headers={"Authorization": f"Bearer {key}"})
+    assert status == 400
+    assert _wire_code(payload) == "INVALID_ARGUMENT"
+
+
+# -------------------------------------------------- idempotency over HTTP
+
+
+def test_concurrent_submits_same_idempotency_key_one_job(served):
+    """N sockets race the same Idempotency-Key through the real server:
+    exactly one job must exist afterwards, and replays say so."""
+    p, server, _, key = served
+    results, errors = [], []
+
+    def submit():
+        try:
+            # fresh transport per thread = genuinely separate connections
+            t = HttpTransport(server.base_url)
+            results.append(t.submit(key, SubmitRequest(
+                manifest=sim_job("same"), idempotency_key="race-1")))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=submit) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert len({r.job_id for r in results}) == 1
+    assert sum(1 for r in results if not r.deduplicated) == 1
+    assert len(p.meta.jobs(tenant="team-a")) == 1
+
+
+def test_idempotency_key_header_takes_precedence(served):
+    _, server, transport, key = served
+    body = json.dumps({"manifest": json.loads(json.dumps(
+        {"name": "h", "tenant": "team-a", "sim_duration": 60})),
+        "idempotency_key": "body-key"})
+    status, _, payload = _raw(
+        server, "POST", "/v1/jobs", body=body,
+        headers={"Authorization": f"Bearer {key}",
+                 "Idempotency-Key": "header-key"})
+    assert status == 201
+    job = json.loads(payload)["job_id"]
+    # replaying the HEADER key dedups; the body key was never registered
+    r2 = transport.submit(key, SubmitRequest(manifest=sim_job("h"),
+                                             idempotency_key="header-key"))
+    assert r2.deduplicated and r2.job_id == job
+    r3 = transport.submit(key, SubmitRequest(manifest=sim_job("h"),
+                                             idempotency_key="body-key"))
+    assert not r3.deduplicated
+
+
+# ----------------------------------------------------- 429 / Retry-After
+
+
+def test_rate_limited_flood_gets_429_with_retry_after():
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    server = ApiHttpServer(p, rate_limit=RateLimitConfig(rate=5.0, burst=3))
+    with server:
+        key = p.auth.issue_key("flood")
+        transport = HttpTransport(server.base_url)
+        seen_429 = None
+        for _ in range(10):
+            try:
+                transport.list_jobs(key)
+            except ApiError as e:
+                seen_429 = e
+                break
+        assert seen_429 is not None
+        assert seen_429.code == ErrorCode.RATE_LIMITED
+        assert seen_429.details["http_status"] == 429
+        assert seen_429.retry_after is not None
+        # the header is on the raw response too
+        status, headers, payload = _raw(
+            server, "GET", "/v1/jobs",
+            headers={"Authorization": f"Bearer {key}"})
+        assert status == 429
+        assert _wire_code(payload) == "RATE_LIMITED"
+        assert int(headers["Retry-After"]) >= 1
+        assert server.ratelimiter.stats["throttled"] >= 2
+
+
+# ------------------------------------------------- round trip + lifecycle
+
+
+def test_full_lifecycle_round_trip_over_http(served):
+    """Submit → run to completion → history/logs/search parity with the
+    in-process transport; then halt/resume/cancel routes."""
+    p, server, transport, key = served
+    client = ApiClient(transport, key)
+    inproc = ApiClient(p.api, key)
+
+    j = client.submit(sim_job("rt", sim_duration=120))
+    with server.lock:
+        assert p.run_until_terminal([j], max_sim_s=3000)
+    assert client.status(j) == JobStatus.COMPLETED
+    assert client.status_history(j) == inproc.status_history(j)
+    assert client.logs(j) == inproc.logs(j)
+    page = client.list_jobs(limit=10)
+    assert [v.job_id for v in page.items] == [j]
+
+    from repro.core.helpers import LogRecord
+    p.log_index.append(LogRecord(0.0, j, 0, "needle loss=1.0"))
+    hits = client.search_logs("needle")
+    assert [r.job_id for r in hits] == [j]
+    assert hits[0].line == "needle loss=1.0"
+
+    # halt / resume over the wire
+    j2 = client.submit(sim_job("hr", sim_duration=400))
+    for _ in range(100):
+        with server.lock:
+            p.tick()
+        if p.meta.get(j2).status == JobStatus.PROCESSING:
+            break
+    client.halt(j2)
+    with server.lock:
+        p.run_for(30)
+    assert client.status(j2) == JobStatus.HALTED
+    with pytest.raises(ApiError) as ei:  # resume twice → 409
+        client.resume(j2)
+        client.resume(j2)
+    assert STATUS_OF[ei.value.code] == 409
+    with server.lock:
+        assert p.run_until_terminal([j2], max_sim_s=5000)
+    assert client.status(j2) == JobStatus.COMPLETED
+
+    # cancel (DELETE) on a fresh running job
+    j3 = client.submit(sim_job("cx", sim_duration=600))
+    for _ in range(100):
+        with server.lock:
+            p.tick()
+        if p.meta.get(j3).status == JobStatus.PROCESSING:
+            break
+    client.cancel(j3)
+    with server.lock:
+        p.run_for(60)
+    assert client.status(j3) == JobStatus.FAILED
+
+
+def test_pagination_cursors_round_trip_over_http(served):
+    p, _, transport, key = served
+    ids = [transport.submit(key, SubmitRequest(
+        manifest=sim_job(f"j{i}"))).job_id for i in range(5)]
+    seen, cursor = [], None
+    while True:
+        page = transport.list_jobs(key, cursor=cursor, limit=2)
+        seen += [v.job_id for v in page.items]
+        cursor = page.next_cursor
+        if cursor is None:
+            break
+    assert seen == ids
+
+
+def test_health_reports_replica_degradation(served):
+    p, _, transport, _ = served
+    h = transport.health()
+    assert h["status"] == "ok" and h["replicas_alive"] == 3
+    p.api_crash(replica=0)
+    assert transport.health()["status"] == "degraded"
+    p.api_crash()
+    assert transport.health()["status"] == "down"
+    p.api_restart()
+    assert transport.health()["status"] == "ok"
+
+
+def test_status_filter_round_trip_and_bad_status(served):
+    _, server, transport, key = served
+    transport.submit(key, SubmitRequest(manifest=sim_job()))
+    page = transport.list_jobs(key, status=JobStatus.PENDING)
+    assert len(page.items) == 1
+    assert transport.list_jobs(key, status=JobStatus.COMPLETED).items == []
+    status, _, payload = _raw(
+        server, "GET", "/v1/jobs?status=NOPE",
+        headers={"Authorization": f"Bearer {key}"})
+    assert status == 400
+    assert _wire_code(payload) == "INVALID_ARGUMENT"
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def test_cli_speaks_the_wire_protocol(served, capsys):
+    from repro.api import cli
+    p, server, _, key = served
+    base = ["--endpoint", server.base_url, "--key", key]
+
+    assert cli.main(base + ["submit", "--name", "cli-job", "--tenant",
+                            "team-a", "--sim-duration", "60",
+                            "--idempotency-key", "cli-1"]) == 0
+    job = capsys.readouterr().out.strip()
+    assert job.startswith("job-")
+
+    # resubmit with the same idempotency key → marked deduplicated
+    cli.main(base + ["submit", "--name", "cli-job", "--tenant", "team-a",
+                     "--sim-duration", "60", "--idempotency-key", "cli-1"])
+    assert "(deduplicated)" in capsys.readouterr().out
+
+    assert cli.main(base + ["status", job]) == 0
+    assert json.loads(capsys.readouterr().out)["status"] == "PENDING"
+
+    assert cli.main(base + ["list", "--all"]) == 0
+    assert job in capsys.readouterr().out
+
+    assert cli.main(base + ["health"]) == 0
+    assert json.loads(capsys.readouterr().out)["status"] == "ok"
+
+    # errors surface the stable code and a non-zero exit
+    assert cli.main(base + ["status", "job-nope"]) == 2
+    assert "[NOT_FOUND]" in capsys.readouterr().err
+
+    assert cli.main(["--endpoint", server.base_url, "--key", "ffdl-bogus",
+                     "list"]) == 2
+    assert "[UNAUTHENTICATED]" in capsys.readouterr().err
+
+
+def test_cli_help_smoke(capsys):
+    from repro.api import cli
+    with pytest.raises(SystemExit) as ei:
+        cli.build_parser().parse_args(["--help"])
+    assert ei.value.code == 0
+    out = capsys.readouterr().out
+    for sub in ("serve", "submit", "list", "status", "logs", "halt",
+                "resume", "cancel", "search", "health", "history"):
+        assert sub in out

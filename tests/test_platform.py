@@ -1,9 +1,17 @@
 """End-to-end platform behaviour (FfDL §3): lifecycle, atomicity, status
-pipeline, HALT/RESUME, crash recovery of every component, admission."""
+pipeline, HALT/RESUME, crash recovery of every component, admission.
+
+All user-facing calls go through the v1 API tier with a tenant-scoped
+client (`ApiClient`); failures carry stable `ApiError` codes."""
 
 import pytest
 
+from repro.api import ApiClient, ApiError, ErrorCode
 from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
+
+
+def client(p, tenant="*"):
+    return ApiClient.for_platform(p, tenant)
 
 
 def sim_job(name="j", **kw):
@@ -15,9 +23,10 @@ def sim_job(name="j", **kw):
 
 def test_job_lifecycle_status_sequence():
     p = FfDLPlatform(n_hosts=4, chips_per_host=4)
-    j = p.submit(sim_job())
+    c = client(p)
+    j = c.submit(sim_job())
     assert p.run_until_terminal([j], max_sim_s=2000)
-    hist = [s[1] for s in p.status_history(j)]
+    hist = [s[1] for s in c.status_history(j)]
     # DL-specific status pipeline (paper C7), in order
     for a, b in zip(["PENDING", "DEPLOYING", "DOWNLOADING", "PROCESSING",
                      "STORING", "COMPLETED"],
@@ -28,7 +37,7 @@ def test_job_lifecycle_status_sequence():
     order = [hist.index(s) for s in ["PENDING", "DOWNLOADING", "PROCESSING",
                                      "STORING", "COMPLETED"]]
     assert order == sorted(order)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     # all chips returned
     assert p.cluster.used_chips == 0
 
@@ -36,7 +45,8 @@ def test_job_lifecycle_status_sequence():
 def test_durable_before_ack_survives_total_core_crash():
     """§3.2: a submitted job survives API+LCM crash before deployment."""
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(sim_job(n_learners=1, chips_per_learner=1))
+    c = client(p)
+    j = c.submit(sim_job(n_learners=1, chips_per_learner=1))
     # crash everything immediately
     p.api_crash()
     p.lcm.crash()
@@ -46,7 +56,7 @@ def test_durable_before_ack_survives_total_core_crash():
     p.api_restart()
     p.lcm.restart()
     assert p.run_until_terminal([j], max_sim_s=2000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
 
 
 def test_metastore_journal_recovery(tmp_path):
@@ -68,7 +78,8 @@ def test_metastore_journal_recovery(tmp_path):
 
 def test_guardian_crash_mid_deploy_rolls_back_atomically():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(sim_job())
+    c = client(p)
+    j = c.submit(sim_job())
     for _ in range(20):
         p.tick()
         if j in p.guardians and p.guardians[j].stage in (
@@ -78,14 +89,15 @@ def test_guardian_crash_mid_deploy_rolls_back_atomically():
     g.crash()
     p.clock.call_later(2.0, g.restart)
     assert p.run_until_terminal([j], max_sim_s=3000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     assert p.cluster.used_chips == 0  # no zombies (C2 atomicity)
     assert p.events.count("rollback") >= 1
 
 
 def test_learner_crash_restarts_and_resumes():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=300))
+    c = client(p)
+    j = c.submit(sim_job(sim_duration=300))
     for _ in range(100):
         p.tick()
         if p.meta.get(j).status == JobStatus.PROCESSING:
@@ -95,15 +107,16 @@ def test_learner_crash_restarts_and_resumes():
     g.runtimes[0].kill()
     p.cluster.fail_pod(g.pods[0].name)
     assert p.run_until_terminal([j], max_sim_s=5000)
-    assert p.status(j) == JobStatus.COMPLETED
-    hist = [s[1] for s in p.status_history(j)]
+    assert c.status(j) == JobStatus.COMPLETED
+    hist = [s[1] for s in c.status_history(j)]
     assert "RESUMED" in hist
     assert p.meta.get(j).restarts == 1
 
 
 def test_node_failure_evicts_and_recovers():
     p = FfDLPlatform(n_hosts=4, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=600))
+    c = client(p)
+    j = c.submit(sim_job(sim_duration=600))
     for _ in range(100):
         p.tick()
         if p.meta.get(j).status == JobStatus.PROCESSING:
@@ -111,7 +124,7 @@ def test_node_failure_evicts_and_recovers():
     host = p.guardians[j].pods[0].host
     p.cluster.fail_host(host)
     assert p.run_until_terminal([j], max_sim_s=8000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     assert p.events.count("pod_evicted") >= 1
     assert p.events.count("node_notready") == 1
     # the failed host's pods moved elsewhere
@@ -127,54 +140,61 @@ def g_dummy():
 
 def test_halt_resume_cycle():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=400))
+    c = client(p)
+    j = c.submit(sim_job(sim_duration=400))
     for _ in range(100):
         p.tick()
         if p.meta.get(j).status == JobStatus.PROCESSING:
             break
     p.run_for(150)
-    p.halt(j)
+    c.halt(j)
     p.run_for(30)
-    assert p.status(j) == JobStatus.HALTED
+    assert c.status(j) == JobStatus.HALTED
     assert p.cluster.used_chips == 0  # chips freed while halted
-    p.resume(j)
+    c.resume(j)
     assert p.run_until_terminal([j], max_sim_s=5000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
 
 
 def test_admission_quota_rejection():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)  # 8 chips
     p.admission.register_tenant("small", quota_chips=2)
-    p.submit(sim_job(tenant="small", n_learners=1, chips_per_learner=2))
-    p.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=2))
+    c = client(p, tenant="small")
+    c.submit(sim_job(tenant="small", n_learners=1, chips_per_learner=2))
+    c.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=2))
     # third submission: over quota AND cluster busy enough → rejected later;
     # at least over-quota accounting must kick in
     p.run_for(120)  # both running: tenant holds 6 > 2 quota (opportunistic)
-    with pytest.raises(PermissionError):
+    with pytest.raises(ApiError) as ei:
         # demand exceeding idle capacity while over quota
-        p.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=4))
+        c.submit(sim_job(tenant="small", n_learners=2, chips_per_learner=4))
+    assert ei.value.code == ErrorCode.QUOTA_EXCEEDED
 
 
 def test_oversized_job_rejected():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    with pytest.raises(ValueError):
-        p.submit(sim_job(n_learners=4, chips_per_learner=4))  # 16 > 8
+    c = client(p)
+    with pytest.raises(ApiError) as ei:
+        c.submit(sim_job(n_learners=4, chips_per_learner=4))  # 16 > 8
+    assert ei.value.code == ErrorCode.INVALID_ARGUMENT
 
 
 def test_logs_collected_and_searchable():
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(JobManifest(name="t", arch="smollm-360m", n_learners=1,
+    c = client(p)
+    j = c.submit(JobManifest(name="t", arch="smollm-360m", n_learners=1,
                              chips_per_learner=1, checkpoint_interval=10,
                              train={"steps": 30, "batch": 2, "seq": 32}))
     assert p.run_until_terminal([j], max_sim_s=4000)
     # learner wrote log lines; collector indexed them
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
 
 
 def test_concurrent_tenants_isolated_results():
     p = FfDLPlatform(n_hosts=4, chips_per_host=4)
-    a = p.submit(sim_job(name="a", tenant="A"))
-    b = p.submit(sim_job(name="b", tenant="B"))
+    c = client(p)
+    a = c.submit(sim_job(name="a", tenant="A"))
+    b = c.submit(sim_job(name="b", tenant="B"))
     assert p.run_until_terminal([a, b], max_sim_s=4000)
     assert [r["job_id"] for r in p.meta.history("A")] == [a]
     assert [r["job_id"] for r in p.meta.history("B")] == [b]
@@ -185,7 +205,8 @@ def test_straggler_mitigation_restarts_stalled_learner():
     is detected by the Guardian's progress watchdog and restarted; the job
     completes. Without mitigation it would hang forever."""
     p = FfDLPlatform(n_hosts=4, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=240, straggler_timeout_s=60,
+    c = client(p)
+    j = c.submit(sim_job(sim_duration=240, straggler_timeout_s=60,
                          max_restarts=5))
     for _ in range(200):
         p.tick()
@@ -194,7 +215,7 @@ def test_straggler_mitigation_restarts_stalled_learner():
     g = p.guardians[j]
     g.runtimes[1].stall()  # learner 1 silently stops making progress
     assert p.run_until_terminal([j], max_sim_s=8000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     assert p.events.count("straggler_restart") >= 1
 
 
@@ -202,7 +223,8 @@ def test_no_straggler_false_positive_on_global_slowdown():
     """A global slowdown (everyone equally slow) must NOT trigger
     straggler restarts — only relative stalls do."""
     p = FfDLPlatform(n_hosts=4, chips_per_host=4)
-    j = p.submit(sim_job(sim_duration=120, straggler_timeout_s=60))
+    c = client(p)
+    j = c.submit(sim_job(sim_duration=120, straggler_timeout_s=60))
     for _ in range(200):
         p.tick()
         if p.meta.get(j).status == JobStatus.PROCESSING:
@@ -211,5 +233,5 @@ def test_no_straggler_false_positive_on_global_slowdown():
     for rt in g.runtimes.values():
         rt.slowdown = 10.0  # uniform contention, still progressing
     assert p.run_until_terminal([j], max_sim_s=10000)
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     assert p.events.count("straggler_restart") == 0

@@ -1,0 +1,187 @@
+"""Per-tenant token-bucket rate limiting + bounded in-flight admission
+(the API tier's multi-tenant backpressure, FfDL §3.2)."""
+
+import threading
+
+import pytest
+
+from repro.api import (
+    ApiError,
+    ErrorCode,
+    RateLimitConfig,
+    RateLimitedApi,
+    SubmitRequest,
+    TokenBucket,
+)
+from repro.core import FfDLPlatform, JobManifest
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def sim_job(name="j", tenant="a"):
+    return JobManifest(name=name, tenant=tenant, n_learners=1,
+                       chips_per_learner=1, sim_duration=60)
+
+
+# ---------------------------------------------------------------- bucket
+
+
+def test_token_bucket_burst_then_refill():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=5, clock=clk)
+    assert all(b.try_take()[0] for _ in range(5))  # burst drained
+    ok, retry = b.try_take()
+    assert not ok and retry == pytest.approx(0.1)  # 1 token @ 10/s
+    clk.t += 0.1
+    assert b.try_take()[0]
+    clk.t += 100.0
+    assert b.tokens == pytest.approx(5)  # refill caps at burst
+
+
+def test_token_bucket_retry_after_scales_with_deficit():
+    clk = FakeClock()
+    b = TokenBucket(rate=2.0, burst=1, clock=clk)
+    assert b.try_take()[0]
+    _, retry = b.try_take()
+    assert retry == pytest.approx(0.5)
+
+
+def test_token_bucket_rejects_bad_config():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0, burst=1)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1, burst=0)
+
+
+# ---------------------------------------------------- per-tenant gating
+
+
+def _limited_platform(clk, rate=5.0, burst=2, per_tenant=None):
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    limited = RateLimitedApi(p.api, p.auth,
+                             RateLimitConfig(rate=rate, burst=burst),
+                             per_tenant=per_tenant, clock=clk)
+    return p, limited
+
+
+def test_flooding_tenant_throttled_with_retry_after():
+    clk = FakeClock()
+    p, api = _limited_platform(clk, rate=5.0, burst=2)
+    key = p.auth.issue_key("flood")
+    for i in range(2):
+        api.submit(key, SubmitRequest(manifest=sim_job(f"j{i}", "flood")))
+    with pytest.raises(ApiError) as ei:
+        api.list_jobs(key)
+    assert ei.value.code == ErrorCode.RATE_LIMITED
+    assert ei.value.retry_after == pytest.approx(0.2, abs=1e-3)
+    assert not ei.value.retryable  # the LB must NOT fail this over
+    # time heals the bucket
+    clk.t += 1.0
+    assert api.list_jobs(key) is not None
+
+
+def test_one_tenant_flood_does_not_consume_anothers_budget():
+    clk = FakeClock()
+    p, api = _limited_platform(clk, rate=5.0, burst=3)
+    kf, kg = p.auth.issue_key("flood"), p.auth.issue_key("good")
+    throttled = 0
+    for _ in range(50):
+        try:
+            api.list_jobs(kf)
+        except ApiError:
+            throttled += 1
+    assert throttled == 47  # everything past the burst
+    # the good tenant's own bucket is untouched
+    for _ in range(3):
+        api.list_jobs(kg)
+    assert api.throttled_by_tenant == {"flood": 47}
+
+
+def test_per_tenant_override_config():
+    clk = FakeClock()
+    p, api = _limited_platform(
+        clk, rate=5.0, burst=2,
+        per_tenant={"vip": RateLimitConfig(rate=100.0, burst=50)})
+    kv = p.auth.issue_key("vip")
+    for _ in range(50):  # far beyond the default burst of 2
+        api.list_jobs(kv)
+
+
+def test_unknown_keys_share_the_anonymous_bucket():
+    """Credential-guessing floods are throttled before auth ever runs."""
+    clk = FakeClock()
+    p, api = _limited_platform(clk, rate=5.0, burst=2)
+    outcomes = []
+    for i in range(4):  # 4 distinct bogus keys, one shared budget
+        try:
+            api.list_jobs(f"ffdl-bogus-{i}")
+            outcomes.append("impossible")
+        except ApiError as e:
+            outcomes.append(e.code)
+    assert outcomes == [ErrorCode.UNAUTHENTICATED] * 2 + \
+        [ErrorCode.RATE_LIMITED] * 2
+
+
+def test_admitted_calls_still_fail_over_on_replica_crash():
+    """Rate limiting composes with crash-masking: it sits in FRONT of the
+    LoadBalancer, so an admitted call still retries dead replicas."""
+    clk = FakeClock()
+    p, api = _limited_platform(clk, rate=1000.0, burst=1000)
+    key = p.auth.issue_key("t")
+    p.api_crash(replica=0)
+    job = api.submit(key, SubmitRequest(manifest=sim_job(tenant="t"))).job_id
+    assert api.status(key, job).status == "PENDING"
+    assert p.api.stats["failovers"] > 0
+
+
+# ------------------------------------------------------- in-flight gate
+
+
+def test_bounded_inflight_sheds_excess_load():
+    clk = FakeClock()
+    p = FfDLPlatform(n_hosts=2, chips_per_host=4)
+    api = RateLimitedApi(p.api, p.auth,
+                         RateLimitConfig(rate=1e6, burst=10**6,
+                                         max_inflight=2),
+                         clock=clk)
+    key = p.auth.issue_key("t")
+
+    hold = threading.Event()
+    entered = threading.Barrier(3, timeout=10)
+
+    class SlowInner:
+        def list_jobs(self, *a, **kw):
+            entered.wait()
+            hold.wait(timeout=10)
+            return "ok"
+
+    api.inner = SlowInner()
+    results = []
+
+    def call():
+        try:
+            results.append(api.list_jobs(key))
+        except ApiError as e:
+            results.append(e.code)
+
+    threads = [threading.Thread(target=call) for _ in range(2)]
+    for t in threads:
+        t.start()
+    entered.wait()  # both slow calls are now in flight
+    with pytest.raises(ApiError) as ei:
+        api.list_jobs(key)
+    assert ei.value.code == ErrorCode.RATE_LIMITED
+    assert api.stats["shed_inflight"] == 1
+    hold.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert results == ["ok", "ok"]
+    # slots were released: the next call sails through
+    api.inner = p.api
+    assert api.list_jobs(key) is not None

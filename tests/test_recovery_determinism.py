@@ -6,12 +6,14 @@ deterministic init + checkpointed optimizer state)."""
 import numpy as np
 import pytest
 
+from repro.api import ApiClient
 from repro.core import FfDLPlatform, JobManifest, JobStatus
 
 
 def run_job(crash_at_step=None, steps=60, ckpt_every=20):
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(JobManifest(
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(
         name="det", arch="smollm-360m", n_learners=1, chips_per_learner=2,
         checkpoint_interval=ckpt_every,
         train={"steps": steps, "batch": 4, "seq": 64, "seed": 3}))
@@ -28,7 +30,7 @@ def run_job(crash_at_step=None, steps=60, ckpt_every=20):
             g.runtimes[0].kill()
             p.cluster.fail_pod(g.pods[0].name)
             crashed = True
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     g = p.guardians.get(j)
     # collect the loss trajectory from the (final) learner runtime
     # runtimes are replaced on restart; stitch histories by step
@@ -58,7 +60,8 @@ def test_crash_resume_trajectory_identical():
 def test_real_training_loss_decreases():
     """The e2e sanity: the synthetic task is learnable through the platform."""
     p = FfDLPlatform(n_hosts=2, chips_per_host=4)
-    j = p.submit(JobManifest(
+    c = ApiClient.for_platform(p)
+    j = c.submit(JobManifest(
         name="learn", arch="smollm-360m", n_learners=1, chips_per_learner=2,
         checkpoint_interval=100,
         train={"steps": 120, "batch": 8, "seq": 64, "lr": 1e-3,
@@ -67,7 +70,7 @@ def test_real_training_loss_decreases():
         p.tick()
         if p.meta.get(j).status in (JobStatus.COMPLETED, JobStatus.FAILED):
             break
-    assert p.status(j) == JobStatus.COMPLETED
+    assert c.status(j) == JobStatus.COMPLETED
     g_runtime_losses = None
     # loss history lives on the last runtime before GC; re-read from ckpt meta
     from repro.ckpt import checkpoint as ckpt

@@ -4,6 +4,7 @@ combining multi-tenancy, gang scheduling, chaos, and real training — the
 
 import numpy as np
 
+from repro.api import ApiClient
 from repro.core import ChaosConfig, FfDLPlatform, JobManifest, JobStatus
 
 
@@ -19,29 +20,30 @@ def test_everything_on_mixed_workload_under_chaos():
         host_recovery_s=60.0,
     )
     p = FfDLPlatform(n_hosts=8, chips_per_host=4, chaos=chaos, seed=1)
+    c = ApiClient.for_platform(p)
     p.admission.register_tenant("research", quota_chips=24)
     p.admission.register_tenant("prod", quota_chips=8)
 
     jobs = []
     # simulated fleet
     for i in range(6):
-        jobs.append(p.submit(JobManifest(
+        jobs.append(c.submit(JobManifest(
             name=f"sim{i}", tenant="research", n_learners=2,
             chips_per_learner=2, sim_duration=200, max_restarts=10)))
     # one real training job
-    jobs.append(p.submit(JobManifest(
+    jobs.append(c.submit(JobManifest(
         name="real", tenant="prod", n_learners=1, chips_per_learner=2,
         checkpoint_interval=20, max_restarts=10,
         train={"steps": 60, "batch": 4, "seq": 64})))
 
     ok = p.run_until_terminal(jobs, max_sim_s=30000)
     assert ok, {j: p.meta.get(j).status for j in jobs}
-    statuses = {j: p.status(j) for j in jobs}
+    statuses = {j: c.status(j) for j in jobs}
     assert all(s == JobStatus.COMPLETED for s in statuses.values()), statuses
     assert p.cluster.used_chips == 0
     # every job has a complete, ordered status history
     for j in jobs:
-        hist = [s[1] for s in p.status_history(j)]
+        hist = [s[1] for s in c.status_history(j)]
         assert hist[0] == "PENDING" and hist[-1] == "COMPLETED"
     # chaos actually did something
     assert (p.events.count("learner_killed") + p.events.count("host_killed")
