@@ -1,15 +1,16 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench examples serve docs-check
+.PHONY: test test-fast bench-smoke bench-api bench examples serve docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_api_gateway.py tests/test_platform.py \
-		tests/test_http_api.py tests/test_ratelimit.py \
-		tests/test_kvstore.py tests/test_scheduler.py
+		tests/test_http_api.py tests/test_federation.py \
+		tests/test_ratelimit.py tests/test_kvstore.py \
+		tests/test_scheduler.py
 
 # local platform + HTTP API on :8084; prints one API key per tenant
 serve:
@@ -21,8 +22,13 @@ docs-check:
 	$(PY) -m pytest -q tests/test_docs_api.py
 
 bench-smoke:
-	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py
+	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/recovery.py
+
+# the full API-tier drill, including the timing-sensitive p99 assertions
+# (rate-limit isolation, 4-shard vs single-lock federation read tail)
+bench-api:
+	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py

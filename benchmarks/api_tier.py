@@ -21,7 +21,21 @@ another. This benchmark turns those claims into numbers:
     with per-tenant rate limiting ON the flooder is answered with 429 +
     ``Retry-After`` *before* the platform lock, so a well-behaved tenant's
     p99 stays within 2× its solo baseline. With limiting OFF the flood
-    reaches the gateway and the tail degrades.
+    reaches the gateway and the tail degrades;
+  * **federation read-path scaling** — the same read-heavy tenant mix
+    (≥80% status/list/logs) against (a) ONE shard behind the
+    pre-federation exclusive lock and (b) FOUR shards with per-shard
+    readers-writer locks, each with a live ticker advancing the
+    simulation. In (a) every read queues behind the global lock while the
+    whole platform ticks; in (b) a read only ever waits for its own
+    shard — multi-shard read p99 must beat the single-lock baseline;
+  * **shard-kill isolation** — killing one shard leaves every other
+    tenant's availability at 100% (the dead shard's tenants get
+    UNAVAILABLE, the LB refuses to burn failovers on it, and replica
+    crash-masking still composes on top).
+
+``--quick`` runs a smoke-sized version of every drill (CI keeps the HTTP
+path exercised) and skips only the timing-sensitive p99 assertions.
 """
 
 from __future__ import annotations
@@ -33,6 +47,7 @@ from repro.api import (
     ApiError,
     ErrorCode,
     ApiHttpServer,
+    Federation,
     HttpTransport,
     RateLimitConfig,
     SubmitRequest,
@@ -249,15 +264,17 @@ def _http_drill(n_tenants: int, requests_per_tenant: int, flood: bool,
     }
 
 
-def _http_load(n_tenants: int = 4, requests_per_tenant: int = 200) -> dict:
+def _http_load(n_tenants: int = 4, requests_per_tenant: int = 200,
+               quick: bool = False) -> dict:
     """Four scenarios; the isolation claim compares ``limited`` (flooder
     present, rate limiting on) against ``baseline`` (the same well-behaved
     cohort with no flooder) — same process count and sample size, so the
     comparison isolates exactly the flooder's impact."""
+    flood_requests = 300 if quick else 1500
     limit = RateLimitConfig(rate=2000.0, burst=400, max_inflight=64)
     solo = _http_drill(1, requests_per_tenant, flood=False, rate_limit=limit)
     unlimited = _http_drill(n_tenants, requests_per_tenant, flood=True,
-                            rate_limit=None)
+                            rate_limit=None, flood_requests=flood_requests)
     # p99-vs-p99 at a hard 2x bound is noisy on a small shared box (OS
     # scheduler, not the API tier); measure the pair again once if the
     # first trial misses the bound.
@@ -267,29 +284,219 @@ def _http_load(n_tenants: int = 4, requests_per_tenant: int = 200) -> dict:
         baseline = _http_drill(n_tenants, requests_per_tenant, flood=False,
                                rate_limit=limit)
         limited = _http_drill(n_tenants, requests_per_tenant, flood=True,
-                              rate_limit=limit)
+                              rate_limit=limit,
+                              flood_requests=flood_requests)
         good = limited["behaved"]["p99_ms"] <= 2 * baseline["behaved"][
             "p99_ms"]
-        if good or attempts >= 3:
+        if good or attempts >= (1 if quick else 3):
             break
     return {"n_tenants": n_tenants, "solo": solo, "baseline": baseline,
             "unlimited": unlimited, "limited": limited,
             "isolation_attempts": attempts}
 
 
-def run() -> dict:
-    replicated = _rolling_drill(n_replicas=3)
-    single = _rolling_drill(n_replicas=1)
+# ---------------------------------------------------------- federation
+
+
+def _fed_reader_worker(base_url: str, key: str, tenant: str,
+                       n_requests: int, pace_s: float, out_q):
+    """Read-heavy tenant loop: 10% submits, 90% status/list/logs reads.
+    Read and write latencies are recorded separately — the federation
+    claim is about the READ tail. Own process (see _tenant_worker)."""
+    import gc
+    gc.disable()
+    try:
+        transport = HttpTransport(base_url, timeout=30.0)
+        reads, writes, failed = [], [], 0
+        submitted: list = []
+        for i in range(WARMUP_REQUESTS + n_requests):
+            t0 = time.perf_counter()
+            is_write = i % 10 == 0
+            try:
+                if is_write or not submitted:
+                    submitted.append(transport.submit(key, SubmitRequest(
+                        manifest=_manifest(i, tenant),
+                        idempotency_key=f"{tenant}-{i}")).job_id)
+                elif i % 10 in (1, 2, 3):
+                    transport.status(key, submitted[-1])
+                elif i % 10 in (4, 5, 6):
+                    transport.list_jobs(key, limit=5)
+                else:
+                    transport.logs(key, submitted[0], limit=20)
+                if i >= WARMUP_REQUESTS:
+                    (writes if is_write else reads).append(
+                        time.perf_counter() - t0)
+            except ApiError:
+                failed += 1
+            if pace_s:
+                time.sleep(pace_s)
+        out_q.put((tenant, {"reads": reads, "writes": writes,
+                            "failed": failed}))
+    except BaseException as e:  # noqa: BLE001 — report, don't hang parent
+        out_q.put((tenant, {"error": f"{type(e).__name__}: {e}"}))
+        raise
+
+
+def _federation_http_drill(n_shards: int, shared_reads: bool,
+                           n_tenants: int = 4, requests_per_tenant: int = 150,
+                           preload_jobs: int = 10,
+                           total_hosts: int = 8) -> dict:
+    """Serve a federation over real sockets with a LIVE ticker thread and
+    a read-heavy tenant mix; return the read/write latency tails.
+
+    ``n_shards=1, shared_reads=False`` reproduces the pre-federation tier:
+    one backend, one exclusive lock, every verb AND every simulation tick
+    serialized through it. ``n_shards=4, shared_reads=True`` is the
+    federated tier: same total cluster capacity, same tenant mix, but a
+    read only ever waits for its own shard's lock.
+    """
+    import gc
+    import multiprocessing as mp
+    import sys
+
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)  # see _http_drill
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    stop = threading.Event()
+    ticker = None
+    workers: list = []
+    out: dict = {}
+    try:
+        fed = Federation(n_shards=n_shards, shared_reads=shared_reads,
+                         n_hosts=max(1, total_hosts // n_shards),
+                         chips_per_host=4)
+        tenants = [f"tenant-{t}" for t in range(n_tenants)]
+        for t, tenant in enumerate(tenants):
+            fed.pin(tenant, f"shard-{t % n_shards}")
+        keys = {tenant: fed.auth.issue_key(tenant) for tenant in tenants}
+        # Preload long-running jobs so the ticker does real control-plane
+        # work (guardians, scheduler, heartbeats) for the whole window —
+        # the baseline's single shard carries ALL of it.
+        for tenant in tenants:
+            for i in range(preload_jobs):
+                fed.api.submit(keys[tenant], SubmitRequest(
+                    manifest=JobManifest(
+                        name=f"preload-{i}", tenant=tenant, n_learners=1,
+                        chips_per_learner=1, sim_duration=1e9)))
+        fed.run_for(30)  # deploy the preloaded jobs
+
+        def tick_forever():
+            while not stop.is_set():
+                fed.tick()
+                time.sleep(0.001)
+
+        server = ApiHttpServer(fed)
+        with server:
+            ticker = threading.Thread(target=tick_forever, daemon=True)
+            ticker.start()
+            out_q = mp.Queue()
+            workers = [mp.Process(target=_fed_reader_worker,
+                                  args=(server.base_url, keys[tenant],
+                                        tenant, requests_per_tenant,
+                                        0.002, out_q))
+                       for tenant in tenants]
+            for w in workers:
+                w.start()
+            for _ in workers:
+                tenant, res = out_q.get(timeout=180)
+                if "error" in res:
+                    raise RuntimeError(f"client process for {tenant!r} "
+                                       f"died: {res['error']}")
+                out[tenant] = res
+            stop.set()
+            ticker.join(timeout=5)
+    finally:
+        stop.set()
+        for w in workers:
+            w.join(timeout=30)
+            if w.is_alive():
+                w.terminate()
+        sys.setswitchinterval(prev_switch)
+        if gc_was_enabled:
+            gc.enable()
+    reads = [x for r in out.values() for x in r["reads"]]
+    writes = [x for r in out.values() for x in r["writes"]]
+    return {"read": _tail(reads), "write": _tail(writes),
+            "failed": sum(r["failed"] for r in out.values()),
+            "n_shards": n_shards, "shared_reads": shared_reads}
+
+
+def _federation_read_scaling(quick: bool = False) -> dict:
+    """4-shard RW-split vs 1-shard exclusive-lock, same tenant mix."""
+    n_req = 40 if quick else 150
+    preload = 4 if quick else 10
+    attempts = 0
+    while True:
+        attempts += 1
+        baseline = _federation_http_drill(
+            n_shards=1, shared_reads=False,
+            requests_per_tenant=n_req, preload_jobs=preload)
+        federated = _federation_http_drill(
+            n_shards=4, shared_reads=True,
+            requests_per_tenant=n_req, preload_jobs=preload)
+        good = federated["read"]["p99_ms"] < baseline["read"]["p99_ms"]
+        if good or attempts >= (1 if quick else 3):
+            break
+    return {"baseline_single_lock": baseline, "federated_4_shards": federated,
+            "attempts": attempts}
+
+
+def _shard_kill_drill(rounds: int = 20) -> dict:
+    """Kill one shard mid-traffic: its tenants get UNAVAILABLE, every
+    other tenant stays at 100% availability — even while a gateway
+    replica is ALSO down (replica crash-masking composes on top)."""
+    fed = Federation(n_shards=4, n_hosts=2, chips_per_host=4)
+    tenants = [f"tenant-{t}" for t in range(4)]
+    for t, tenant in enumerate(tenants):
+        fed.pin(tenant, f"shard-{t}")
+    keys = {tenant: fed.auth.issue_key(tenant) for tenant in tenants}
+    jobs = {tenant: fed.api.submit(keys[tenant], SubmitRequest(
+        manifest=_manifest(0, tenant))).job_id for tenant in tenants}
+    ok = {tenant: 0 for tenant in tenants}
+    fail = {tenant: 0 for tenant in tenants}
+    fed.shard_crash(0)
+    for r in range(rounds):
+        down_replica = r % len(fed.api_replicas)
+        fed.api_crash(replica=down_replica)  # one replica also down
+        for tenant in tenants:
+            for call in (
+                    lambda t=tenant: fed.api.status(keys[t], jobs[t]),
+                    lambda t=tenant: fed.api.list_jobs(keys[t], limit=5),
+                    lambda t=tenant, i=r: fed.api.submit(
+                        keys[t], SubmitRequest(
+                            manifest=_manifest(100 + i, t),
+                            idempotency_key=f"{t}-kill-{i}"))):
+                try:
+                    call()
+                    ok[tenant] += 1
+                except ApiError:
+                    fail[tenant] += 1
+        fed.api_restart(replica=down_replica)
+        fed.tick()
+    fed.shard_restart(0)
+    recovered = fed.api.status(
+        keys["tenant-0"], jobs["tenant-0"]).job_id == jobs["tenant-0"]
+    avail = {tenant: ok[tenant] / (ok[tenant] + fail[tenant])
+             for tenant in tenants}
+    return {"availability": avail, "shard_down_short_circuits":
+            fed.api.stats["shard_down"], "recovered_after_restart": recovered}
+
+
+def run(quick: bool = False) -> dict:
+    replicated = _rolling_drill(n_replicas=3, rounds=8 if quick else 30)
+    single = _rolling_drill(n_replicas=1, rounds=8 if quick else 30)
 
     p = replicated["platform"]
     idem_key = p.auth.issue_key("idem-team")
-    idem = _idempotency_drill(p, idem_key)
+    idem = _idempotency_drill(p, idem_key, n=6 if quick else 20)
 
     lat = sorted(replicated["latencies"])
     n = len(lat)
     total_r = replicated["ok"] + replicated["fail"]
     total_s = single["ok"] + single["fail"]
     return {
+        "quick": quick,
         "availability_replicated": replicated["ok"] / total_r,
         "availability_single": single["ok"] / total_s,
         "failovers": replicated["failovers"],
@@ -299,12 +506,17 @@ def run() -> dict:
             "mean": sum(lat) / n * 1e6,
         },
         "idempotency": idem,
-        "http": _http_load(),
+        "http": _http_load(requests_per_tenant=40 if quick else 200,
+                           quick=quick),
+        "federation": _federation_read_scaling(quick=quick),
+        "shard_kill": _shard_kill_drill(rounds=6 if quick else 20),
     }
 
 
-def main():
-    out = run()
+def main(argv=None):
+    import sys
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    out = run(quick=quick)
     print("# API tier: availability under rolling replica crashes")
     print("metric,value")
     print(f"availability_3_replicas,{out['availability_replicated']:.4f}")
@@ -330,6 +542,21 @@ def main():
               f"{b['p99_ms']:.2f},{d['flood_throttled_429']},"
               f"{d['flood_admitted']}")
 
+    fed = out["federation"]
+    print("\n# Federation: read-heavy mix, live ticker — "
+          "4 shards (RW locks) vs 1 shard (global exclusive lock)")
+    print("scenario,read_p50_ms,read_p99_ms,write_p99_ms,failed")
+    for name in ("baseline_single_lock", "federated_4_shards"):
+        d = fed[name]
+        print(f"{name},{d['read']['p50_ms']:.2f},{d['read']['p99_ms']:.2f},"
+              f"{d['write']['p99_ms']:.2f},{d['failed']}")
+    kill = out["shard_kill"]
+    print("\n# Shard kill: shard-0 down, rolling replica crashes on top")
+    print("tenant,availability")
+    for tenant, avail in sorted(kill["availability"].items()):
+        print(f"{tenant},{avail:.4f}")
+    print(f"lb_shard_down_short_circuits,{kill['shard_down_short_circuits']}")
+
     assert out["availability_replicated"] == 1.0, \
         "replicated API tier must mask single-replica crashes"
     assert idem["duplicates_created"] == 0
@@ -337,11 +564,31 @@ def main():
     assert http["limited"]["flood_throttled_429"] > 0, \
         "rate limiting on: the flooding tenant must see 429s"
     assert http["unlimited"]["flood_throttled_429"] == 0
-    base_p99 = http["baseline"]["behaved"]["p99_ms"]
-    limited_p99 = http["limited"]["behaved"]["p99_ms"]
-    assert limited_p99 <= 2 * base_p99, (
-        f"well-behaved p99 {limited_p99:.2f}ms exceeded 2x its no-flood "
-        f"baseline {base_p99:.2f}ms despite rate limiting")
+
+    # federation: no read/write may fail outright in either scenario, and
+    # killing shard-0 must not cost the OTHER tenants a single call
+    assert fed["baseline_single_lock"]["failed"] == 0
+    assert fed["federated_4_shards"]["failed"] == 0
+    assert kill["availability"]["tenant-0"] == 0.0, \
+        "the dead shard's tenant must see UNAVAILABLE, not stale data"
+    for tenant in ("tenant-1", "tenant-2", "tenant-3"):
+        assert kill["availability"][tenant] == 1.0, (
+            f"{tenant} lost availability to another tenant's shard dying")
+    assert kill["recovered_after_restart"]
+
+    if not out["quick"]:
+        # timing-sensitive tails: asserted only at full size (the quick
+        # smoke still *runs* every drill so the HTTP paths cannot rot)
+        base_p99 = http["baseline"]["behaved"]["p99_ms"]
+        limited_p99 = http["limited"]["behaved"]["p99_ms"]
+        assert limited_p99 <= 2 * base_p99, (
+            f"well-behaved p99 {limited_p99:.2f}ms exceeded 2x its no-flood "
+            f"baseline {base_p99:.2f}ms despite rate limiting")
+        fed_p99 = fed["federated_4_shards"]["read"]["p99_ms"]
+        single_p99 = fed["baseline_single_lock"]["read"]["p99_ms"]
+        assert fed_p99 < single_p99, (
+            f"4-shard read p99 {fed_p99:.2f}ms did not beat the "
+            f"single-global-lock baseline {single_p99:.2f}ms")
     return out
 
 

@@ -3,12 +3,17 @@
 # cursor pagination, round-robin failover across stateless replicas, a
 # JSON-over-HTTP transport with per-tenant rate limiting, and the `ffdl`
 # CLI speaking only the wire protocol (python -m repro.api.cli).
+# The tier routes tenants to independent backend shards (repro.api.backend
+# / router / federation): each shard carries its own readers-writer lock,
+# so read traffic scales across handler threads and shards.
 from repro.api.auth import ALL_TENANTS, AuthService, Principal, READ, WRITE
+from repro.api.backend import AllShardsLock, Backend, RWLock
 from repro.api.client import ApiClient
 from repro.api.gateway import ApiGateway
 from repro.api.http import ApiHttpServer, HttpTransport, ROUTES, STATUS_OF
 from repro.api.lb import LoadBalancer
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi, TokenBucket
+from repro.api.router import TenantRouter
 from repro.api.types import (
     API_VERSION,
     ApiError,
@@ -18,17 +23,24 @@ from repro.api.types import (
     SubmitRequest,
     SubmitResponse,
 )
+# Federation composes FfDLPlatform shards, which import repro.api.* — keep
+# it last so the submodules above are fully initialized first.
+from repro.api.federation import Federation, JOB_ID_STRIDE
 
 __all__ = [
     "ALL_TENANTS",
     "API_VERSION",
+    "AllShardsLock",
     "ApiClient",
     "ApiError",
     "ApiGateway",
     "ApiHttpServer",
     "AuthService",
+    "Backend",
     "ErrorCode",
+    "Federation",
     "HttpTransport",
+    "JOB_ID_STRIDE",
     "JobView",
     "LoadBalancer",
     "Page",
@@ -37,9 +49,11 @@ __all__ = [
     "RateLimitedApi",
     "READ",
     "ROUTES",
+    "RWLock",
     "STATUS_OF",
     "SubmitRequest",
     "SubmitResponse",
+    "TenantRouter",
     "TokenBucket",
     "WRITE",
 ]

@@ -1,0 +1,157 @@
+"""Backend: one FfDLPlatform shard behind the gateway tier (FfDL §3.2-3.3).
+
+The paper's API layer is stateless and *independently scalable* from the
+backend microservices it fronts: the REST contract survives backend
+re-architecture. This module is the seam that makes that true here — a
+:class:`Backend` wraps one ``FfDLPlatform`` shard (its own metastore,
+scheduler, cluster, log index) with the two pieces of state the gateway
+tier needs:
+
+  * **a per-shard readers-writer lock** (:class:`RWLock`). The simulation
+    core is single-threaded, so every v1 verb must hold its shard's lock —
+    but *only* its shard's lock, and reads share it. A ``status`` on
+    shard A never serializes behind a ``submit`` on shard B, and two
+    ``list_jobs`` on the same shard run concurrently. This replaces the
+    PR-2 global ``server.lock`` that funnelled every HTTP handler thread
+    through one mutex;
+  * **health state**. A crashed shard (``crash()``) answers
+    ``UNAVAILABLE`` for *its* tenants only — the router keeps sending
+    every other tenant to their own healthy shards, and the load
+    balancer's replica crash-masking composes on top unchanged.
+
+:class:`AllShardsLock` is the compatibility bridge for code that used the
+old global lock (``with server.lock: platform.tick()``): it acquires every
+shard's write lock in shard order (a total order, so it cannot deadlock
+against verb handlers, which hold at most one shard lock at a time).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import ExitStack, contextmanager
+
+
+class RWLock:
+    """Writer-preferring readers-writer lock.
+
+    Readers share; a writer excludes everyone. Writer preference (readers
+    queue behind a *waiting* writer) keeps submits from starving under the
+    read-heavy traffic this lock exists to scale.
+
+    ``shared_reads=False`` degrades reads to exclusive acquisitions — the
+    pre-federation single-lock behaviour, kept so ``benchmarks/api_tier.py``
+    can measure the read/write split against an honest baseline.
+    """
+
+    def __init__(self, shared_reads: bool = True):
+        self.shared_reads = shared_reads
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer_active = False
+        self._writers_waiting = 0
+        # benchmark introspection: proves reads actually overlapped
+        self.stats = {"reads": 0, "writes": 0, "max_concurrent_readers": 0}
+
+    @contextmanager
+    def read_locked(self):
+        if not self.shared_reads:
+            with self.write_locked():
+                yield
+            return
+        with self._cond:
+            while self._writer_active or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+            self.stats["reads"] += 1
+            if self._readers > self.stats["max_concurrent_readers"]:
+                self.stats["max_concurrent_readers"] = self._readers
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._readers -= 1
+                if self._readers == 0:
+                    self._cond.notify_all()
+
+    @contextmanager
+    def write_locked(self):
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer_active or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer_active = True
+            self.stats["writes"] += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._writer_active = False
+                self._cond.notify_all()
+
+
+class Backend:
+    """One platform shard + its lock + its health state.
+
+    ``platform`` is duck-typed (an ``FfDLPlatform``); the gateway reaches
+    its metastore/log-index/admission/cluster through ``backend.platform``
+    while holding ``backend.lock``.
+    """
+
+    def __init__(self, shard_id: str, platform, shared_reads: bool = True):
+        self.shard_id = shard_id
+        self.platform = platform
+        self.lock = RWLock(shared_reads=shared_reads)
+        self.alive = True
+
+    # -- shard lifecycle (chaos) ------------------------------------------
+    def crash(self):
+        """Down the whole shard: every verb routed here answers
+        UNAVAILABLE until restart. Other shards' tenants are unaffected."""
+        self.alive = False
+
+    def restart(self):
+        self.alive = True
+
+    def read_locked(self):
+        return self.lock.read_locked()
+
+    def write_locked(self):
+        return self.lock.write_locked()
+
+    def __repr__(self):
+        state = "up" if self.alive else "DOWN"
+        return f"Backend({self.shard_id}, {state})"
+
+
+class AllShardsLock:
+    """Every shard's write lock, acquired in shard order.
+
+    Drop-in for the old global ``server.lock``: external code that ticks a
+    platform from another thread (`with server.lock: platform.tick()`)
+    still excludes every in-flight verb. Verb handlers themselves hold at
+    most one shard lock and never acquire a second while holding it, so
+    this total-order acquisition cannot deadlock against them.
+    """
+
+    def __init__(self, router):
+        self.router = router
+        self._stack = None
+
+    def __enter__(self):
+        stack = ExitStack()
+        try:
+            for backend in self.router.backends:
+                stack.enter_context(backend.lock.write_locked())
+        except BaseException:
+            stack.close()
+            raise
+        self._stack = stack
+        return self
+
+    def __exit__(self, *exc):
+        stack, self._stack = self._stack, None
+        stack.close()
+        return False

@@ -10,12 +10,15 @@ the platform, so everything it can do, any HTTP client can do.
         --sim-duration 120 --idempotency-key train1-try1
     python -m repro.api.cli list --limit 10
     python -m repro.api.cli status job-00001
-    python -m repro.api.cli logs job-00001
+    python -m repro.api.cli logs job-00001 --follow
     python -m repro.api.cli halt job-00001 && python -m repro.api.cli resume job-00001
 
-``serve`` boots a local simulated platform, prints one API key per
-``--tenant``, and ticks the simulation in the foreground so submitted jobs
-actually run — the zero-to-aha path for ``make serve``.
+``serve`` boots a local simulated platform — optionally federated over
+``--shards`` independent backend shards — prints one API key per
+``--tenant`` (with its shard placement), and ticks the simulation in the
+foreground so submitted jobs actually run — the zero-to-aha path for
+``make serve``. ``logs --follow`` long-polls the server-side cursor until
+the job finishes.
 """
 
 from __future__ import annotations
@@ -58,17 +61,20 @@ def _view_row(v) -> str:
 # --------------------------------------------------------------------------
 
 def cmd_serve(args) -> int:
-    from repro.core.platform import FfDLPlatform
-    p = FfDLPlatform(n_hosts=args.hosts, chips_per_host=args.chips_per_host)
+    from repro.api.federation import Federation
+    fed = Federation(n_shards=args.shards, n_hosts=args.hosts,
+                     chips_per_host=args.chips_per_host)
     rate = None
     if args.rate:
         rate = RateLimitConfig(rate=args.rate, burst=args.burst,
                                max_inflight=args.max_inflight)
-    server = ApiHttpServer(p, host=args.host, port=args.port, rate_limit=rate)
-    print(f"ffdl API server listening on {server.base_url}")
+    server = ApiHttpServer(fed, host=args.host, port=args.port,
+                           rate_limit=rate)
+    print(f"ffdl API server listening on {server.base_url} "
+          f"({args.shards} shard{'s' if args.shards != 1 else ''})")
     for tenant in args.tenant or ["demo"]:
-        print(f"  tenant {tenant!r}: API key "
-              f"{p.auth.issue_key(tenant)}")
+        print(f"  tenant {tenant!r} -> {fed.shard_of(tenant)}: API key "
+              f"{fed.auth.issue_key(tenant)}")
     limited = f"rate={args.rate}/s burst={args.burst}" if rate else "off"
     print(f"  rate limiting: {limited}")
     print("ticking simulation; Ctrl-C to stop")
@@ -76,8 +82,8 @@ def cmd_serve(args) -> int:
         try:
             while True:
                 time.sleep(args.tick_period)
-                with server.lock:
-                    p.tick()
+                # per-shard write locks: reads on other shards keep flowing
+                fed.tick()
         except KeyboardInterrupt:
             print("\nbye")
     return 0
@@ -136,6 +142,13 @@ def cmd_history(args) -> int:
 
 
 def cmd_logs(args) -> int:
+    if args.follow:
+        from repro.api.client import ApiClient
+        client = ApiClient(_transport(args), _key(args))
+        for line in client.follow_logs(args.job_id, cursor=args.cursor,
+                                       wait_ms=args.wait_ms):
+            print(line, flush=True)
+        return 0
     t = _transport(args)
     cursor = args.cursor
     while True:
@@ -198,6 +211,9 @@ def build_parser() -> argparse.ArgumentParser:
     s = sub.add_parser("serve", help="run a local platform + HTTP server")
     s.add_argument("--host", default="127.0.0.1")
     s.add_argument("--port", type=int, default=8084)
+    s.add_argument("--shards", type=int, default=1,
+                   help="independent platform shards behind the gateway "
+                        "(tenants are hash-routed; job ids stay unique)")
     s.add_argument("--hosts", type=int, default=8)
     s.add_argument("--chips-per-host", type=int, default=4)
     s.add_argument("--tenant", action="append",
@@ -248,6 +264,11 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument("--limit", type=int,
                    help="print at most this many lines (one page); "
                         "default: follow cursors to the end")
+    s.add_argument("--follow", "-f", action="store_true",
+                   help="long-poll for new lines until the job reaches a "
+                        "terminal state")
+    s.add_argument("--wait-ms", type=int, default=8000,
+                   help="server-side park per --follow poll (capped 10s)")
     s.set_defaults(fn=cmd_logs)
 
     s = sub.add_parser("search", help="GET /v1/logs/search")

@@ -76,6 +76,20 @@ class ApiClient:
             if cur is None:
                 return out
 
+    def follow_logs(self, job_id: str, cursor: Optional[str] = None,
+                    wait_ms: int = 8000):
+        """Yield log lines as they appear, long-polling the server-side
+        cursor (bounded ``wait_ms`` per call), until the job reaches a
+        terminal state and the stream is fully consumed — the engine
+        behind ``ffdl logs --follow``."""
+        while True:
+            page = self.transport.logs(self.api_key, job_id, cursor=cursor,
+                                       wait_ms=wait_ms)
+            yield from page.items
+            cursor = page.next_cursor
+            if cursor is None:
+                return
+
     def search_logs(self, query: str, job_id: Optional[str] = None,
                     cursor: Optional[str] = None,
                     limit: Optional[int] = None) -> list:

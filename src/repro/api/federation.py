@@ -1,0 +1,109 @@
+"""Federation: N independent FfDLPlatform shards behind one gateway tier.
+
+FfDL §3 scales the backend microservices *independently* of the REST tier:
+the metastore is sharded, and the stateless API layer in front of it never
+changes its wire contract when the backend is re-architected. This module
+is that composition for our reproduction:
+
+  * **N shards** — each an ordinary :class:`FfDLPlatform` (own metastore
+    WAL, scheduler, cluster, log index, sim clock), constructed with the
+    shard hooks (``shard_id``, ``job_id_base``) so job ids are globally
+    unique (shard *i* mints ``job-{i*10^6 + n}``);
+  * **one auth domain** — a single shared :class:`AuthService`; a tenant's
+    key works at any gateway replica regardless of which shard holds the
+    tenant's jobs;
+  * **one gateway tier** — replicated :class:`ApiGateway` instances over a
+    :class:`TenantRouter` (hash-by-tenant + pin table), fronted by the
+    same round-robin :class:`LoadBalancer`. Replica crashes are masked
+    exactly as on a single platform; a *shard* crash surfaces as
+    ``UNAVAILABLE`` for that shard's tenants only.
+
+``tick()`` advances every live shard under its own write lock — while
+shard 0 is mid-tick, reads for tenants on shards 1..N-1 proceed. This
+per-shard ticking is what the ``benchmarks/api_tier.py`` federation drill
+measures against the old global-lock baseline.
+
+A ``Federation`` quacks like a platform to the HTTP layer: it exposes
+``api``, ``auth``, ``api_replicas``, and ``router``, so
+``ApiHttpServer(Federation(...))`` serves the identical v1 wire contract.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.api.auth import AuthService
+from repro.api.gateway import ApiGateway
+from repro.api.lb import LoadBalancer
+from repro.api.router import TenantRouter
+
+# Shard i mints job ids from i*STRIDE + 1: globally unique, still matching
+# the wire's ``job-\d+`` shape, and ordered within every shard.
+JOB_ID_STRIDE = 1_000_000
+
+
+class Federation:
+    def __init__(self, n_shards: int = 2, n_api_replicas: int = 3,
+                 seed: int = 0, shared_reads: bool = True,
+                 pins: Optional[Dict[str, str]] = None, **platform_kwargs):
+        # lazy import: repro.core.platform itself imports repro.api.*
+        from repro.core.platform import FfDLPlatform
+        self.shards = [
+            FfDLPlatform(shard_id=f"shard-{i}",
+                         job_id_base=i * JOB_ID_STRIDE,
+                         shared_reads=shared_reads,
+                         n_api_replicas=1,  # shards' own tiers are unused
+                         seed=seed + i, **platform_kwargs)
+            for i in range(max(1, n_shards))]
+        # Reuse each platform's OWN Backend: one lock per shard, shared by
+        # every front (the shard's vestigial tier and this federation).
+        self.backends = [p.backend for p in self.shards]
+        self.router = TenantRouter(self.backends, pins=pins)
+        self.auth = AuthService(seed=seed)
+        self.api_replicas = [
+            ApiGateway(self.router, self.auth, replica_id=f"api-{i}")
+            for i in range(max(1, n_api_replicas))]
+        self.api = LoadBalancer(self.api_replicas)
+
+    # -- routing ----------------------------------------------------------
+    def pin(self, tenant: str, shard_id: str):
+        """Place a tenant on a named shard (overrides hash routing)."""
+        self.router.pin(tenant, shard_id)
+
+    def shard_of(self, tenant: str) -> str:
+        return self.router.shard_for(tenant).shard_id
+
+    # -- engine -----------------------------------------------------------
+    def tick(self):
+        """One round on every live shard, each under its OWN write lock —
+        reads on other shards are never blocked by this shard's tick."""
+        for backend in self.backends:
+            if not backend.alive:
+                continue
+            with backend.write_locked():
+                backend.platform.tick()
+
+    def run_for(self, sim_seconds: float):
+        n = int(sim_seconds / self.shards[0].tick_period)
+        for _ in range(n):
+            self.tick()
+
+    # -- chaos ------------------------------------------------------------
+    def shard_crash(self, shard: int):
+        self.backends[shard].crash()
+
+    def shard_restart(self, shard: int):
+        self.backends[shard].restart()
+
+    def api_crash(self, replica: Optional[int] = None):
+        targets = (self.api_replicas if replica is None
+                   else [self.api_replicas[replica]])
+        for r in targets:
+            r.alive = False
+
+    def api_restart(self, replica: Optional[int] = None):
+        targets = (self.api_replicas if replica is None
+                   else [self.api_replicas[replica]])
+        for r in targets:
+            if not r.alive:
+                r.restart()

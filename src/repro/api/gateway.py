@@ -1,37 +1,51 @@
-"""ApiGateway: one stateless API-tier replica (FfDL §3.2).
+"""ApiGateway: one stateless API-tier replica over routed shards (FfDL §3.2).
 
 "The API layer stores all the metadata in MongoDB before acknowledging the
 request" — and the tier itself is a set of replicated, stateless REST
-services: any replica can serve any request, and a crashed replica loses
-nothing because all state lives in the metastore.
+services in front of *independently scalable* backends (the paper shards
+its MongoDB metastore and scales each microservice on its own). Each
+:class:`ApiGateway` instance is one such replica; it holds **no** platform
+of its own. Instead every v1 verb:
 
-Each :class:`ApiGateway` instance is one such replica. It is individually
-crashable (``crash()``/``restart()``); while down, every call raises
-``ApiError(UNAVAILABLE)`` *before any side effect*, so the load balancer
-can transparently retry on a healthy sibling. All replicas implement the
-full v1 surface:
+  1. authenticates the caller (shared :class:`AuthService`);
+  2. resolves the caller's shard through the :class:`TenantRouter`
+     (hash-by-tenant, pin-table override) — a dead shard answers
+     ``UNAVAILABLE`` for *its* tenants only, before any side effect;
+  3. takes **that shard's** lock — read verbs (``status``, ``list_jobs``,
+     ``logs``, ``search_logs``, ``status_history``) share a reader lock,
+     write verbs (``submit``, ``halt``, ``resume``, ``cancel``) take it
+     exclusively. A read on shard A never serializes behind a submit on
+     shard B, replacing the old single global ``server.lock``.
 
-  * ``submit`` — validate → authenticate → admission → **durable before
-    ack** insert. Client-supplied idempotency keys are journaled with the
-    insert, so a duplicate submit (same tenant + key) returns the original
-    job id even after a metastore crash/recover;
-  * ``status``/``status_history``/``list_jobs`` — tenant-scoped reads;
-    listings are cursor-paginated;
-  * ``logs``/``search_logs`` — cursor-paginated reads of the log index;
-  * ``halt``/``resume``/``cancel`` — lifecycle writes, ownership-checked.
+Cross-shard surfaces stay contract-compatible: an admin ``list_jobs`` (and
+admin log search) over a multi-shard federation merges per-shard pages
+behind a composite cursor (see :mod:`repro.api.router`); on a single shard
+the wire cursors are byte-identical to the pre-federation ones. Replicas
+stay individually crashable (``crash()``/``restart()``) and the
+``LoadBalancer`` masks them exactly as before.
 
-A metastore outage surfaces as ``UNAVAILABLE`` too (retryable — though all
-replicas share the store, so the LB will exhaust them and propagate).
+``logs`` additionally supports a bounded long-poll (``wait_ms``, capped at
+10s): when the cursor is at the end of the stream, the call parks —
+WITHOUT holding the shard lock — until new lines land or the job goes
+terminal, which is what ``ffdl logs --follow`` rides on.
 """
 
 from __future__ import annotations
 
 import re
+import time
 from contextlib import contextmanager
 from dataclasses import asdict
 from typing import Optional
 
 from repro.api.auth import AuthService, Principal, READ, WRITE
+from repro.api.router import (
+    JOB_CURSOR_RE,
+    OFFSET_CURSOR_RE,
+    TenantRouter,
+    encode_composite_cursor,
+    parse_composite_cursor,
+)
 from repro.api.types import (
     ApiError,
     ErrorCode,
@@ -47,6 +61,10 @@ DEFAULT_PAGE = 20
 # Upper bound on any page size: one tenant must not be able to drag the
 # whole metastore/log index through a single call (multi-tenant fairness).
 MAX_PAGE = 1000
+# logs long-poll: hard server-side cap on how long one call may park, and
+# how often a parked call re-checks the (lock-free-released) shard.
+MAX_WAIT_MS = 10_000
+_POLL_S = 0.02
 
 
 def _parse_limit(limit):
@@ -88,6 +106,19 @@ def _parse_cursor(cursor) -> int:
     return n
 
 
+def _parse_wait_ms(wait_ms) -> int:
+    """Long-poll budget: a non-negative integer, capped at MAX_WAIT_MS so
+    one parked call can never pin a handler thread indefinitely."""
+    if wait_ms is None:
+        return 0
+    if not isinstance(wait_ms, int) or isinstance(wait_ms, bool) \
+            or wait_ms < 0:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"wait_ms must be a non-negative integer, "
+                       f"got {wait_ms!r}")
+    return min(wait_ms, MAX_WAIT_MS)
+
+
 @contextmanager
 def _meta_guard():
     """Translate metastore outages into the stable UNAVAILABLE code."""
@@ -97,21 +128,35 @@ def _meta_guard():
         raise ApiError(ErrorCode.UNAVAILABLE, str(e) or "metastore down")
 
 
+def _shard_down(backend) -> ApiError:
+    """A dead shard is UNAVAILABLE for its tenants only. ``shard_down``
+    tells the LoadBalancer not to burn failovers on it: every replica
+    routes the tenant to the same dead shard, unlike a dead replica."""
+    return ApiError(ErrorCode.UNAVAILABLE,
+                    f"shard {backend.shard_id} is down",
+                    shard=backend.shard_id, shard_down=True)
+
+
 class ApiGateway:
-    def __init__(self, platform, auth: AuthService, replica_id: str = "api-0"):
-        self.p = platform
+    def __init__(self, router: TenantRouter, auth: AuthService,
+                 replica_id: str = "api-0", events=None):
+        self.router = router
         self.auth = auth
         self.replica_id = replica_id
+        self.events = events
         self.alive = True
 
     # -- replica lifecycle (chaos) --------------------------------------
     def crash(self):
         self.alive = False
-        self.p.events.emit("api", "replica_crashed", replica=self.replica_id)
+        if self.events is not None:
+            self.events.emit("api", "replica_crashed",
+                             replica=self.replica_id)
 
     def restart(self):
         self.alive = True
-        self.p.events.emit("api", "api_restarted", replica=self.replica_id)
+        if self.events is not None:
+            self.events.emit("api", "api_restarted", replica=self.replica_id)
 
     def _require(self, api_key: str, scope: str) -> Principal:
         # Liveness first: a dead replica fails before touching any state.
@@ -121,9 +166,48 @@ class ApiGateway:
                            replica=self.replica_id)
         return self.auth.require(api_key, scope)
 
-    def _owned_record(self, principal: Principal, job_id: str):
+    # -- shard resolution -------------------------------------------------
+    def _shard_for(self, tenant: str):
+        backend = self.router.shard_for(tenant)
+        if not backend.alive:
+            raise _shard_down(backend)
+        return backend
+
+    def _sole_shard(self):
+        backend = self.router.backends[0]
+        if not backend.alive:
+            raise _shard_down(backend)
+        return backend
+
+    def _locate(self, principal: Principal, job_id: str):
+        """The shard that owns ``job_id`` for this caller.
+
+        A tenant key only ever looks on the tenant's own shard — a job id
+        minted by another shard is NOT_FOUND for it, never data (tenant
+        isolation holds across shards exactly as within one). An admin key
+        scans shards (read-locking one at a time); if the job is nowhere
+        but some shard was down, the honest answer is UNAVAILABLE, not
+        NOT_FOUND.
+        """
+        if not principal.is_admin:
+            return self._shard_for(principal.tenant)
+        dead = None
+        for backend in self.router.backends:
+            if not backend.alive:
+                dead = backend
+                continue
+            with backend.read_locked(), _meta_guard():
+                if backend.platform.meta.get(job_id) is not None:
+                    return backend
+        if dead is not None:
+            raise _shard_down(dead)
+        raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
+                       job_id=job_id)
+
+    def _owned_record(self, backend, principal: Principal, job_id: str):
+        """Caller must hold ``backend``'s lock."""
         with _meta_guard():
-            rec = self.p.meta.get(job_id)
+            rec = backend.platform.meta.get(job_id)
         if rec is None:
             raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
                            job_id=job_id)
@@ -144,53 +228,63 @@ class ApiGateway:
                            f"submit as {m.tenant!r}")
         if m.n_learners < 1 or m.chips_per_learner < 0:
             raise ApiError(ErrorCode.INVALID_ARGUMENT, "invalid manifest")
-        if gang_chips(m) > self.p.cluster.total_chips:
-            raise ApiError(
-                ErrorCode.INVALID_ARGUMENT,
-                f"job needs {gang_chips(m)} chips; cluster has "
-                f"{self.p.cluster.total_chips}")
-        with _meta_guard():
-            if req.idempotency_key is not None:
-                existing = self.p.meta.find_idempotent(m.tenant,
-                                                       req.idempotency_key)
-                if existing is not None:
-                    # same key + different payload is a client bug: surface
-                    # it instead of silently dropping the new job
-                    prior = self.p.meta.get(existing)
-                    if prior is not None and \
-                            asdict(prior.manifest) != asdict(m):
-                        raise ApiError(
-                            ErrorCode.CONFLICT,
-                            f"idempotency key {req.idempotency_key!r} was "
-                            f"already used for {existing} with a different "
-                            f"manifest", job_id=existing)
-                    self.p.events.emit("api", "submit_deduplicated",
-                                       job=existing, tenant=m.tenant,
-                                       replica=self.replica_id)
-                    return SubmitResponse(job_id=existing, deduplicated=True)
-            ok, why = self.p.admission.check(m)
-            if not ok:
-                self.p.events.emit("api", "admission_rejected",
-                                   tenant=m.tenant, reason=why)
-                raise ApiError(ErrorCode.QUOTA_EXCEEDED,
-                               f"admission denied: {why}")
-            job_id = self.p._next_job_id()
-            # durable BEFORE ack (idempotency mapping rides the same WAL op)
-            self.p.meta.insert_job(job_id, m,
-                                   idempotency_key=req.idempotency_key)
-            self.p.admission.mark(job_id, m)
-        self.p.events.emit("api", "job_submitted", job=job_id, tenant=m.tenant,
-                           replica=self.replica_id)
+        backend = self._shard_for(m.tenant)
+        with backend.write_locked():
+            p = backend.platform
+            if gang_chips(m) > p.cluster.total_chips:
+                raise ApiError(
+                    ErrorCode.INVALID_ARGUMENT,
+                    f"job needs {gang_chips(m)} chips; cluster has "
+                    f"{p.cluster.total_chips}")
+            with _meta_guard():
+                if req.idempotency_key is not None:
+                    existing = p.meta.find_idempotent(m.tenant,
+                                                      req.idempotency_key)
+                    if existing is not None:
+                        # same key + different payload is a client bug:
+                        # surface it instead of silently dropping the job
+                        prior = p.meta.get(existing)
+                        if prior is not None and \
+                                asdict(prior.manifest) != asdict(m):
+                            raise ApiError(
+                                ErrorCode.CONFLICT,
+                                f"idempotency key {req.idempotency_key!r} "
+                                f"was already used for {existing} with a "
+                                f"different manifest", job_id=existing)
+                        p.events.emit("api", "submit_deduplicated",
+                                      job=existing, tenant=m.tenant,
+                                      replica=self.replica_id)
+                        return SubmitResponse(job_id=existing,
+                                              deduplicated=True)
+                ok, why = p.admission.check(m)
+                if not ok:
+                    p.events.emit("api", "admission_rejected",
+                                  tenant=m.tenant, reason=why)
+                    raise ApiError(ErrorCode.QUOTA_EXCEEDED,
+                                   f"admission denied: {why}")
+                job_id = p._next_job_id()
+                # durable BEFORE ack (idempotency rides the same WAL op)
+                p.meta.insert_job(job_id, m,
+                                  idempotency_key=req.idempotency_key)
+                p.admission.mark(job_id, m)
+            p.events.emit("api", "job_submitted", job=job_id,
+                          tenant=m.tenant, replica=self.replica_id,
+                          shard=backend.shard_id)
         return SubmitResponse(job_id=job_id)
 
     # -- reads -----------------------------------------------------------
     def status(self, api_key: str, job_id: str) -> JobView:
         principal = self._require(api_key, READ)
-        return JobView.of(self._owned_record(principal, job_id))
+        backend = self._locate(principal, job_id)
+        with backend.read_locked():
+            return JobView.of(self._owned_record(backend, principal, job_id))
 
     def status_history(self, api_key: str, job_id: str) -> list:
         principal = self._require(api_key, READ)
-        return list(self._owned_record(principal, job_id).status_history)
+        backend = self._locate(principal, job_id)
+        with backend.read_locked():
+            rec = self._owned_record(backend, principal, job_id)
+            return list(rec.status_history)
 
     def list_jobs(self, api_key: str, tenant: Optional[str] = None,
                   status: Optional[JobStatus] = None,
@@ -202,79 +296,182 @@ class ApiGateway:
         elif not principal.owns(tenant):
             raise ApiError(ErrorCode.FORBIDDEN,
                            f"cannot list jobs of tenant {tenant!r}")
-        with _meta_guard():
-            recs, next_cursor = self.p.meta.jobs_page(
+        limit = _parse_limit(limit) or DEFAULT_PAGE
+        if tenant is None and len(self.router.backends) > 1:
+            return self._list_jobs_federated(status, cursor, limit)
+        backend = (self._shard_for(tenant) if tenant is not None
+                   else self._sole_shard())
+        with backend.read_locked(), _meta_guard():
+            recs, next_cursor = backend.platform.meta.jobs_page(
                 tenant=tenant, status=status,
-                cursor=_parse_job_cursor(cursor),
-                limit=_parse_limit(limit) or DEFAULT_PAGE)
-        return Page(items=[JobView.of(r) for r in recs],
-                    next_cursor=next_cursor)
+                cursor=_parse_job_cursor(cursor), limit=limit)
+            # project INSIDE the lock: a concurrent tick may mutate the
+            # records the moment we release it (torn status/finished_at)
+            items = [JobView.of(r) for r in recs]
+        return Page(items=items, next_cursor=next_cursor)
+
+    def _list_jobs_federated(self, status, cursor, limit: int) -> Page:
+        """Admin all-tenant listing over >1 shard: merge per-shard pages
+        behind a composite cursor. Each shard keeps its own stable job-id
+        cursor, so items never repeat and submits that land mid-iteration
+        on ANY shard are still served by a later page (every page re-polls
+        every shard from its cursor, in shard order)."""
+        cursors = parse_composite_cursor(cursor, self.router, JOB_CURSOR_RE)
+        items: list = []
+        for backend in self.router.backends:
+            need = limit - len(items)
+            if need <= 0:
+                break
+            if not backend.alive:
+                # a partial admin listing would silently hide a shard's
+                # tenants; fail honestly instead
+                raise _shard_down(backend)
+            with backend.read_locked(), _meta_guard():
+                recs, _ = backend.platform.meta.jobs_page(
+                    tenant=None, status=status,
+                    cursor=cursors.get(backend.shard_id), limit=need)
+                views = [JobView.of(r) for r in recs]  # project under lock
+            if recs:
+                cursors[backend.shard_id] = recs[-1].job_id
+                items += views
+        next_cursor = (encode_composite_cursor(cursors)
+                       if len(items) == limit else None)
+        return Page(items=items, next_cursor=next_cursor)
 
     def logs(self, api_key: str, job_id: str, cursor: Optional[str] = None,
-             limit: Optional[int] = None) -> "Page[str]":
+             limit: Optional[int] = None,
+             wait_ms: Optional[int] = None) -> "Page[str]":
         principal = self._require(api_key, READ)
-        self._owned_record(principal, job_id)  # existence + ownership
-        # no limit means "a full page", never "the whole stream": MAX_PAGE
-        # bounds every single call (clients follow next_cursor)
-        lines, next_cursor = self.p.log_index.stream_page(
-            job_id, cursor=_parse_cursor(cursor),
-            limit=_parse_limit(limit) or MAX_PAGE)
+        backend = self._locate(principal, job_id)
+        start = _parse_cursor(cursor)
+        limit = _parse_limit(limit) or MAX_PAGE
+        budget_s = _parse_wait_ms(wait_ms) / 1000.0
+        deadline = time.monotonic() + budget_s
+        while True:
+            if not backend.alive:
+                raise _shard_down(backend)
+            with backend.read_locked():
+                rec = self._owned_record(backend, principal, job_id)
+                # no limit means "a full page", never "the whole stream":
+                # MAX_PAGE bounds every single call
+                lines, next_off = backend.platform.log_index.stream_page(
+                    job_id, cursor=start, limit=limit)
+                terminal = rec.status in TERMINAL
+            if lines or terminal or time.monotonic() >= deadline:
+                break
+            # Park OUTSIDE the shard lock: a long-poll must never block
+            # the ticker (writer) or other readers while it waits.
+            time.sleep(_POLL_S)
+        if budget_s > 0:
+            # Follow-mode cursor contract: next_cursor stays set (the
+            # resume offset) until the job is terminal AND fully consumed,
+            # so `logs --follow` can keep polling from it.
+            done = terminal and next_off is None
+            next_off = None if done else start + len(lines)
         return Page(items=lines,
-                    next_cursor=None if next_cursor is None
-                    else str(next_cursor))
+                    next_cursor=None if next_off is None else str(next_off))
 
     def search_logs(self, api_key: str, query: str,
                     job_id: Optional[str] = None,
                     cursor: Optional[str] = None,
                     limit: Optional[int] = None) -> "Page":
         principal = self._require(api_key, READ)
+        limit = _parse_limit(limit) or MAX_PAGE
+        if job_id is None and principal.is_admin \
+                and len(self.router.backends) > 1:
+            return self._search_logs_federated(query, cursor, limit)
         if job_id is not None:
-            self._owned_record(principal, job_id)
-            allow = None
+            backend = self._locate(principal, job_id)
         elif principal.is_admin:
-            allow = None
+            backend = self._sole_shard()
         else:
-            tenant_of = {}
-
-            def allow(jid, _memo=tenant_of):
-                if jid not in _memo:
-                    with _meta_guard():
-                        rec = self.p.meta.get(jid)
-                    _memo[jid] = rec.manifest.tenant if rec else None
-                return _memo[jid] == principal.tenant
-        recs, next_cursor = self.p.log_index.search_page(
-            query, job_id=job_id, cursor=_parse_cursor(cursor),
-            limit=_parse_limit(limit) or MAX_PAGE, allow=allow)
+            backend = self._shard_for(principal.tenant)
+        with backend.read_locked():
+            if job_id is not None:
+                self._owned_record(backend, principal, job_id)
+                allow = None
+            elif principal.is_admin:
+                allow = None
+            else:
+                allow = self._tenant_filter(backend, principal)
+            recs, next_cursor = backend.platform.log_index.search_page(
+                query, job_id=job_id, cursor=_parse_cursor(cursor),
+                limit=limit, allow=allow)
         return Page(items=recs,
                     next_cursor=None if next_cursor is None
                     else str(next_cursor))
 
+    @staticmethod
+    def _tenant_filter(backend, principal: Principal):
+        tenant_of: dict = {}
+
+        def allow(jid, _memo=tenant_of):
+            if jid not in _memo:
+                with _meta_guard():
+                    rec = backend.platform.meta.get(jid)
+                _memo[jid] = rec.manifest.tenant if rec else None
+            return _memo[jid] == principal.tenant
+
+        return allow
+
+    def _search_logs_federated(self, query: str, cursor, limit: int) -> Page:
+        """Admin all-shard log search: same composite-cursor merge as the
+        federated listing, with per-shard append offsets as cursors."""
+        cursors = parse_composite_cursor(cursor, self.router,
+                                         OFFSET_CURSOR_RE)
+        items: list = []
+        for backend in self.router.backends:
+            need = limit - len(items)
+            if need <= 0:
+                break
+            if not backend.alive:
+                raise _shard_down(backend)
+            with backend.read_locked():
+                recs, next_off = backend.platform.log_index.search_page(
+                    query, cursor=int(cursors.get(backend.shard_id, 0)),
+                    limit=need, allow=None)
+                if next_off is None:
+                    # scanned to the end: remember how far, so records
+                    # appended later are still found by a later page
+                    next_off = len(backend.platform.log_index.records)
+            cursors[backend.shard_id] = str(next_off)
+            items += recs
+        next_cursor = (encode_composite_cursor(cursors)
+                       if len(items) == limit else None)
+        return Page(items=items, next_cursor=next_cursor)
+
     # -- lifecycle writes -------------------------------------------------
     def halt(self, api_key: str, job_id: str, requeue: bool = False):
         principal = self._require(api_key, WRITE)
-        rec = self._owned_record(principal, job_id)
-        # a late/retried halt must never rewrite a terminal record
-        # (COMPLETED → HALTED would let resume() re-run a finished job)
-        if rec.status in TERMINAL:
-            raise ApiError(ErrorCode.FAILED_PRECONDITION,
-                           f"{job_id} is already {rec.status.value}")
-        with _meta_guard():
-            self.p._halt_internal(job_id, requeue=requeue)
+        backend = self._locate(principal, job_id)
+        with backend.write_locked():
+            rec = self._owned_record(backend, principal, job_id)
+            # a late/retried halt must never rewrite a terminal record
+            # (COMPLETED → HALTED would let resume() re-run a finished job)
+            if rec.status in TERMINAL:
+                raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                               f"{job_id} is already {rec.status.value}")
+            with _meta_guard():
+                backend.platform._halt_internal(job_id, requeue=requeue)
 
     def resume(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
-        rec = self._owned_record(principal, job_id)
-        if rec.status != JobStatus.HALTED:
-            raise ApiError(ErrorCode.FAILED_PRECONDITION,
-                           f"{job_id} is not HALTED")
-        with _meta_guard():
-            self.p._resume_internal(job_id)
+        backend = self._locate(principal, job_id)
+        with backend.write_locked():
+            rec = self._owned_record(backend, principal, job_id)
+            if rec.status != JobStatus.HALTED:
+                raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                               f"{job_id} is not HALTED")
+            with _meta_guard():
+                backend.platform._resume_internal(job_id)
 
     def cancel(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
-        rec = self._owned_record(principal, job_id)
-        if rec.status in TERMINAL:
-            raise ApiError(ErrorCode.FAILED_PRECONDITION,
-                           f"{job_id} is already {rec.status.value}")
-        with _meta_guard():
-            self.p._cancel_internal(job_id)
+        backend = self._locate(principal, job_id)
+        with backend.write_locked():
+            rec = self._owned_record(backend, principal, job_id)
+            if rec.status in TERMINAL:
+                raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                               f"{job_id} is already {rec.status.value}")
+            with _meta_guard():
+                backend.platform._cancel_internal(job_id)

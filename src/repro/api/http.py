@@ -7,13 +7,19 @@ The full contract is written down in ``docs/api.md`` and pinned by
 ``tests/test_docs_api.py``.
 
 Server side
-    :class:`ApiHttpServer` mounts the routes below over a platform's
-    ``LoadBalancer`` (so HTTP composes with replica crash-masking) with an
-    optional :class:`~repro.api.ratelimit.RateLimitedApi` front (per-tenant
-    token buckets + bounded in-flight gate → 429 with ``Retry-After``).
-    The simulation core is not thread-safe, so gateway calls are
-    serialized under ``server.lock``; throttled calls are rejected *before*
-    that lock, which is what keeps a flooding tenant cheap.
+    :class:`ApiHttpServer` mounts the routes below over a platform's (or
+    :class:`~repro.api.federation.Federation`'s) ``LoadBalancer`` — so
+    HTTP composes with replica crash-masking — with an optional
+    :class:`~repro.api.ratelimit.RateLimitedApi` front (per-tenant token
+    buckets + bounded in-flight gate → 429 with ``Retry-After``).
+    Locking is per-shard inside the gateway (reads share a shard's RW
+    lock, writes take it exclusively; see ``repro.api.backend``), so a
+    read on one shard never queues behind a submit — or a simulation
+    tick — on another. ``server.lock`` remains for code that ticks the
+    sim from another thread (``with server.lock: platform.tick()``): it
+    takes every shard's write lock in shard order. Throttled calls are
+    rejected *before* any lock, which is what keeps a flooding tenant
+    cheap.
 
 Client side
     :class:`HttpTransport` speaks the wire protocol and re-raises wire
@@ -51,6 +57,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib import parse as urlparse
 
+from repro.api.backend import AllShardsLock
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi
 from repro.api.types import (
     API_VERSION,
@@ -143,32 +150,6 @@ def _search_rec_to_wire(rec) -> dict:
 # --------------------------------------------------------------------------
 # Server
 # --------------------------------------------------------------------------
-
-class _Serialized:
-    """Serialize v1 verb calls under one lock (the sim is single-threaded).
-
-    Exposes the same nine-verb surface so it stacks under RateLimitedApi:
-    throttling happens before the lock, real work inside it.
-    """
-
-    _VERBS = ("submit", "status", "status_history", "list_jobs", "logs",
-              "search_logs", "halt", "resume", "cancel")
-
-    def __init__(self, inner, lock: threading.Lock):
-        self._inner = inner
-        self._lock = lock
-
-    def __getattr__(self, name):
-        if name not in self._VERBS:
-            raise AttributeError(name)
-        inner_fn = getattr(self._inner, name)
-
-        def call(*args, **kwargs):
-            with self._lock:
-                return inner_fn(*args, **kwargs)
-
-        return call
-
 
 class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
@@ -314,7 +295,8 @@ class _Handler(BaseHTTPRequestHandler):
                 if method == "GET" and tail == "logs":
                     page = api.logs(key, job_id,
                                     cursor=qs.get("cursor", [None])[0],
-                                    limit=self._int_param(qs, "limit"))
+                                    limit=self._int_param(qs, "limit"),
+                                    wait_ms=self._int_param(qs, "wait_ms"))
                     return self._send_json(
                         200, _page_to_wire(page, page.items))
                 if method == "POST" and tail == "halt":
@@ -343,14 +325,27 @@ class _Handler(BaseHTTPRequestHandler):
                        f"no route for {method} {split.path}")
 
     def _health(self):
+        """Liveness, aggregated over replicas AND backend shards: the
+        top-level shape (status/replicas_alive/replicas_total) is stable;
+        ``shards`` details each backend so operators see a dead shard
+        even while every replica is up (the tier then reports
+        "degraded" — that shard's tenants are getting UNAVAILABLE)."""
         replicas = self.ctx.platform.api_replicas
+        backends = self.ctx.platform.router.backends
         alive = sum(1 for r in replicas if r.alive)
-        status = "ok" if alive == len(replicas) else \
-            ("degraded" if alive else "down")
+        shards_alive = sum(1 for b in backends if b.alive)
+        degraded = alive < len(replicas) or shards_alive < len(backends)
+        status = ("down" if not alive
+                  else ("degraded" if degraded else "ok"))
         self._send_json(200 if alive else 503,
                         {"api_version": API_VERSION, "status": status,
                          "replicas_alive": alive,
-                         "replicas_total": len(replicas)})
+                         "replicas_total": len(replicas),
+                         "shards_alive": shards_alive,
+                         "shards_total": len(backends),
+                         "shards": [{"shard_id": b.shard_id,
+                                     "status": "ok" if b.alive else "down"}
+                                    for b in backends]})
 
     def _submit(self, api, key: str):
         body = self._json_body()
@@ -432,25 +427,28 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 class ApiHttpServer:
-    """Threaded stdlib HTTP server over a platform's API tier.
+    """Threaded stdlib HTTP server over a platform's (or a
+    :class:`~repro.api.federation.Federation`'s) API tier.
 
     ``rate_limit`` installs a :class:`RateLimitedApi` front (per-tenant
-    token buckets + bounded in-flight gate). ``lock`` serializes all
-    platform access — hold it when ticking the simulation from another
-    thread (``with server.lock: platform.tick()``).
+    token buckets + bounded in-flight gate). Verb handlers lock per shard
+    inside the gateway (reads shared, writes exclusive); ``lock`` is the
+    all-shards write lock — hold it when ticking the simulation from
+    another thread (``with server.lock: platform.tick()``). A
+    ``Federation`` driver can instead call ``federation.tick()``, which
+    locks one shard at a time so other shards keep serving reads.
     """
 
     def __init__(self, platform, host: str = "127.0.0.1", port: int = 0,
                  rate_limit: Optional[RateLimitConfig] = None,
                  per_tenant: Optional[dict] = None):
         self.platform = platform
-        self.lock = threading.Lock()
-        serialized = _Serialized(platform.api, self.lock)
+        self.lock = AllShardsLock(platform.router)
         self.ratelimiter = None
         if rate_limit is not None:
-            self.ratelimiter = RateLimitedApi(serialized, platform.auth,
+            self.ratelimiter = RateLimitedApi(platform.api, platform.auth,
                                               rate_limit, per_tenant)
-        self.api = self.ratelimiter or serialized
+        self.api = self.ratelimiter or platform.api
         handler = type("BoundHandler", (_Handler,), {"ctx": self})
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._thread: Optional[threading.Thread] = None
@@ -530,7 +528,8 @@ class HttpTransport:
     def _request(self, method: str, path: str, api_key: Optional[str] = None,
                  body: Optional[dict] = None, query: Optional[dict] = None,
                  headers: Optional[dict] = None,
-                 allow_error_status: bool = False) -> tuple[int, dict]:
+                 allow_error_status: bool = False,
+                 timeout_floor: Optional[float] = None) -> tuple[int, dict]:
         if query:
             qs = {k: v for k, v in query.items() if v is not None}
             if qs:
@@ -553,6 +552,14 @@ class HttpTransport:
         for attempt in (0, 1):
             reused = getattr(self._local, "conn", None) is not None
             conn = self._conn()
+            # A long-poll (logs wait_ms) may legitimately park server-side
+            # longer than the transport's socket timeout: raise this
+            # request's read timeout to cover the park, restore after.
+            raised_timeout = False
+            if timeout_floor is not None and conn.sock is not None \
+                    and timeout_floor > self.timeout:
+                conn.sock.settimeout(timeout_floor)
+                raised_timeout = True
             try:
                 conn.request(method, path, body=data, headers=hdrs)
             except (http.client.HTTPException, OSError) as e:
@@ -564,6 +571,8 @@ class HttpTransport:
             try:
                 resp = conn.getresponse()
                 status, payload = resp.status, resp.read()
+                if raised_timeout:  # keep-alive socket back to the default
+                    conn.sock.settimeout(self.timeout)
                 break
             except (http.client.HTTPException, OSError) as e:
                 self._drop_conn()
@@ -639,9 +648,13 @@ class HttpTransport:
         return Page(items=[JobView(**v) for v in d["items"]],
                     next_cursor=d["next_cursor"])
 
-    def logs(self, api_key, job_id, cursor=None, limit=None) -> Page:
+    def logs(self, api_key, job_id, cursor=None, limit=None,
+             wait_ms=None) -> Page:
+        floor = None if not wait_ms else wait_ms / 1000.0 + 5.0
         _, d = self._request("GET", f"/v1/jobs/{job_id}/logs", api_key,
-                             query={"cursor": cursor, "limit": limit})
+                             query={"cursor": cursor, "limit": limit,
+                                    "wait_ms": wait_ms},
+                             timeout_floor=floor)
         return Page(items=d["items"], next_cursor=d["next_cursor"])
 
     def search_logs(self, api_key, query, job_id=None, cursor=None,

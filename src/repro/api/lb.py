@@ -12,10 +12,18 @@ any side effect, so re-issuing is safe; ``submit`` dedup additionally rides
 on idempotency keys) fails over to the next replica, trying each at most
 once. Non-retryable errors (auth, validation, quota, not-found) propagate
 immediately — they would fail identically everywhere.
+
+Federation-aware: an ``UNAVAILABLE`` whose details carry ``shard_down``
+means the caller's *backend shard* is dead, not the replica — every
+replica routes the same tenant to the same shard, so failing over would
+burn every replica to learn nothing. The balancer propagates it
+immediately (and counts it in ``stats["shard_down"]``); tenants on other
+shards are unaffected, and replica crash-masking still composes on top.
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 from repro.api.gateway import ApiGateway
@@ -29,31 +37,47 @@ class LoadBalancer:
         self.replicas: list[ApiGateway] = list(replicas)
         self.events = events
         self._rr = 0
-        self.stats = {"calls": 0, "failovers": 0, "exhausted": 0}
+        # handler threads hit the balancer concurrently now that verbs
+        # lock per shard instead of under one global HTTP lock — guard the
+        # counters or the failover/shard_down numbers the benchmarks
+        # report would undercount under exactly the loads they measure
+        self._stats_lock = threading.Lock()
+        self.stats = {"calls": 0, "failovers": 0, "exhausted": 0,
+                      "shard_down": 0}
+
+    def _bump(self, key: str):
+        with self._stats_lock:
+            self.stats[key] += 1
 
     @property
     def healthy_replicas(self) -> list:
         return [r for r in self.replicas if r.alive]
 
     def _call(self, method: str, *args, **kwargs):
-        self.stats["calls"] += 1
+        self._bump("calls")
         n = len(self.replicas)
         last: Optional[ApiError] = None
         for _ in range(n):
-            replica = self.replicas[self._rr % n]
-            self._rr += 1
+            with self._stats_lock:
+                replica = self.replicas[self._rr % n]
+                self._rr += 1
             try:
                 return getattr(replica, method)(*args, **kwargs)
             except ApiError as e:
                 if not e.retryable:
                     raise
+                if e.details.get("shard_down"):
+                    # the tenant's shard is down, not this replica: every
+                    # replica would answer identically — don't mask
+                    self._bump("shard_down")
+                    raise
                 last = e
-                self.stats["failovers"] += 1
+                self._bump("failovers")
                 if self.events is not None:
                     self.events.emit("api", "lb_failover",
                                      replica=replica.replica_id,
                                      method=method)
-        self.stats["exhausted"] += 1
+        self._bump("exhausted")
         raise last if last is not None else ApiError(
             ErrorCode.UNAVAILABLE, "no replicas configured")
 

@@ -15,9 +15,13 @@ others. Two mechanisms compose in front of the :class:`LoadBalancer`:
     protection for everyone).
 
 ``RateLimitedApi`` wraps anything exposing the v1 verb surface (the
-balancer, one gateway replica, or the HTTP server's serialized front), so
-rate limiting composes with replica crash-masking: a throttled call never
-reaches the balancer, an admitted call still fails over on UNAVAILABLE.
+balancer, one gateway replica — of a single platform or a multi-shard
+federation), so rate limiting composes with replica crash-masking AND
+with per-shard locking: a throttled call is rejected before any shard
+lock is even resolved, an admitted call still fails over on UNAVAILABLE.
+One caveat worth knowing: a ``logs`` long-poll (``wait_ms``) occupies an
+in-flight slot while it parks, so ``max_inflight`` bounds the number of
+concurrently parked followers too.
 
 Buckets are keyed by the *tenant* behind the API key (all of a tenant's
 keys share one budget); unknown keys share a single "anonymous" bucket so

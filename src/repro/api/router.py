@@ -1,0 +1,117 @@
+"""TenantRouter: deterministic tenant→shard placement (FfDL §3).
+
+FfDL shards its MongoDB metastore and scales backend microservices
+independently of the REST tier; the thing that keeps the wire contract
+stable across that re-architecture is a *deterministic* mapping from
+tenant to backend. We reproduce it as:
+
+  * **hash-by-tenant** — SHA-256 of the tenant name modulo the shard
+    count. Stable across processes and runs (no ``hash()`` randomization),
+    so a tenant's jobs always live on one shard and any gateway replica
+    resolves the same shard for the same key;
+  * **an explicit pin table** — tests, benchmarks, and operators can place
+    a tenant on a named shard (``pin("team-a", "shard-2")``), overriding
+    the hash. Pins are how the federation drill puts one tenant per shard
+    and how an operator would drain a shard.
+
+Cross-shard admin listings paginate behind a **composite cursor**: an
+opaque string carrying one per-shard cursor per shard
+(``ms1~shard-0=job-00004~shard-1=job-1000002``). Each per-shard cursor is
+the shard's own stable cursor (job ids for listings, append offsets for
+log search), so the merged walk inherits the per-shard guarantees:
+already-served items never repeat, and items that arrive mid-iteration
+are still picked up on a later page. Malformed composite cursors are
+rejected with ``INVALID_ARGUMENT`` like any other bad cursor.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Dict, Optional
+
+from repro.api.types import ApiError, ErrorCode
+
+# Composite-cursor wire prefix. Versioned so a future cursor format can
+# coexist; everything after it is ``~shard_id=per_shard_cursor`` segments.
+COMPOSITE_PREFIX = "ms1"
+
+# What a valid per-shard cursor looks like, per surface.
+JOB_CURSOR_RE = re.compile(r"job-\d+")
+OFFSET_CURSOR_RE = re.compile(r"\d+")
+
+
+class TenantRouter:
+    """Deterministic tenant→Backend resolution over a fixed shard list."""
+
+    def __init__(self, backends, pins: Optional[Dict[str, str]] = None):
+        if not backends:
+            raise ValueError("need at least one backend shard")
+        self.backends = list(backends)
+        self._by_id = {b.shard_id: b for b in self.backends}
+        if len(self._by_id) != len(self.backends):
+            raise ValueError("shard ids must be unique")
+        self.pins: Dict[str, str] = {}
+        for tenant, shard_id in (pins or {}).items():
+            self.pin(tenant, shard_id)
+
+    @property
+    def shard_ids(self) -> list:
+        return [b.shard_id for b in self.backends]
+
+    def backend(self, shard_id: str):
+        return self._by_id[shard_id]
+
+    def pin(self, tenant: str, shard_id: str):
+        """Place ``tenant`` on a named shard, overriding the hash."""
+        if shard_id not in self._by_id:
+            raise ValueError(f"unknown shard {shard_id!r} "
+                             f"(have {sorted(self._by_id)})")
+        self.pins[tenant] = shard_id
+
+    def unpin(self, tenant: str):
+        self.pins.pop(tenant, None)
+
+    def shard_for(self, tenant: str):
+        """The Backend owning ``tenant`` — pinned, else hashed."""
+        pinned = self.pins.get(tenant)
+        if pinned is not None:
+            return self._by_id[pinned]
+        digest = hashlib.sha256(tenant.encode()).hexdigest()
+        return self.backends[int(digest, 16) % len(self.backends)]
+
+
+# --------------------------------------------------------------------------
+# Composite cursors (cross-shard pagination)
+# --------------------------------------------------------------------------
+
+def encode_composite_cursor(cursors: Dict[str, str]) -> str:
+    """``{shard_id: per_shard_cursor}`` → one opaque wire cursor."""
+    parts = [f"{sid}={cur}" for sid, cur in sorted(cursors.items())]
+    return "~".join([COMPOSITE_PREFIX] + parts)
+
+
+def parse_composite_cursor(cursor: Optional[str], router: TenantRouter,
+                           item_re: re.Pattern) -> Dict[str, str]:
+    """Validate + decode a composite cursor into ``{shard_id: cursor}``.
+
+    Anything that is not exactly ``ms1`` followed by unique
+    ``known_shard=valid_cursor`` segments is rejected with the stable
+    ``INVALID_ARGUMENT`` code — a garbage cursor must never silently
+    compare against real ids and serve a wrong (empty or duplicated) page.
+    """
+    if cursor is None:
+        return {}
+    bad = ApiError(ErrorCode.INVALID_ARGUMENT,
+                   f"malformed cursor: {cursor!r}")
+    parts = str(cursor).split("~")
+    if parts[0] != COMPOSITE_PREFIX or len(parts) < 2:
+        raise bad
+    out: Dict[str, str] = {}
+    for seg in parts[1:]:
+        shard_id, eq, per_shard = seg.partition("=")
+        if not eq or shard_id not in router._by_id or shard_id in out \
+                or not item_re.fullmatch(per_shard):
+            raise bad
+        out[shard_id] = per_shard
+    return out

@@ -47,7 +47,13 @@ class ErrorCode(str, Enum):
     FAILED_PRECONDITION = "FAILED_PRECONDITION"  # e.g. resume on non-HALTED job
     CONFLICT = "CONFLICT"                      # idempotency key reused with a
     #                                            different payload
-    UNAVAILABLE = "UNAVAILABLE"                # replica/metastore down; retryable
+    UNAVAILABLE = "UNAVAILABLE"                # replica/metastore/shard down;
+    #                                            retryable — except when
+    #                                            details carry ``shard_down``
+    #                                            (the tenant's backend shard
+    #                                            is dead; every replica
+    #                                            answers identically, so the
+    #                                            LB propagates immediately)
     UNSUPPORTED_VERSION = "UNSUPPORTED_VERSION"
     RATE_LIMITED = "RATE_LIMITED"              # per-tenant backpressure (429);
     #                                            details carry ``retry_after``
@@ -131,6 +137,10 @@ class Page(Generic[T]):
     """
 
     items: List[T] = field(default_factory=list)
+    # Opaque; three shapes exist behind it, all stable under concurrent
+    # appends: job ids (listings), append offsets (logs/search), and the
+    # composite multi-shard form (admin reads over a federation; one
+    # per-shard cursor per shard — see repro.api.router).
     next_cursor: Optional[str] = None
     api_version: str = API_VERSION
 

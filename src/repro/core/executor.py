@@ -133,6 +133,11 @@ class SimLearner:
                 self._phase_started = now
                 self._last = now
                 self.ctx.set_status("PROCESSING")
+                # learners log to stdout; the LogCollector tails it into
+                # the searchable index (§3.2) — and `logs --follow` streams
+                # it live over the wire
+                self.ctx.log(f"processing started "
+                             f"(target {dur:.0f} sim-seconds)")
             return
         if self.phase == "PROCESSING":
             if not self.stalled:
@@ -144,15 +149,19 @@ class SimLearner:
                 self.ctx.volume.write(
                     f"ckpt/learner-{self.ctx.learner_idx}",
                     str(self.checkpointed))
+                self.ctx.log(f"checkpointed at progress "
+                             f"{self.checkpointed:.0f}/{dur:.0f}")
             if self.progress >= dur:
                 self.phase = "STORING"
                 self._phase_started = now
                 self.ctx.set_status("STORING")
+                self.ctx.log("storing results")
             return
         if self.phase == "STORING":
             if now - self._phase_started >= self.STORE_LATENCY:
                 self.done = True
                 self.ctx.set_status("COMPLETED", {"progress": self.progress})
+                self.ctx.log("completed")
                 self.ctx.write_exit(0)
 
 

@@ -45,8 +45,10 @@ import itertools
 from typing import Optional
 
 from repro.api.auth import AuthService
+from repro.api.backend import Backend
 from repro.api.gateway import ApiGateway
 from repro.api.lb import LoadBalancer
+from repro.api.router import TenantRouter
 from repro.core.admission import AdmissionController
 from repro.core.chaos import ChaosConfig, ChaosMonkey
 from repro.core.cluster import ClusterModel
@@ -71,7 +73,14 @@ class FfDLPlatform:
                  chaos: Optional[ChaosConfig] = None, clock=None,
                  tick_period: float = 1.0, seed: int = 0,
                  objstore_bandwidth: Optional[float] = None,
-                 n_api_replicas: int = 3):
+                 n_api_replicas: int = 3, shard_id: str = "shard-0",
+                 job_id_base: int = 0, shared_reads: bool = True):
+        # -- shard construction hooks (repro.api.federation) --------------
+        # shard_id names this platform as a backend shard; job_id_base
+        # offsets the job counter so ids stay globally unique across a
+        # federation; shared_reads=False degrades the shard lock to the
+        # pre-federation exclusive behaviour (benchmark baseline).
+        self.shard_id = shard_id
         self.clock = clock or SimClock()
         self.tick_period = tick_period
         self.events = EventLog(self.clock)
@@ -97,11 +106,19 @@ class FfDLPlatform:
         self.log_index = LogIndex()
         self.guardians: dict[str, object] = {}
         self.volumes: dict[str, JobVolume] = {}
-        self._job_ctr = itertools.count(1)
+        self._job_ctr = itertools.count(job_id_base + 1)
         # ------------------------------------------------ API tier (§3.2)
+        # A standalone platform is a one-shard federation: the gateway
+        # replicas route through a TenantRouter over this platform's own
+        # Backend (per-shard RW lock + health). repro.api.federation
+        # reuses the same Backend when composing multi-shard tiers, so
+        # there is exactly one lock per shard no matter who fronts it.
         self.auth = AuthService(seed=seed)
+        self.backend = Backend(shard_id, self, shared_reads=shared_reads)
+        self.router = TenantRouter([self.backend])
         self.api_replicas = [
-            ApiGateway(self, self.auth, replica_id=f"api-{i}")
+            ApiGateway(self.router, self.auth, replica_id=f"api-{i}",
+                       events=self.events)
             for i in range(max(1, n_api_replicas))]
         self.api = LoadBalancer(self.api_replicas, events=self.events)
 

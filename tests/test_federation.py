@@ -1,0 +1,402 @@
+"""Federated multi-shard backends behind the v1 gateway tier: tenant
+routing + pins, per-shard RW locking, globally unique job ids, composite
+cross-shard pagination (stability under mid-iteration submits, malformed
+cursors), shard-crash isolation, aggregated health, and the `logs`
+long-poll behind `ffdl logs --follow` — all against the unchanged v1 wire
+contract (same assertions as the 1-shard tests in test_http_api.py).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.api import (
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    Federation,
+    HttpTransport,
+    JOB_ID_STRIDE,
+    RWLock,
+    SubmitRequest,
+)
+from repro.core import JobManifest, JobStatus
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+@pytest.fixture
+def fed():
+    """4 shards, one tenant pinned per shard, plus an operator client."""
+    f = Federation(n_shards=4, n_hosts=2, chips_per_host=4)
+    for i in range(4):
+        f.pin(f"team-{i}", f"shard-{i}")
+    return f
+
+
+def keys(fed, n=4):
+    return [fed.auth.issue_key(f"team-{i}") for i in range(n)]
+
+
+# ------------------------------------------------------------------ RWLock
+
+
+def test_rwlock_readers_share_writers_exclude():
+    lock = RWLock()
+    in_read, events = threading.Barrier(2, timeout=5), []
+
+    def reader():
+        with lock.read_locked():
+            in_read.wait()  # both readers inside simultaneously
+            events.append("r")
+
+    t1, t2 = threading.Thread(target=reader), threading.Thread(target=reader)
+    t1.start(), t2.start()
+    t1.join(5), t2.join(5)
+    assert events == ["r", "r"]
+    assert lock.stats["max_concurrent_readers"] == 2
+
+    # a writer holds off readers until it releases
+    order = []
+    with lock.write_locked():
+        t = threading.Thread(
+            target=lambda: (lock.read_locked().__enter__(),
+                            order.append("read")))
+        t.start()
+        time.sleep(0.05)
+        order.append("write-done")
+    t.join(5)
+    assert order == ["write-done", "read"]
+
+
+def test_rwlock_exclusive_mode_serializes_reads():
+    lock = RWLock(shared_reads=False)
+    with lock.read_locked():
+        pass
+    assert lock.stats["writes"] == 1  # reads degraded to write acquisitions
+    assert lock.stats["max_concurrent_readers"] == 0
+
+
+# ---------------------------------------------------------------- routing
+
+
+def test_router_is_deterministic_and_pinnable(fed):
+    assert fed.shard_of("some-team") == fed.shard_of("some-team")
+    assert fed.shard_of("team-2") == "shard-2"  # pinned
+    fed.pin("some-team", "shard-3")
+    assert fed.shard_of("some-team") == "shard-3"
+    with pytest.raises(ValueError):
+        fed.pin("x", "shard-99")
+    # hashing spreads the tenant space over all shards
+    placed = {fed.shard_of(f"t{i}") for i in range(64)}
+    assert placed == {f"shard-{i}" for i in range(4)}
+
+
+def test_job_ids_globally_unique_across_shards(fed):
+    ids = []
+    for i, key in enumerate(keys(fed)):
+        ids.append(fed.api.submit(key, SubmitRequest(
+            manifest=sim_job(tenant=f"team-{i}"))).job_id)
+    assert len(set(ids)) == 4
+    assert ids[0] == "job-00001"  # shard-0 unchanged from single-platform
+    assert ids[1] == f"job-{JOB_ID_STRIDE + 1}"
+    # every id still matches the wire shape
+    for j in ids:
+        assert j.startswith("job-")
+
+
+def test_submits_land_on_the_tenant_shard(fed):
+    k0, k1 = keys(fed)[:2]
+    j0 = fed.api.submit(k0, SubmitRequest(
+        manifest=sim_job(tenant="team-0"))).job_id
+    j1 = fed.api.submit(k1, SubmitRequest(
+        manifest=sim_job(tenant="team-1"))).job_id
+    assert fed.shards[0].meta.get(j0) is not None
+    assert fed.shards[0].meta.get(j1) is None
+    assert fed.shards[1].meta.get(j1) is not None
+
+
+# ------------------------------------------------- tenant isolation
+
+
+def test_tenant_key_gets_not_found_for_other_shards_jobs(fed):
+    """A shard-B job id is NOT data for a shard-A tenant — isolation holds
+    across shards exactly as within one (NOT_FOUND, never FORBIDDEN leaks
+    of existence, never another shard's record)."""
+    k0, k1 = keys(fed)[:2]
+    j1 = fed.api.submit(k1, SubmitRequest(
+        manifest=sim_job(tenant="team-1"))).job_id
+    for call in (lambda: fed.api.status(k0, j1),
+                 lambda: fed.api.status_history(k0, j1),
+                 lambda: fed.api.logs(k0, j1),
+                 lambda: fed.api.halt(k0, j1),
+                 lambda: fed.api.cancel(k0, j1)):
+        with pytest.raises(ApiError) as ei:
+            call()
+        assert ei.value.code == ErrorCode.NOT_FOUND
+    # the op key locates it on whatever shard holds it
+    ops = ApiClient.for_platform(fed)
+    assert ops.view(j1).tenant == "team-1"
+    assert ops.status_history(j1)
+
+
+# ------------------------------------- composite cross-shard pagination
+
+
+def test_admin_listing_merges_all_shards_exactly_once(fed):
+    ks = keys(fed)
+    ids = {fed.api.submit(ks[i % 4], SubmitRequest(
+        manifest=sim_job(name=f"j{i}", tenant=f"team-{i % 4}"))).job_id
+        for i in range(14)}
+    ops = ApiClient.for_platform(fed)
+    seen, cursor = [], None
+    while True:
+        page = ops.list_jobs(cursor=cursor, limit=3)
+        seen += [v.job_id for v in page.items]
+        cursor = page.next_cursor
+        if cursor is None:
+            break
+    assert len(seen) == len(set(seen)) == 14
+    assert set(seen) == ids
+    # tenant-scoped listing stays single-shard with plain job-id cursors
+    page = fed.api.list_jobs(ks[1], limit=2)
+    assert page.next_cursor is None or page.next_cursor.startswith("job-")
+
+
+def test_composite_cursor_stable_while_jobs_submitted_mid_iteration(fed):
+    ks = keys(fed)
+    before = [fed.api.submit(ks[i % 4], SubmitRequest(
+        manifest=sim_job(name=f"b{i}", tenant=f"team-{i % 4}"))).job_id
+        for i in range(8)]
+    ops = ApiClient.for_platform(fed)
+    page1 = ops.list_jobs(limit=3)
+    assert page1.next_cursor is not None
+    # submits land on EVERY shard between page fetches — including shards
+    # whose section of the walk has already been served
+    late = [fed.api.submit(ks[i], SubmitRequest(
+        manifest=sim_job(name=f"late{i}", tenant=f"team-{i}"))).job_id
+        for i in range(4)]
+    seen, cursor = [v.job_id for v in page1.items], page1.next_cursor
+    while cursor is not None:
+        page = ops.list_jobs(cursor=cursor, limit=3)
+        seen += [v.job_id for v in page.items]
+        cursor = page.next_cursor
+    assert len(seen) == len(set(seen)), "no job served twice"
+    assert set(before) | set(late) == set(seen), "mid-iteration submits seen"
+
+
+def test_malformed_composite_cursors_rejected(fed):
+    ops_key = fed.auth.issue_key("*")
+    fed.api.submit(keys(fed)[0], SubmitRequest(
+        manifest=sim_job(tenant="team-0")))
+    for bad in ("garbage",
+                "job-00001",                 # plain cursor, multi-shard walk
+                "ms1",                       # no segments
+                "ms1~shard-9=job-00001",     # unknown shard
+                "ms1~shard-0=xyz",           # bad per-shard cursor
+                "ms1~shard-0=job-1~shard-0=job-2",  # duplicate shard
+                "ms2~shard-0=job-00001"):    # wrong version prefix
+        with pytest.raises(ApiError) as ei:
+            fed.api.list_jobs(ops_key, cursor=bad)
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT, bad
+
+
+def test_admin_search_logs_merges_shards(fed):
+    from repro.core.helpers import LogRecord
+    ks = keys(fed)
+    jobs = [fed.api.submit(ks[i], SubmitRequest(
+        manifest=sim_job(tenant=f"team-{i}"))).job_id for i in range(4)]
+    for j, p in zip(jobs, fed.shards):
+        for n in range(3):
+            p.log_index.append(LogRecord(0.0, j, 0, f"needle {n}"))
+    ops = ApiClient.for_platform(fed)
+    hits = ops.search_logs("needle")  # auto-paginates composite cursors
+    assert len(hits) == 12
+    assert {r.job_id for r in hits} == set(jobs)
+    # paged walk: small limit exercises the composite cursor
+    page = fed.api.search_logs(fed.auth.issue_key("*"), "needle", limit=5)
+    assert len(page.items) == 5 and page.next_cursor.startswith("ms1~")
+    # tenant keys only ever see their own shard's records
+    assert {r.job_id for r in ApiClient(fed.api, ks[2]).search_logs("needle")
+            } == {jobs[2]}
+
+
+# ---------------------------------------------------- shard crash isolation
+
+
+def test_shard_crash_is_unavailable_for_its_tenants_only(fed):
+    ks = keys(fed)
+    jobs = [fed.api.submit(ks[i], SubmitRequest(
+        manifest=sim_job(tenant=f"team-{i}"))).job_id for i in range(4)]
+    fed.shard_crash(1)
+    # shard-1's tenant: UNAVAILABLE, marked shard_down, zero LB failovers
+    failovers = fed.api.stats["failovers"]
+    with pytest.raises(ApiError) as ei:
+        fed.api.status(ks[1], jobs[1])
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+    assert ei.value.details["shard_down"] and \
+        ei.value.details["shard"] == "shard-1"
+    assert fed.api.stats["failovers"] == failovers, \
+        "replica failover cannot mask a dead shard"
+    with pytest.raises(ApiError):
+        fed.api.submit(ks[1], SubmitRequest(
+            manifest=sim_job(name="x", tenant="team-1")))
+    # every other tenant: 100% availability, reads and writes
+    for i in (0, 2, 3):
+        assert fed.api.status(ks[i], jobs[i]).job_id == jobs[i]
+        fed.api.submit(ks[i], SubmitRequest(
+            manifest=sim_job(name="ok", tenant=f"team-{i}")))
+    # ... even while a replica is ALSO down (crash-masking composes on top)
+    fed.api_crash(replica=0)
+    assert fed.api.status(ks[0], jobs[0]).job_id == jobs[0]
+    fed.api_restart(replica=0)
+    # an admin all-shard listing cannot silently hide shard-1's tenants
+    with pytest.raises(ApiError) as ei:
+        fed.api.list_jobs(fed.auth.issue_key("*"))
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+    fed.shard_restart(1)
+    assert fed.api.status(ks[1], jobs[1]).job_id == jobs[1]
+
+
+# --------------------------------------------- wire contract over HTTP
+
+
+def test_v1_contract_over_http_against_four_shards(fed):
+    """The same wire assertions test_http_api.py makes against one shard,
+    against a 4-shard federation: envelopes, pagination, lifecycle, and
+    the aggregated health body."""
+    server = ApiHttpServer(fed)
+    with server:
+        transport = HttpTransport(server.base_url)
+        key = fed.auth.issue_key("team-2")  # pinned to shard-2
+        ids = [transport.submit(key, SubmitRequest(
+            manifest=sim_job(f"h{i}", tenant="team-2"),
+            idempotency_key=f"h-{i}")).job_id for i in range(5)]
+        # idempotent replay over the wire, routed to the same shard
+        r = transport.submit(key, SubmitRequest(
+            manifest=sim_job("h0", tenant="team-2"), idempotency_key="h-0"))
+        assert r.deduplicated and r.job_id == ids[0]
+        # tenant pagination: plain cursors, stable order
+        seen, cursor = [], None
+        while True:
+            page = transport.list_jobs(key, cursor=cursor, limit=2)
+            seen += [v.job_id for v in page.items]
+            cursor = page.next_cursor
+            if cursor is None:
+                break
+        assert seen == ids
+        # lifecycle on the tenant's shard
+        j = ids[0]
+        with server.lock:
+            assert fed.shards[2].run_until_terminal([j], max_sim_s=3000)
+        assert transport.status(key, j).status == "COMPLETED"
+        assert ApiClient(transport, key).logs(j) == \
+            ApiClient(fed.api, key).logs(j)
+        # health aggregates shards next to replicas
+        h = transport.health()
+        assert h["status"] == "ok" and h["shards_alive"] == 4
+        assert [s["shard_id"] for s in h["shards"]] == \
+            [f"shard-{i}" for i in range(4)]
+        fed.shard_crash(3)
+        h = transport.health()
+        assert h["status"] == "degraded" and h["shards_alive"] == 3
+        assert h["replicas_alive"] == 3  # replicas are all still up
+        fed.shard_restart(3)
+        # a foreign shard's job id over the wire: 404 envelope
+        other = fed.auth.issue_key("team-0")
+        with pytest.raises(ApiError) as ei:
+            transport.status(other, j)
+        assert ei.value.code == ErrorCode.NOT_FOUND
+        assert ei.value.details["http_status"] == 404
+
+
+# ------------------------------------------------------- logs long-poll
+
+
+def test_logs_long_poll_returns_early_on_new_lines(fed):
+    from repro.core.helpers import LogRecord
+    key = keys(fed)[0]
+    j = fed.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-0"))).job_id
+    shard = fed.shards[0]
+
+    def append_soon():
+        time.sleep(0.25)
+        with shard.backend.write_locked():
+            shard.log_index.append(LogRecord(0.0, j, 0, "fresh line"))
+
+    t = threading.Thread(target=append_soon)
+    t.start()
+    t0 = time.monotonic()
+    page = fed.api.logs(key, j, wait_ms=5000)
+    elapsed = time.monotonic() - t0
+    t.join(5)
+    assert page.items == ["fresh line"]
+    assert 0.2 <= elapsed < 3.0, f"should return early, took {elapsed:.2f}s"
+    assert page.next_cursor == "1"  # resume offset stays set while running
+
+
+def test_logs_long_poll_bounded_and_terminal(fed):
+    key = keys(fed)[0]
+    j = fed.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-0"))).job_id
+    # bounded: no data, job running -> returns at the wait budget with a
+    # resume cursor (NOT None: the stream may still grow)
+    t0 = time.monotonic()
+    page = fed.api.logs(key, j, wait_ms=300)
+    assert time.monotonic() - t0 < 2.0
+    assert page.items == [] and page.next_cursor == "0"
+    # terminal: job finished and stream consumed -> returns immediately
+    # with next_cursor None (the --follow loop's exit condition)
+    assert fed.shards[0].run_until_terminal([j], max_sim_s=3000)
+    lines = ApiClient(fed.api, key).logs(j)
+    t0 = time.monotonic()
+    page = fed.api.logs(key, j, cursor=str(len(lines)), wait_ms=5000)
+    assert time.monotonic() - t0 < 2.0, "terminal job must not park"
+    assert page.items == [] and page.next_cursor is None
+    # follow_logs replays the whole stream then stops on its own
+    assert list(ApiClient(fed.api, key).follow_logs(j, wait_ms=200)) == lines
+    for bad in (-1, "soon", True):
+        with pytest.raises(ApiError) as ei:
+            fed.api.logs(key, j, wait_ms=bad)
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+def test_cli_logs_follow_streams_to_completion(fed, capsys):
+    """`ffdl logs --follow` over a live server + ticker: streams every
+    line and exits 0 once the job is terminal and fully consumed."""
+    from repro.api import cli
+    server = ApiHttpServer(fed)
+    key = fed.auth.issue_key("team-3")
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            fed.tick()
+            time.sleep(0.002)
+
+    t = threading.Thread(target=ticker, daemon=True)
+    with server:
+        base = ["--endpoint", server.base_url, "--key", key]
+        assert cli.main(base + ["submit", "--name", "follow-me", "--tenant",
+                                "team-3", "--sim-duration", "60"]) == 0
+        job = capsys.readouterr().out.strip()
+        t.start()
+        try:
+            assert cli.main(base + ["logs", job, "--follow",
+                                    "--wait-ms", "500"]) == 0
+        finally:
+            stop.set()
+            t.join(5)
+        followed = capsys.readouterr().out.splitlines()
+        assert followed, "sim learners log progress; --follow must see it"
+        assert followed[-1].endswith("completed")
+        assert followed == ApiClient(fed.api, key).logs(job)
+        assert ApiClient(fed.api, key).status(job) == JobStatus.COMPLETED
