@@ -9,8 +9,12 @@
   §5.6       → benchmarks.failures     (chaos campaign failure analysis)
   §Roofline  → benchmarks.roofline     (dry-run-derived roofline table)
   §3.2       → benchmarks.api_tier     (replicated API availability/latency)
+  §7         → benchmarks.hotpath      (indexed control-plane hot paths)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
+``hotpath``'s full run additionally writes ``BENCH_hotpath.json`` at the
+repo root (``hotpath.main`` owns that artifact) — the tracked perf
+trajectory.
 """
 
 from __future__ import annotations
@@ -33,6 +37,7 @@ def main() -> None:
         api_tier,
         failures,
         gang,
+        hotpath,
         overhead,
         recovery,
         roofline,
@@ -43,6 +48,7 @@ def main() -> None:
 
     all_benches = [
         ("api_tier_s3_2", api_tier.main),
+        ("hotpath", hotpath.main),
         ("overhead_table1_2", overhead.main),
         ("recovery_table3", recovery.main),
         ("spread_pack_fig3", spread_pack.main),

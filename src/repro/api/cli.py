@@ -9,7 +9,7 @@ the platform, so everything it can do, any HTTP client can do.
     python -m repro.api.cli submit --name train1 --learners 2 --chips 2 \
         --sim-duration 120 --idempotency-key train1-try1
     python -m repro.api.cli list --limit 10
-    python -m repro.api.cli status job-00001
+    python -m repro.api.cli status job-00001 --watch
     python -m repro.api.cli logs job-00001 --follow
     python -m repro.api.cli halt job-00001 && python -m repro.api.cli resume job-00001
 
@@ -126,6 +126,13 @@ def cmd_list(args) -> int:
 
 
 def cmd_status(args) -> int:
+    if args.watch:
+        from repro.api.client import ApiClient
+        client = ApiClient(_transport(args), _key(args))
+        for v in client.watch_status(args.job_id, wait_ms=args.wait_ms):
+            print(f"{v.job_id} {v.status:12s} step={v.progress_step:<6d} "
+                  f"{v.message}", flush=True)
+        return 0
     v = _transport(args).status(_key(args), args.job_id)
     _print_json({"job_id": v.job_id, "name": v.name, "tenant": v.tenant,
                  "status": v.status, "progress_step": v.progress_step,
@@ -252,6 +259,11 @@ def build_parser() -> argparse.ArgumentParser:
 
     s = sub.add_parser("status", help="GET /v1/jobs/{id}")
     s.add_argument("job_id")
+    s.add_argument("--watch", "-w", action="store_true",
+                   help="long-poll and print every status change until "
+                        "the job reaches a terminal state")
+    s.add_argument("--wait-ms", type=int, default=8000,
+                   help="server-side park per --watch poll (capped 10s)")
     s.set_defaults(fn=cmd_status)
 
     s = sub.add_parser("history", help="GET /v1/jobs/{id}/history")

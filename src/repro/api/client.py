@@ -18,7 +18,7 @@ from typing import Optional
 
 from repro.api.auth import ALL_TENANTS, READ, WRITE
 from repro.api.types import Page, SubmitRequest, SubmitResponse
-from repro.core.types import JobManifest, JobStatus
+from repro.core.types import TERMINAL, JobManifest, JobStatus
 
 
 class ApiClient:
@@ -58,6 +58,21 @@ class ApiClient:
 
     def status_history(self, job_id: str) -> list:
         return self.transport.status_history(self.api_key, job_id)
+
+    def watch_status(self, job_id: str, wait_ms: int = 8000):
+        """Yield the job's ``JobView`` once now and again on every status
+        change, long-polling the server (bounded ``wait_ms`` per call,
+        parked off-lock server-side) until the job reaches a terminal
+        state — the engine behind ``ffdl status --watch``."""
+        last = None
+        while True:
+            view = self.transport.status(self.api_key, job_id,
+                                         wait_ms=wait_ms, last_status=last)
+            if view.status != last:
+                yield view
+            last = view.status
+            if JobStatus(view.status) in TERMINAL:
+                return
 
     def list_jobs(self, **kwargs) -> Page:
         return self.transport.list_jobs(self.api_key, **kwargs)

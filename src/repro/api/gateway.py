@@ -27,7 +27,9 @@ stay individually crashable (``crash()``/``restart()``) and the
 ``logs`` additionally supports a bounded long-poll (``wait_ms``, capped at
 10s): when the cursor is at the end of the stream, the call parks —
 WITHOUT holding the shard lock — until new lines land or the job goes
-terminal, which is what ``ffdl logs --follow`` rides on.
+terminal, which is what ``ffdl logs --follow`` rides on. ``status``
+supports the same machinery for watching (``wait_ms`` + ``last_status``:
+park until the status changes), behind ``ffdl status --watch``.
 """
 
 from __future__ import annotations
@@ -117,6 +119,18 @@ def _parse_wait_ms(wait_ms) -> int:
                        f"wait_ms must be a non-negative integer, "
                        f"got {wait_ms!r}")
     return min(wait_ms, MAX_WAIT_MS)
+
+
+def _parse_last_status(last_status) -> Optional[JobStatus]:
+    """The status the watcher has already seen; anything that is not a
+    JobStatus value would park forever (it can never equal the record)."""
+    if last_status is None:
+        return None
+    try:
+        return JobStatus(last_status)
+    except ValueError:
+        raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                       f"unknown status {last_status!r}")
 
 
 @contextmanager
@@ -273,11 +287,31 @@ class ApiGateway:
         return SubmitResponse(job_id=job_id)
 
     # -- reads -----------------------------------------------------------
-    def status(self, api_key: str, job_id: str) -> JobView:
+    def status(self, api_key: str, job_id: str,
+               wait_ms: Optional[int] = None,
+               last_status: Optional[str] = None) -> JobView:
+        """One job's JobView; with ``wait_ms`` + ``last_status``, a watch
+        long-poll: the call parks — OFF the shard lock, same machinery as
+        the logs long-poll — until the status differs from ``last_status``,
+        the job goes terminal, or the budget runs out. ``ffdl status
+        --watch`` / ``ApiClient.watch_status`` loop on exactly this."""
         principal = self._require(api_key, READ)
         backend = self._locate(principal, job_id)
-        with backend.read_locked():
-            return JobView.of(self._owned_record(backend, principal, job_id))
+        last = _parse_last_status(last_status)
+        deadline = time.monotonic() + _parse_wait_ms(wait_ms) / 1000.0
+        while True:
+            if not backend.alive:
+                raise _shard_down(backend)
+            with backend.read_locked():
+                rec = self._owned_record(backend, principal, job_id)
+                view = JobView.of(rec)  # project under the lock
+                terminal = rec.status in TERMINAL
+            if last is None or view.status != last.value or terminal \
+                    or time.monotonic() >= deadline:
+                return view
+            # Park OUTSIDE the shard lock: a watcher must never block the
+            # ticker (writer) or other readers while it waits.
+            time.sleep(_POLL_S)
 
     def status_history(self, api_key: str, job_id: str) -> list:
         principal = self._require(api_key, READ)

@@ -33,7 +33,8 @@ Routes (``{job_id}`` is a path segment)::
     GET    /v1/health                   liveness + replica counts (no auth)
     POST   /v1/jobs                     submit        (201; 200 when deduped)
     GET    /v1/jobs                     list_jobs     (tenant,status,cursor,limit)
-    GET    /v1/jobs/{job_id}            status → JobView
+    GET    /v1/jobs/{job_id}            status → JobView (wait_ms,last_status
+                                        = watch long-poll)
     GET    /v1/jobs/{job_id}/history    status_history
     GET    /v1/jobs/{job_id}/logs       logs          (cursor,limit)
     GET    /v1/logs/search              search_logs   (q,job_id,cursor,limit)
@@ -279,7 +280,10 @@ class _Handler(BaseHTTPRequestHandler):
             if len(parts) == 3:
                 job_id = parts[2]
                 if method == "GET":
-                    view = api.status(key, job_id)
+                    view = api.status(
+                        key, job_id,
+                        wait_ms=self._int_param(qs, "wait_ms"),
+                        last_status=qs.get("last_status", [None])[0])
                     return self._send_json(200, dataclasses.asdict(view))
                 if method == "DELETE":
                     api.cancel(key, job_id)
@@ -630,8 +634,13 @@ class HttpTransport:
                              headers={"Idempotency-Key": req.idempotency_key})
         return SubmitResponse(**d)
 
-    def status(self, api_key, job_id) -> JobView:
-        _, d = self._request("GET", f"/v1/jobs/{job_id}", api_key)
+    def status(self, api_key, job_id, wait_ms=None,
+               last_status=None) -> JobView:
+        floor = None if not wait_ms else wait_ms / 1000.0 + 5.0
+        _, d = self._request("GET", f"/v1/jobs/{job_id}", api_key,
+                             query={"wait_ms": wait_ms,
+                                    "last_status": last_status},
+                             timeout_floor=floor)
         return JobView(**d)
 
     def status_history(self, api_key, job_id) -> list:

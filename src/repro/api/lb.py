@@ -85,8 +85,8 @@ class LoadBalancer:
     def submit(self, api_key, req):
         return self._call("submit", api_key, req)
 
-    def status(self, api_key, job_id):
-        return self._call("status", api_key, job_id)
+    def status(self, api_key, job_id, **kwargs):
+        return self._call("status", api_key, job_id, **kwargs)
 
     def status_history(self, api_key, job_id):
         return self._call("status_history", api_key, job_id)

@@ -31,11 +31,13 @@ class Host:
     ready: bool = True
     cordoned: bool = False
     pods: dict = field(default_factory=dict)  # pod_name → Pod
-
-    @property
-    def used_chips(self) -> int:
-        return sum(p.chips for p in self.pods.values()
-                   if p.phase in (PodPhase.PENDING, PodPhase.RUNNING))
+    # incrementally maintained by ClusterModel on every pod phase
+    # transition (chips held by PENDING/RUNNING pods) — what used to be
+    # recomputed by summing every pod on every free_chips read
+    used_chips: int = 0
+    # pods present per job (any phase) — the spread ranking's same-job
+    # count, maintained on bind/delete
+    job_pods: dict = field(default_factory=dict)
 
     @property
     def free_chips(self) -> int:
@@ -77,10 +79,19 @@ class ClusterModel:
         self._eviction_hooks: list[Callable[[Pod, str], None]] = []
         self._heartbeat_leases: dict[str, int] = {}
         self._failed_heartbeat: set[str] = set()
+        # -- free-chips index (scheduler hot path) -------------------------
+        # Schedulable hosts bucketed by current free chips, kept in sync on
+        # every pod phase transition and node health flip, so a placement
+        # query ("smallest/largest free >= k") never rescans the cluster.
+        self._free_buckets: dict[int, set[str]] = {}
+        self._bucket_of: dict[str, int] = {}
+        self._max_chips = chips_per_host
+        self._sched_cache: Optional[list[Host]] = None
         for hid in self.hosts:
             self._heartbeat_leases[hid] = etcd.grant_lease(self.HEARTBEAT_TTL)
             etcd.put(f"/nodes/{hid}", "Ready",
                      lease_id=self._heartbeat_leases[hid])
+            self._reindex(self.hosts[hid])
 
     # -- capacity -----------------------------------------------------------
     @property
@@ -95,7 +106,70 @@ class ClusterModel:
         return self.used_chips / max(self.total_chips, 1)
 
     def schedulable_hosts(self) -> list[Host]:
-        return [h for h in self.hosts.values() if h.schedulable]
+        """Schedulable hosts in stable host order. Cached; invalidated
+        only when a host's schedulability flips (rare), not on every
+        placement query."""
+        if self._sched_cache is None:
+            self._sched_cache = [h for h in self.hosts.values()
+                                 if h.schedulable]
+        return self._sched_cache
+
+    # -- free-chips index --------------------------------------------------
+    def _reindex(self, host: Host):
+        """Move ``host`` to the bucket for its current free capacity
+        (schedulable hosts only)."""
+        old = self._bucket_of.pop(host.host_id, None)
+        if old is not None:
+            self._free_buckets[old].discard(host.host_id)
+        if host.schedulable:
+            f = host.free_chips
+            self._free_buckets.setdefault(f, set()).add(host.host_id)
+            self._bucket_of[host.host_id] = f
+
+    def _schedulable_flip(self, host: Host):
+        self._sched_cache = None
+        self._reindex(host)
+
+    def _account(self, host: Host, delta: int):
+        host.used_chips += delta
+        self._reindex(host)
+
+    def pack_host(self, min_free: int) -> Optional[Host]:
+        """Best-fit: the schedulable host with the SMALLEST free capacity
+        >= ``min_free`` (lowest host id on ties) — the pack ranking's
+        ``sort(key=free)[0]``, answered from the buckets."""
+        for f in range(min_free, self._max_chips + 1):
+            bucket = self._free_buckets.get(f)
+            if bucket:
+                return self.hosts[min(bucket)]
+        return None
+
+    def spread_host(self, min_free: int, job_id: str) -> Optional[Host]:
+        """The spread ranking's pick: minimal ``(same-job pods, -free,
+        host id)`` over schedulable hosts with free >= ``min_free`` —
+        identical to sorting every host, served from the buckets. Walks
+        free levels descending; the first level holding a host with no
+        same-job pods wins outright (no lower level can beat it)."""
+        best = None  # (same_job, -free, host_id)
+        for f in range(self._max_chips, min_free - 1, -1):
+            bucket = self._free_buckets.get(f)
+            if not bucket:
+                continue
+            zero_best = nz_best = None
+            for hid in bucket:
+                same = self.hosts[hid].job_pods.get(job_id, 0)
+                if same == 0:
+                    if zero_best is None or hid < zero_best:
+                        zero_best = hid
+                elif nz_best is None or (same, hid) < nz_best:
+                    nz_best = (same, hid)
+            if zero_best is not None:
+                return self.hosts[zero_best]
+            if nz_best is not None:
+                cand = (nz_best[0], -f, nz_best[1])
+                if best is None or cand < best:
+                    best = cand
+        return None if best is None else self.hosts[best[2]]
 
     # -- pod lifecycle -------------------------------------------------------
     def bind_pod(self, pod: Pod, host_id: str) -> bool:
@@ -108,7 +182,9 @@ class ClusterModel:
         pod.host = host_id
         pod.phase = PodPhase.PENDING
         host.pods[pod.name] = pod
+        host.job_pods[pod.job_id] = host.job_pods.get(pod.job_id, 0) + 1
         self.pods[pod.name] = pod
+        self._account(host, pod.chips)
         latency = self.POD_START_LATENCY.get(pod.kind, 3.0)
         self.clock.call_later(latency, lambda: self._start_pod(pod))
         self.events.emit("k8s", "pod_bound", pod=pod.name, host=host_id,
@@ -125,8 +201,17 @@ class ClusterModel:
         pod = self.pods.pop(pod_name, None)
         if pod is None:
             return
+        holds_chips = pod.phase in (PodPhase.PENDING, PodPhase.RUNNING)
         if pod.host and pod.host in self.hosts:
-            self.hosts[pod.host].pods.pop(pod.name, None)
+            host = self.hosts[pod.host]
+            if host.pods.pop(pod.name, None) is not None:
+                n = host.job_pods.get(pod.job_id, 0) - 1
+                if n > 0:
+                    host.job_pods[pod.job_id] = n
+                else:
+                    host.job_pods.pop(pod.job_id, None)
+                if holds_chips:
+                    self._account(host, -pod.chips)
         pod.phase = PodPhase.DELETED
         pod.finished_at = self.clock.now()
         self.events.emit("k8s", "pod_deleted", pod=pod_name, reason=reason)
@@ -137,6 +222,8 @@ class ClusterModel:
         if pod is None or pod.phase != PodPhase.RUNNING:
             return
         pod.phase = PodPhase.FAILED
+        if pod.host and pod.host in self.hosts:  # FAILED pods hold no chips
+            self._account(self.hosts[pod.host], -pod.chips)
         self.events.emit("k8s", "pod_failed", pod=pod_name, reason=reason)
 
     def restart_pod(self, pod_name: str):
@@ -145,6 +232,9 @@ class ClusterModel:
         if pod is None or pod.host is None:
             return
         pod.restarts += 1
+        if pod.phase not in (PodPhase.PENDING, PodPhase.RUNNING) \
+                and pod.host in self.hosts:
+            self._account(self.hosts[pod.host], pod.chips)
         pod.phase = PodPhase.PENDING
         latency = self.POD_START_LATENCY.get(pod.kind, 3.0)
         self.clock.call_later(latency, lambda: self._start_pod(pod))
@@ -154,6 +244,9 @@ class ClusterModel:
     def complete_pod(self, pod_name: str):
         pod = self.pods.get(pod_name)
         if pod is not None:
+            if pod.phase in (PodPhase.PENDING, PodPhase.RUNNING) \
+                    and pod.host and pod.host in self.hosts:
+                self._account(self.hosts[pod.host], -pod.chips)
             pod.phase = PodPhase.SUCCEEDED
             pod.finished_at = self.clock.now()
 
@@ -170,13 +263,16 @@ class ClusterModel:
         host = self.hosts[host_id]
         if not host.ready:
             host.ready = True
+            self._schedulable_flip(host)
             lease = self.etcd.grant_lease(self.HEARTBEAT_TTL)
             self._heartbeat_leases[host_id] = lease
             self.etcd.put(f"/nodes/{host_id}", "Ready", lease_id=lease)
             self.events.emit("node_controller", "node_ready", host=host_id)
 
     def cordon(self, host_id: str):
-        self.hosts[host_id].cordoned = True
+        host = self.hosts[host_id]
+        host.cordoned = True
+        self._schedulable_flip(host)
         self.events.emit("node_controller", "node_cordoned", host=host_id)
 
     def tick(self):
@@ -190,6 +286,7 @@ class ClusterModel:
             alive = self.etcd.get(f"/nodes/{hid}") is not None
             if host.ready and not alive:
                 host.ready = False
+                self._schedulable_flip(host)
                 self.events.emit("node_controller", "node_notready", host=hid)
                 self._evict_host_pods(hid)
 

@@ -14,11 +14,19 @@ failure/recovery counters.
 
 from __future__ import annotations
 
+import re
+from array import array
+from bisect import bisect_left
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.executor import JobVolume
+
+# Token = maximal alphanumeric/underscore run. The inverted index is keyed
+# on these; everything between tokens (delimiters) is re-checked by the
+# substring verification, so the tokenizer never changes result sets.
+_TOKEN_RE = re.compile(r"[A-Za-z0-9_]+")
 
 
 @dataclass
@@ -37,19 +45,147 @@ class LogIndex:
     records arrive (they only land past every existing cursor). The
     API gateway serves its ``logs``/``search_logs`` pages from
     ``stream_page``/``search_page``.
+
+    Search is served from a token-level **inverted index** (token →
+    posting offsets, maintained globally and per job on ``append``):
+    a query is compiled into token constraints, candidate offsets are the
+    intersection of the matching posting lists, and each candidate is then
+    verified with the exact ``query in line`` check — so results (and the
+    integer scan-offset cursors) are identical to a full scan, without
+    touching every record ever appended. Queries that contain no indexable
+    token (pure punctuation/whitespace) fall back to the scan.
     """
 
     def __init__(self):
         self.records: list[LogRecord] = []
         self._by_job: dict[str, list[LogRecord]] = defaultdict(list)
+        # token → sorted posting offsets (into self.records), and the same
+        # per job (offsets into self._by_job[job_id])
+        self._postings: dict[str, array] = {}
+        self._job_postings: dict[str, dict[str, array]] = defaultdict(dict)
+        # sorted vocab (+ reversed-token vocab for suffix constraints),
+        # rebuilt lazily when new tokens appeared since the last search
+        self._vocab: Optional[list[str]] = None
+        self._rvocab: Optional[list[str]] = None
 
     def append(self, rec: LogRecord):
+        off_g = len(self.records)
         self.records.append(rec)
-        self._by_job[rec.job_id].append(rec)
+        pool = self._by_job[rec.job_id]
+        off_j = len(pool)
+        pool.append(rec)
+        job_post = self._job_postings[rec.job_id]
+        for tok in set(_TOKEN_RE.findall(rec.line)):
+            arr = self._postings.get(tok)
+            if arr is None:
+                self._postings[tok] = arr = array("q")
+                self._vocab = self._rvocab = None  # new token: vocab dirty
+            arr.append(off_g)
+            jarr = job_post.get(tok)
+            if jarr is None:
+                job_post[tok] = jarr = array("q")
+            jarr.append(off_j)
 
+    # -- query planning ---------------------------------------------------
+    @staticmethod
+    def _plan(query: str) -> Optional[list[tuple[str, str]]]:
+        """Compile a substring query into token constraints.
+
+        A token strictly inside the query is delimiter-bounded on both
+        sides, so any matching line must contain it as a complete token
+        (``exact``). A token touching the query's start may continue to
+        the left inside the line (``suffix``: some line token ends with
+        it); one touching the end may continue right (``prefix``); a token
+        spanning the whole query may continue both ways (``substr``).
+        ``None`` = no token to index on (fall back to scanning).
+        """
+        matches = list(_TOKEN_RE.finditer(query))
+        if not matches:
+            return None
+        cons = []
+        for m in matches:
+            bounded_l = m.start() > 0
+            bounded_r = m.end() < len(query)
+            if bounded_l and bounded_r:
+                cons.append(("exact", m.group()))
+            elif bounded_l:
+                cons.append(("prefix", m.group()))
+            elif bounded_r:
+                cons.append(("suffix", m.group()))
+            else:
+                cons.append(("substr", m.group()))
+        return cons
+
+    def _ensure_vocab(self):
+        # Concurrent searches share the shard's read lock, so two threads
+        # may rebuild at once: publish _vocab LAST — readers gate on it,
+        # and seeing it non-None must imply _rvocab is usable too.
+        if self._vocab is None:
+            rvocab = sorted(t[::-1] for t in self._postings)
+            vocab = sorted(self._postings)
+            self._rvocab = rvocab
+            self._vocab = vocab
+
+    def _vocab_match(self, kind: str, text: str) -> list[str]:
+        """All indexed tokens compatible with one non-exact constraint."""
+        self._ensure_vocab()
+        if kind == "prefix":
+            lo = bisect_left(self._vocab, text)
+            hi = bisect_left(self._vocab, text + "\uffff")
+            return self._vocab[lo:hi]
+        if kind == "suffix":
+            rt = text[::-1]
+            lo = bisect_left(self._rvocab, rt)
+            hi = bisect_left(self._rvocab, rt + "\uffff")
+            return [t[::-1] for t in self._rvocab[lo:hi]]
+        return [t for t in self._vocab if text in t]  # substr
+
+    def _candidates(self, query: str,
+                    job_id: Optional[str]) -> Optional[list[int]]:
+        """Sorted candidate offsets (into the global or per-job pool) that
+        can possibly match ``query``; ``None`` = no usable constraint."""
+        cons = self._plan(query)
+        if cons is None:
+            return None
+        postings = (self._postings if job_id is None
+                    else self._job_postings.get(job_id, {}))
+        infos: list[tuple[int, list]] = []  # (candidate count, posting arrays)
+        for kind, text in cons:
+            if kind == "exact":
+                arr = postings.get(text)
+                if not arr:
+                    return []
+                infos.append((len(arr), [arr]))
+            else:
+                arrs = [postings[tok]
+                        for tok in self._vocab_match(kind, text)
+                        if tok in postings]
+                est = sum(len(a) for a in arrs)
+                if est == 0:
+                    return []
+                infos.append((est, arrs))
+        # Every candidate gets the exact ``query in line`` check anyway, so
+        # constraints are only a pre-filter: seed from the most selective
+        # one and intersect only peers of comparable size — materialising a
+        # token that appears on every line would cost more than it prunes.
+        infos.sort(key=lambda x: x[0])
+        base: set[int] = set()
+        for a in infos[0][1]:
+            base.update(a)
+        for est, arrs in infos[1:]:
+            if est > 4 * len(base):
+                break
+            s: set[int] = set()
+            for a in arrs:
+                s.update(a)
+            base.intersection_update(s)
+            if not base:
+                return []
+        return sorted(base)
+
+    # -- search -----------------------------------------------------------
     def search(self, query: str, job_id: Optional[str] = None) -> list[LogRecord]:
-        pool = self.records if job_id is None else self._by_job.get(job_id, [])
-        return [r for r in pool if query in r.line]
+        return self.search_page(query, job_id=job_id)[0]
 
     def stream(self, job_id: str) -> list[str]:
         return [r.line for r in self._by_job.get(job_id, [])]
@@ -70,19 +206,32 @@ class LogIndex:
                     cursor: int = 0, limit: Optional[int] = None,
                     allow=None) -> tuple[list[LogRecord], Optional[int]]:
         """Paginated substring search. The cursor is the scan offset into
-        the (append-only) record sequence. ``allow(job_id) -> bool``
-        optionally restricts matches (tenant scoping in the gateway)."""
+        the (append-only) record sequence — exactly the pre-index meaning,
+        so cursors minted before an index rebuild stay valid. ``allow``
+        (``job_id -> bool``) optionally restricts matches (tenant scoping
+        in the gateway)."""
         pool = self.records if job_id is None else self._by_job.get(job_id, [])
-        out: list[LogRecord] = []
-        i = cursor
-        while i < len(pool):
-            r = pool[i]
-            i += 1
+        cands = self._candidates(query, job_id)
+        if cands is None:  # no indexable token: legacy linear scan
+            out: list[LogRecord] = []
+            i = cursor
+            while i < len(pool):
+                r = pool[i]
+                i += 1
+                if query in r.line and (allow is None or allow(r.job_id)):
+                    out.append(r)
+                    if limit is not None and len(out) >= limit:
+                        break
+            return out, (i if i < len(pool) else None)
+        out = []
+        for off in cands[bisect_left(cands, cursor):]:
+            r = pool[off]
             if query in r.line and (allow is None or allow(r.job_id)):
                 out.append(r)
                 if limit is not None and len(out) >= limit:
-                    break
-        return out, (i if i < len(pool) else None)
+                    # the scan would have stopped right after this record
+                    return out, (off + 1 if off + 1 < len(pool) else None)
+        return out, None
 
 
 class LogCollector:

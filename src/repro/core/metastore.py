@@ -16,16 +16,47 @@ same WAL record as the insert, so duplicate-submit detection survives a
 catastrophic crash/recover; ``jobs_page`` serves the gateway's
 cursor-paginated, tenant-scoped listings (cursors key on the monotonically
 increasing job id, so pages are stable under concurrent submits).
+
+Hot-path indexing: listings used to re-sort every job id per request, so a
+page cost O(total jobs ever) forever. The store now maintains sorted
+secondary indexes — all ids, per tenant, per status, and per
+(tenant, status) — incrementally on ``insert_job``/``update_status``;
+``jobs_page`` resolves a page with one ``bisect`` + an index slice, and
+``jobs``/``history`` walk the tenant index instead of scanning the table.
+
+WAL group-commit: journal ops buffer in memory and are made durable by ONE
+``write``+``flush`` per *public mutation* (or per ``batch()`` scope, which
+amortises the flush across many mutations — the control-plane tick and
+bulk ingest use this). ``insert_job`` outside a batch keeps the exact
+durable-before-ack contract: its op is on disk before it returns.
 """
 
 from __future__ import annotations
 
-import copy
 import json
+from bisect import bisect_left, bisect_right, insort
+from contextlib import contextmanager
 from dataclasses import asdict
 from typing import Optional
 
 from repro.core.types import JobManifest, JobRecord, JobStatus
+
+
+def _idx_add(lst: list, jid: str):
+    """Insert ``jid`` keeping ``lst`` sorted. Ids are minted monotonically,
+    so the overwhelmingly common case is an append."""
+    if not lst or lst[-1] < jid:
+        lst.append(jid)
+        return
+    i = bisect_left(lst, jid)
+    if i >= len(lst) or lst[i] != jid:  # tolerate re-inserts (replay)
+        lst.insert(i, jid)
+
+
+def _idx_del(lst: list, jid: str):
+    i = bisect_left(lst, jid)
+    if i < len(lst) and lst[i] == jid:
+        del lst[i]
 
 
 class MetaStore:
@@ -35,6 +66,16 @@ class MetaStore:
         self._journal: list[dict] = []  # in-memory WAL (file-backed if path)
         # (tenant, idempotency_key) → job_id; rebuilt from the WAL on recover
         self._idem: dict[tuple[str, str], str] = {}
+        # -- secondary indexes (sorted job-id lists), incrementally
+        #    maintained; every read path below serves from these ----------
+        self._order: list[str] = []
+        self._by_tenant: dict[str, list[str]] = {}
+        self._by_status: dict[JobStatus, list[str]] = {}
+        self._by_tenant_status: dict[tuple[str, JobStatus], list[str]] = {}
+        # -- WAL group-commit state ---------------------------------------
+        self._pending: list[dict] = []  # ops not yet written to the file
+        self._batch_depth = 0
+        self.flushes = 0  # durability flushes issued (benchmark telemetry)
         self.journal_path = journal_path
         self._fh = open(journal_path, "a") if journal_path else None
         self.available = True
@@ -54,8 +95,32 @@ class MetaStore:
     def _append(self, op: dict):
         self._journal.append(op)
         if self._fh:
-            self._fh.write(json.dumps(op, default=str) + "\n")
+            self._pending.append(op)
+
+    def _commit(self):
+        """Group commit: everything buffered since the last commit goes out
+        in one write+flush. No-op inside a ``batch()`` scope — the batch
+        exit issues the single flush for the whole group."""
+        if self._batch_depth > 0 or not self._pending:
+            return
+        if self._fh:
+            self._fh.write("".join(json.dumps(op, default=str) + "\n"
+                                   for op in self._pending))
             self._fh.flush()
+            self.flushes += 1
+        self._pending.clear()
+
+    @contextmanager
+    def batch(self):
+        """Group-commit scope: ops from every mutation inside are made
+        durable by ONE write+flush at exit (durable before the batch
+        returns). Nested batches commit once, at the outermost exit."""
+        self._batch_depth += 1
+        try:
+            yield self
+        finally:
+            self._batch_depth -= 1
+            self._commit()
 
     @classmethod
     def recover(cls, clock, journal_path: str) -> "MetaStore":
@@ -80,28 +145,65 @@ class MetaStore:
                             submitted_at=op["ts"])
             rec.set_status(op["ts"], JobStatus.PENDING, "recovered")
             self._jobs[op["job_id"]] = rec
+            self._index_insert(op["job_id"], m.tenant, JobStatus.PENDING)
             if op.get("idem"):
                 self._idem[(m.tenant, op["idem"])] = op["job_id"]
         elif op["op"] == "status" and op["job_id"] in self._jobs:
-            self._jobs[op["job_id"]].set_status(
-                op["ts"], JobStatus(op["status"]), op.get("msg", ""))
+            rec = self._jobs[op["job_id"]]
+            old = rec.status
+            rec.set_status(op["ts"], JobStatus(op["status"]),
+                           op.get("msg", ""))
+            self._index_restatus(op["job_id"], rec.manifest.tenant,
+                                 old, rec.status)
+
+    # -- index maintenance ------------------------------------------------
+    def _index_insert(self, job_id: str, tenant: str, status: JobStatus):
+        _idx_add(self._order, job_id)
+        _idx_add(self._by_tenant.setdefault(tenant, []), job_id)
+        _idx_add(self._by_status.setdefault(status, []), job_id)
+        _idx_add(self._by_tenant_status.setdefault((tenant, status), []),
+                 job_id)
+
+    def _index_restatus(self, job_id: str, tenant: str,
+                        old: JobStatus, new: JobStatus):
+        if old == new:
+            return
+        _idx_del(self._by_status.get(old, []), job_id)
+        _idx_del(self._by_tenant_status.get((tenant, old), []), job_id)
+        _idx_add(self._by_status.setdefault(new, []), job_id)
+        _idx_add(self._by_tenant_status.setdefault((tenant, new), []),
+                 job_id)
+
+    def _index_for(self, tenant: Optional[str],
+                   status: Optional[JobStatus]) -> list[str]:
+        """The narrowest sorted id list matching the filters."""
+        if tenant is not None and status is not None:
+            return self._by_tenant_status.get((tenant, status), [])
+        if tenant is not None:
+            return self._by_tenant.get(tenant, [])
+        if status is not None:
+            return self._by_status.get(status, [])
+        return self._order
 
     # -- API ----------------------------------------------------------------
     def insert_job(self, job_id: str, manifest: JobManifest,
                    idempotency_key: Optional[str] = None) -> JobRecord:
-        """Durable before ack — the WAL append happens before returning.
-        The idempotency mapping rides the same WAL record as the insert, so
-        duplicate detection survives crash/recover."""
+        """Durable before ack — the WAL write+flush happens before
+        returning (one group commit). The idempotency mapping rides the
+        same WAL record as the insert, so duplicate detection survives
+        crash/recover."""
         self._check()
         rec = JobRecord(job_id=job_id, manifest=manifest,
                         submitted_at=self.clock.now())
         rec.set_status(self.clock.now(), JobStatus.PENDING, "accepted")
         self._jobs[job_id] = rec
+        self._index_insert(job_id, manifest.tenant, JobStatus.PENDING)
         if idempotency_key is not None:
             self._idem[(manifest.tenant, idempotency_key)] = job_id
         self._append({"op": "insert", "job_id": job_id, "ts": self.clock.now(),
                       "manifest": asdict(manifest),
                       "idem": idempotency_key})
+        self._commit()
         return rec
 
     def find_idempotent(self, tenant: str, key: str) -> Optional[str]:
@@ -117,22 +219,19 @@ class MetaStore:
         self._check()
         rec = self._jobs[job_id]
         if rec.status != status or msg != rec.message:
+            old = rec.status
             rec.set_status(self.clock.now(), status, msg)
+            self._index_restatus(job_id, rec.manifest.tenant, old, status)
             self._append({"op": "status", "job_id": job_id,
                           "ts": self.clock.now(), "status": status.value,
                           "msg": msg})
+            self._commit()
 
     def jobs(self, tenant: Optional[str] = None,
              status: Optional[JobStatus] = None) -> list[JobRecord]:
         self._check()
-        out = []
-        for rec in self._jobs.values():
-            if tenant and rec.manifest.tenant != tenant:
-                continue
-            if status and rec.status != status:
-                continue
-            out.append(rec)
-        return sorted(out, key=lambda r: r.submitted_at)
+        recs = [self._jobs[jid] for jid in self._index_for(tenant, status)]
+        return sorted(recs, key=lambda r: r.submitted_at)
 
     def jobs_page(self, tenant: Optional[str] = None,
                   status: Optional[JobStatus] = None,
@@ -143,27 +242,23 @@ class MetaStore:
         The cursor is the last job id of the previous page; job ids are
         zero-padded and monotonically increasing, so already-served pages
         never shift when new jobs are submitted concurrently.
+        Served from the matching secondary index: one ``bisect`` to find
+        the cursor position, one slice for the page — exactly ``limit``
+        records, with the next-cursor derived from the index position.
         Returns ``(records, next_cursor)``; ``next_cursor`` is ``None``
         once exhausted.
         """
         self._check()
         if limit is not None and limit < 1:
             raise ValueError(f"limit must be >= 1, got {limit}")
-        matches = []
-        for job_id in sorted(self._jobs):
-            if cursor is not None and job_id <= cursor:
-                continue
-            rec = self._jobs[job_id]
-            if tenant and rec.manifest.tenant != tenant:
-                continue
-            if status and rec.status != status:
-                continue
-            matches.append(rec)
-            if limit is not None and len(matches) > limit:
-                break
-        if limit is not None and len(matches) > limit:
-            return matches[:limit], matches[limit - 1].job_id
-        return matches, None
+        idx = self._index_for(tenant, status)
+        start = bisect_right(idx, cursor) if cursor is not None else 0
+        if limit is None:
+            return [self._jobs[jid] for jid in idx[start:]], None
+        page_ids = idx[start:start + limit]
+        more = start + limit < len(idx)
+        return ([self._jobs[jid] for jid in page_ids],
+                page_ids[-1] if more else None)
 
     def history(self, tenant: str) -> list[dict]:
         """Per-tenant job history (the 'business artifact' query)."""

@@ -174,13 +174,18 @@ class FfDLPlatform:
     def tick(self):
         self.clock.advance(self.tick_period)
         self.clock.run_until(self.clock.now())
-        self.chaos.tick()
-        self.cluster.tick()
-        self.lcm.tick()
-        for g in list(self.guardians.values()):
-            g.tick()
-        self.admission.tick()
-        self.scheduler.tick()
+        # Group-commit scope: every metastore status flip this round rides
+        # one WAL write+flush at scope exit (durable before tick returns)
+        # instead of one flush per update. User-facing submits come in via
+        # the gateway outside this scope and keep durable-before-ack.
+        with self.meta.batch():
+            self.chaos.tick()
+            self.cluster.tick()
+            self.lcm.tick()
+            for g in list(self.guardians.values()):
+                g.tick()
+            self.admission.tick()
+            self.scheduler.tick()
         self.metrics.sample_utilization(self.cluster.utilization())
         # GC finished guardians
         for job_id, g in list(self.guardians.items()):

@@ -18,6 +18,7 @@ Two schedulers over the same ClusterModel:
 
 from __future__ import annotations
 
+from bisect import insort
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -73,9 +74,11 @@ class GangScheduler:
 
     # -- API ----------------------------------------------------------------
     def submit(self, req: GangRequest):
-        self.queue.append(req)
         # FCFS; same-instant arrivals resolved largest-gang-first (§3.6).
-        self.queue.sort(key=lambda r: (r.submitted_at, -r.total_chips))
+        # One bisect insertion keeps the queue sorted (ties land after
+        # existing equals — exactly the old stable re-sort's order).
+        insort(self.queue, req,
+               key=lambda r: (r.submitted_at, -r.total_chips))
         self.events.emit("scheduler", "gang_queued", job=req.job_id,
                          chips=req.total_chips)
 
@@ -96,6 +99,9 @@ class GangScheduler:
         return len(self.queue)
 
     def _host_views(self) -> list[_HostView]:
+        # schedulable_hosts() is cached by the cluster and free_chips is an
+        # O(1) counter, so building BSA's reservation-adjusted view is one
+        # cheap pass — not a per-pod rescan of every pod on every host.
         return [
             _HostView(h.host_id, h.n_chips, h.coord,
                       h.free_chips - self._reserved_chips.get(h.host_id, 0))
@@ -197,25 +203,24 @@ class K8sDefaultScheduler:
         return n
 
     def tick(self):
+        # Placement is answered from the cluster's free-chips index: the
+        # spread pick is min(same-job pods, -free, host id) and the pack
+        # pick is min(free, host id) over eligible hosts — the same host
+        # the old build-a-list-and-sort chose, without rescanning and
+        # re-ranking every host for every queued pod on every tick.
         remaining = []
         for req, k in self.pod_queue:
-            hosts = [h for h in self.cluster.schedulable_hosts()
-                     if h.free_chips >= req.chips_per_pod]
-            if not hosts:
+            if self.placement == "spread":
+                host = self.cluster.spread_host(req.chips_per_pod,
+                                                req.job_id)
+            else:
+                host = self.cluster.pack_host(req.chips_per_pod)
+            if host is None:
                 self.events.emit("scheduler", "no_nodes_available",
                                  job=req.job_id, pod=k,
                                  reason="Insufficient chips")
                 remaining.append((req, k))
                 continue
-            if self.placement == "spread":
-                def rank(h):
-                    same_job = sum(1 for p in h.pods.values()
-                                   if p.job_id == req.job_id)
-                    return (same_job, -h.free_chips)
-                hosts.sort(key=rank)
-            else:
-                hosts.sort(key=lambda h: (h.free_chips,))
-            host = hosts[0]
             pod = Pod(name=f"{req.job_id}-l{k}", job_id=req.job_id,
                       kind="learner", chips=req.chips_per_pod)
             if not self.cluster.bind_pod(pod, host.host_id):

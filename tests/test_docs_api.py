@@ -62,6 +62,35 @@ def test_pagination_semantics_documented():
         assert term in doc
 
 
+def test_hot_paths_documented_and_real():
+    """docs/architecture.md's "Hot paths & indexes" section must exist and
+    name only machinery that actually exists in the code — the table is a
+    contract, not prose."""
+    arch = ARCH.read_text()
+    assert "## Hot paths & indexes" in arch
+    from repro.core.cluster import ClusterModel
+    from repro.core.helpers import LogIndex
+    from repro.core.metastore import MetaStore
+    for name, obj in (("jobs_page", MetaStore), ("batch", MetaStore),
+                      ("search_page", LogIndex),
+                      ("_reindex", ClusterModel),
+                      ("pack_host", ClusterModel),
+                      ("spread_host", ClusterModel)):
+        assert hasattr(obj, name), f"{obj.__name__}.{name} gone — fix docs"
+    for term in ("jobs_page", "search_page", "inverted index",
+                 "group commit", "free-chips", "BENCH_hotpath.json",
+                 "Cursor stability", "batch()"):
+        assert term in arch, f"{term!r} missing from Hot paths section"
+    # the watch long-poll satellite is part of the wire contract
+    import inspect
+
+    from repro.api.gateway import ApiGateway
+    sig = inspect.signature(ApiGateway.status)
+    assert {"wait_ms", "last_status"} <= set(sig.parameters)
+    api = _api_md()
+    assert "last_status" in api and "watch" in api
+
+
 def test_architecture_doc_maps_api_modules():
     """docs/architecture.md must reference every repro.api module and be
     linked from the top-level README."""

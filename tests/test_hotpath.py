@@ -1,0 +1,379 @@
+"""Indexed control-plane hot paths: the secondary-index read paths must be
+observably identical to the brute-force scans they replaced — under random
+interleavings of submits, status flips, log appends, and paginated reads —
+and WAL group-commit must recover to the same indexed state. Plus the
+`wait_ms` watch long-poll on the status route."""
+
+import pathlib
+import sys
+import threading
+import time
+
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propstrat import given, settings, st
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:  # benchmarks/ lives at the repo root
+    sys.path.insert(0, _ROOT)
+
+# ONE copy of the seed-algorithm oracles: the same brute-force baselines
+# the benchmark races (and asserts equivalence) against.
+from benchmarks.hotpath import (  # noqa: E402
+    BruteK8sScheduler,
+    _mk_cluster,
+    brute_jobs_page as ref_jobs_page,
+    brute_search_page as ref_search_page,
+)
+
+from repro.api import ApiClient, ApiError, ErrorCode, SubmitRequest
+from repro.core import FfDLPlatform, JobManifest, JobStatus
+from repro.core.helpers import LogIndex, LogRecord
+from repro.core.metastore import MetaStore
+from repro.core.types import SimClock
+
+TENANTS = ["team-a", "team-b", "team-c"]
+STATUSES = list(JobStatus)
+
+
+def ref_jobs(store, tenant=None, status=None):
+    """The seed ``MetaStore.jobs``: scan the table, filter, stable-sort."""
+    out = []
+    for rec in store._jobs.values():
+        if tenant and rec.manifest.tenant != tenant:
+            continue
+        if status and rec.status != status:
+            continue
+        out.append(rec)
+    return sorted(out, key=lambda r: r.submitted_at)
+
+
+# --------------------------------------------------------------------------
+# MetaStore index == reference scan, under random interleavings
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2),
+                              st.integers(0, len(STATUSES) - 1)),
+                    min_size=1, max_size=60),
+       limit=st.integers(1, 7))
+def test_jobs_page_matches_reference_under_interleavings(ops, limit):
+    clock = SimClock()
+    store = MetaStore(clock)
+    n = 0
+    for kind, t, s in ops:
+        clock.advance(1.0)
+        if kind in (0, 1) or n == 0:  # submit (biased: need jobs to flip)
+            store.insert_job(f"job-{n:05d}",
+                             JobManifest(name=f"j{n}", tenant=TENANTS[t]))
+            n += 1
+        elif kind == 2:  # status flip on some existing job
+            store.update_status(f"job-{(t * 7 + s) % n:05d}", STATUSES[s],
+                                "flip")
+        else:  # paginated read mid-stream: walk every page both ways
+            tenant = TENANTS[t] if s % 2 else None
+            status = STATUSES[s] if s % 3 else None
+            cursor = None
+            for _ in range(n + 2):
+                got = store.jobs_page(tenant=tenant, status=status,
+                                      cursor=cursor, limit=limit)
+                want = ref_jobs_page(store, tenant=tenant, status=status,
+                                     cursor=cursor, limit=limit)
+                assert got == want
+                cursor = got[1]
+                if cursor is None:
+                    break
+    # final full sweep: every (tenant, status) combination, jobs() included
+    for tenant in [None] + TENANTS:
+        for status in [None] + STATUSES:
+            assert store.jobs_page(tenant=tenant, status=status,
+                                   limit=limit) == \
+                ref_jobs_page(store, tenant=tenant, status=status,
+                              limit=limit)
+            assert store.jobs(tenant=tenant, status=status) == \
+                ref_jobs(store, tenant=tenant, status=status)
+
+
+def test_jobs_page_serves_exactly_limit_without_overfetch():
+    """The seed collected limit+1 records and sliced; the index serves
+    exactly ``limit`` and derives next-cursor from the index position —
+    including the exhausted-on-the-boundary case."""
+    store = MetaStore(SimClock())
+    for i in range(6):
+        store.insert_job(f"job-{i:05d}", JobManifest(name=f"j{i}",
+                                                     tenant="team-a"))
+    page, cur = store.jobs_page(tenant="team-a", limit=3)
+    assert [r.job_id for r in page] == ["job-00000", "job-00001", "job-00002"]
+    assert cur == "job-00002"
+    page, cur = store.jobs_page(tenant="team-a", cursor=cur, limit=3)
+    assert [r.job_id for r in page] == ["job-00003", "job-00004", "job-00005"]
+    assert cur is None  # boundary: exactly-limit remaining → exhausted
+
+
+# --------------------------------------------------------------------------
+# LogIndex inverted search == reference scan
+# --------------------------------------------------------------------------
+
+WORDS = ["step", "loss", "ckpt", "error", "restart", "lr"]
+QUERIES = ["step=3 ", "loss=0.5", "ss=0", "ckpt", "error 2", " lr",
+           "=3", "!!", " ", "restart7 loss"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 5),
+                              st.integers(0, 9)),
+                    min_size=1, max_size=80),
+       limit=st.integers(1, 5))
+def test_search_page_matches_reference_under_interleavings(ops, limit):
+    index = LogIndex()
+    ts = 0.0
+    for kind, w, q in ops:
+        ts += 1.0
+        if kind < 3:  # append (biased: need records to search)
+            job = f"job-{w % 3:02d}"
+            line = (f"{WORDS[w]}{q} {WORDS[(w + 1) % len(WORDS)]}="
+                    f"{q} loss=0.{q}")
+            index.append(LogRecord(ts, job, w % 2, line))
+        else:  # paginated search mid-stream, global and job-scoped
+            job = None if q % 2 else f"job-{w % 3:02d}"
+            query = QUERIES[q]
+            pool = (index.records if job is None
+                    else index._by_job.get(job, []))
+            cursor = 0
+            for _ in range(len(pool) + 2):
+                got = index.search_page(query, job_id=job, cursor=cursor,
+                                        limit=limit)
+                want = ref_search_page(index, query, job_id=job,
+                                       cursor=cursor, limit=limit)
+                assert got == want
+                if got[1] is None:
+                    break
+                cursor = got[1]
+    for query in QUERIES:  # final sweep incl. unpaginated search()
+        assert index.search(query) == ref_search_page(index, query)[0]
+        assert index.search(query, job_id="job-01") == \
+            ref_search_page(index, query, job_id="job-01")[0]
+
+
+def test_search_page_allow_filter_matches_reference():
+    index = LogIndex()
+    for i in range(40):
+        index.append(LogRecord(float(i), f"job-{i % 4:02d}", 0,
+                               f"step={i} loss=0.{i % 7}"))
+    allow = lambda j: j in ("job-01", "job-02")  # noqa: E731
+    for cursor in (0, 3, 39):
+        got = index.search_page("loss=0.3", cursor=cursor, limit=2,
+                                allow=allow)
+        want = ref_search_page(index, "loss=0.3", cursor=cursor, limit=2,
+                               allow=allow)
+        assert got == want
+
+
+# --------------------------------------------------------------------------
+# WAL group-commit: recovery replays to the same indexed state
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2),
+                              st.integers(0, len(STATUSES) - 1)),
+                    min_size=1, max_size=40),
+       group=st.integers(1, 9))
+def test_group_commit_recovery_equivalence(ops, group):
+    # NOT the tmp_path fixture: @given re-runs the body many times per
+    # test call and the journal must start empty for every example
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        _group_commit_roundtrip(f"{td}/wal.jsonl", ops, group)
+
+
+def _group_commit_roundtrip(path, ops, group):
+    clock = SimClock()
+    store = MetaStore(clock, journal_path=path)
+    n = 0
+    i = 0
+    while i < len(ops):
+        with store.batch():  # group-commit a window of mutations
+            for kind, t, s in ops[i:i + group]:
+                clock.advance(1.0)
+                if kind < 2 or n == 0:
+                    store.insert_job(
+                        f"job-{n:05d}",
+                        JobManifest(name=f"j{n}", tenant=TENANTS[t]),
+                        idempotency_key=f"k{n}")
+                    n += 1
+                else:
+                    store.update_status(f"job-{(t + s) % n:05d}",
+                                        STATUSES[s], "flip")
+        i += group
+    assert not store._pending  # batch exit flushed everything
+    recovered = MetaStore.recover(SimClock(), path)
+    snap = lambda s: [(r.job_id, r.status, r.manifest.tenant)  # noqa: E731
+                      for r in s.jobs()]
+    assert snap(recovered) == snap(store)
+    assert recovered._idem == store._idem
+    for tenant in [None] + TENANTS:  # indexed pages identical post-replay
+        for status in [None, JobStatus.PENDING, STATUSES[3]]:
+            got = recovered.jobs_page(tenant=tenant, status=status, limit=4)
+            want = store.jobs_page(tenant=tenant, status=status, limit=4)
+            assert [r.job_id for r in got[0]] == [r.job_id for r in want[0]]
+            assert got[1] == want[1]
+
+
+def test_insert_outside_batch_is_durable_before_ack(tmp_path):
+    """The durable-before-ack contract: an un-batched insert is on disk
+    when insert_job returns (no buffering window)."""
+    path = str(tmp_path / "wal.jsonl")
+    store = MetaStore(SimClock(), journal_path=path)
+    store.insert_job("job-00000", JobManifest(name="j", tenant="t"))
+    assert not store._pending
+    with open(path) as fh:
+        assert sum(1 for _ in fh) == 1
+
+
+# --------------------------------------------------------------------------
+# Scheduler: bucket placement == the seed ranking
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(jobs=st.lists(st.tuples(st.integers(1, 3), st.integers(1, 4)),
+                     min_size=1, max_size=12),
+       placement=st.sampled_from(["spread", "pack"]),
+       seed=st.integers(0, 3))
+def test_k8s_placement_identical_to_seed_ranking(jobs, placement, seed):
+    from repro.core.scheduler import GangRequest, K8sDefaultScheduler
+
+    assigned = {}
+    for cls in (K8sDefaultScheduler, BruteK8sScheduler):
+        _, events, cluster = _mk_cluster(5, 4)
+        sched = cls(cluster, events, placement=placement, seed=seed)
+        for i, (n, c) in enumerate(jobs):
+            sched.submit(GangRequest(f"j{i}", n, c, submitted_at=float(i)))
+            sched.tick()
+        assigned[cls.__name__] = sched._assigned
+    assert assigned["K8sDefaultScheduler"] == assigned["BruteK8sScheduler"]
+
+
+# --------------------------------------------------------------------------
+# Watch long-poll on the status route
+# --------------------------------------------------------------------------
+
+def sim_job(**kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name="watch", **kw)
+
+
+@pytest.fixture
+def p():
+    return FfDLPlatform(n_hosts=4, chips_per_host=4, n_api_replicas=1)
+
+
+def test_watch_returns_early_on_status_change(p):
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+
+    def flip_soon():
+        time.sleep(0.25)
+        with p.backend.write_locked():
+            p.meta.update_status(j, JobStatus.QUEUED, "gang wait")
+
+    t = threading.Thread(target=flip_soon)
+    t.start()
+    t0 = time.monotonic()
+    view = p.api.status(key, j, wait_ms=5000, last_status="PENDING")
+    elapsed = time.monotonic() - t0
+    t.join(5)
+    assert view.status == "QUEUED"
+    assert 0.2 <= elapsed < 3.0, f"should return early, took {elapsed:.2f}s"
+
+
+def test_watch_bounded_and_immediate_cases(p):
+    key = p.auth.issue_key("team-a")
+    j = p.api.submit(key, SubmitRequest(
+        manifest=sim_job(tenant="team-a"))).job_id
+    # no last_status → immediate, wait_ms or not
+    assert p.api.status(key, j, wait_ms=4000).status == "PENDING"
+    # stale last_status → immediate
+    assert p.api.status(key, j, wait_ms=4000,
+                        last_status="QUEUED").status == "PENDING"
+    # matching last_status → parks for the full (small) budget
+    t0 = time.monotonic()
+    view = p.api.status(key, j, wait_ms=300, last_status="PENDING")
+    assert view.status == "PENDING"
+    assert time.monotonic() - t0 >= 0.25
+    # terminal job never parks, even when last_status matches
+    with p.backend.write_locked():
+        p.meta.update_status(j, JobStatus.FAILED, "boom")
+    t0 = time.monotonic()
+    assert p.api.status(key, j, wait_ms=5000,
+                        last_status="FAILED").status == "FAILED"
+    assert time.monotonic() - t0 < 2.0
+    # malformed last_status is rejected (it could never match → ∞ park)
+    with pytest.raises(ApiError) as ei:
+        p.api.status(key, j, wait_ms=100, last_status="NOT_A_STATUS")
+    assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+
+
+def test_watch_status_client_streams_until_terminal(p):
+    key = p.auth.issue_key("team-a")
+    client = ApiClient(p.api, key)
+    j = client.submit(sim_job(tenant="team-a"))
+
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            with p.backend.write_locked():
+                p.tick()
+            time.sleep(0.002)
+
+    t = threading.Thread(target=ticker)
+    t.start()
+    try:
+        seen = [v.status for v in client.watch_status(j, wait_ms=500)]
+    finally:
+        stop.set()
+        t.join(10)
+    assert seen[-1] == "COMPLETED"
+    assert seen == [s for i, s in enumerate(seen)
+                    if i == 0 or s != seen[i - 1]], "no duplicate yields"
+    assert set(seen) & {"QUEUED", "DEPLOYING", "DOWNLOADING",
+                        "PROCESSING", "STORING"}, seen
+
+
+def test_watch_status_over_http(p):
+    """The watch long-poll is part of the wire contract: wait_ms and
+    last_status ride query params on GET /v1/jobs/{id}."""
+    from repro.api.http import ApiHttpServer, HttpTransport
+
+    key = p.auth.issue_key("team-a")
+    with ApiHttpServer(p) as server:
+        client = ApiClient(HttpTransport(server.base_url), key)
+        j = client.submit(sim_job(tenant="team-a"))
+        stop = threading.Event()
+
+        def ticker():
+            while not stop.is_set():
+                with server.lock:
+                    p.tick()
+                time.sleep(0.002)
+
+        t = threading.Thread(target=ticker)
+        t.start()
+        try:
+            seen = [v.status for v in client.watch_status(j, wait_ms=500)]
+        finally:
+            stop.set()
+            t.join(10)
+        # malformed last_status → 400 with the stable code, over the wire
+        with pytest.raises(ApiError) as ei:
+            client.transport.status(key, j, wait_ms=100, last_status="nope")
+        assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+        assert ei.value.details.get("http_status") == 400
+    assert seen[-1] == "COMPLETED"
+    assert set(seen) & {"QUEUED", "DEPLOYING", "DOWNLOADING",
+                        "PROCESSING", "STORING"}, seen
