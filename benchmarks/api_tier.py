@@ -32,7 +32,13 @@ another. This benchmark turns those claims into numbers:
   * **shard-kill isolation** — killing one shard leaves every other
     tenant's availability at 100% (the dead shard's tenants get
     UNAVAILABLE, the LB refuses to burn failovers on it, and replica
-    crash-masking still composes on top).
+    crash-masking still composes on top);
+  * **rebalance drill** — a busy tenant (completed + never-ending jobs)
+    is live-migrated between shards through the v2 admin plane WHILE
+    read-heavy HTTP clients hammer it: zero failed v1 requests, the
+    export→import round-trips the metastore bit-for-bit, logs survive,
+    the source is purged, and the longest read observed bounds the
+    cutover stall.
 
 ``--quick`` runs a smoke-sized version of every drill (CI keeps the HTTP
 path exercised) and skips only the timing-sensitive p99 assertions.
@@ -44,6 +50,7 @@ import threading
 import time
 
 from repro.api import (
+    AdminClient,
     ApiError,
     ErrorCode,
     ApiHttpServer,
@@ -483,6 +490,114 @@ def _shard_kill_drill(rounds: int = 20) -> dict:
             fed.api.stats["shard_down"], "recovered_after_restart": recovered}
 
 
+def _rebalance_drill(quick: bool = False,
+                     requests_per_tenant: int = 150) -> dict:
+    """Live tenant rebalancing under load (the v2 admin plane's headline
+    mechanism): a busy tenant with completed + long-running jobs is
+    migrated between shards WHILE read-heavy HTTP clients hammer it.
+    Asserted in main(): zero failed v1 requests, the migration reaches
+    DONE, and export→import round-trips the metastore bit-for-bit
+    (completed records identical, logs preserved). The max read latency
+    observed during the window bounds the cutover stall."""
+    import gc
+    import multiprocessing as mp
+    import sys
+
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)  # see _http_drill
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    stop = threading.Event()
+    ticker = None
+    workers: list = []
+    out: dict = {}
+    migration: dict = {}
+    try:
+        fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4)
+        fed.pin("mover", "shard-0")
+        fed.pin("steady", "shard-1")
+        keys = {t: fed.auth.issue_key(t) for t in ("mover", "steady")}
+        # the mover is BUSY: one finished job, several that never finish
+        done = fed.api.submit(keys["mover"], SubmitRequest(
+            manifest=JobManifest(name="done", tenant="mover", n_learners=1,
+                                 chips_per_learner=1,
+                                 sim_duration=60))).job_id
+        fed.shards[0].run_until_terminal([done], max_sim_s=3000)
+        for i in range(3 if quick else 6):
+            fed.api.submit(keys["mover"], SubmitRequest(
+                manifest=JobManifest(name=f"forever-{i}", tenant="mover",
+                                     n_learners=1, chips_per_learner=1,
+                                     sim_duration=1e9)))
+        fed.run_for(30)
+        pre = fed.shards[0].meta.export_tenant("mover")["records"]
+        pre_logs = {jid: fed.shards[0].log_index.stream(jid) for jid in pre}
+
+        def tick_forever():
+            while not stop.is_set():
+                fed.tick()
+                time.sleep(0.001)
+
+        server = ApiHttpServer(fed)
+        with server:
+            ticker = threading.Thread(target=tick_forever, daemon=True)
+            ticker.start()
+            out_q = mp.Queue()
+            workers = [mp.Process(target=_fed_reader_worker,
+                                  args=(server.base_url, keys[t], t,
+                                        requests_per_tenant, 0.002, out_q))
+                       for t in ("mover", "steady")]
+            for w in workers:
+                w.start()
+            time.sleep(0.3)  # let the read mix build up first
+            admin = AdminClient(HttpTransport(server.base_url),
+                                fed.auth.issue_admin_key())
+            m = admin.migrate("mover", "shard-1")
+            deadline = time.monotonic() + 60
+            while m["phase"] not in ("DONE", "FAILED") \
+                    and time.monotonic() < deadline:
+                time.sleep(0.02)
+                m = admin.migration(m["migration_id"])
+            migration = m
+            for _ in workers:
+                tenant, res = out_q.get(timeout=180)
+                if "error" in res:
+                    raise RuntimeError(f"client process for {tenant!r} "
+                                       f"died: {res['error']}")
+                out[tenant] = res
+            stop.set()
+            ticker.join(timeout=5)
+    finally:
+        stop.set()
+        for w in workers:
+            w.join(timeout=30)
+            if w.is_alive():
+                w.terminate()
+        sys.setswitchinterval(prev_switch)
+        if gc_was_enabled:
+            gc.enable()
+
+    # export -> import round-trip, judged on the destination shard
+    post = fed.shards[1].meta.export_tenant("mover")["records"]
+    roundtrip = set(pre) <= set(post) and all(
+        post[jid] == rec for jid, rec in pre.items()
+        if rec["status"] in ("COMPLETED", "FAILED"))
+    logs_kept = all(
+        fed.shards[1].log_index.stream(jid)[:len(lines)] == lines
+        for jid, lines in pre_logs.items())
+    reads = [x for r in out.values() for x in r["reads"]]
+    return {
+        "phase": migration.get("phase"),
+        "migration_stats": migration.get("stats"),
+        "failed": sum(r["failed"] for r in out.values()),
+        "roundtrip_bit_for_bit": roundtrip,
+        "logs_preserved": logs_kept,
+        "source_purged": fed.shards[0].meta.jobs(tenant="mover") == [],
+        "moved_to": fed.shard_of("mover"),
+        "read": _tail(reads),
+        "max_read_stall_ms": max(reads, default=0.0) * 1e3,
+    }
+
+
 def run(quick: bool = False) -> dict:
     replicated = _rolling_drill(n_replicas=3, rounds=8 if quick else 30)
     single = _rolling_drill(n_replicas=1, rounds=8 if quick else 30)
@@ -510,6 +625,8 @@ def run(quick: bool = False) -> dict:
                            quick=quick),
         "federation": _federation_read_scaling(quick=quick),
         "shard_kill": _shard_kill_drill(rounds=6 if quick else 20),
+        "rebalance": _rebalance_drill(
+            quick=quick, requests_per_tenant=40 if quick else 150),
     }
 
 
@@ -557,6 +674,18 @@ def main(argv=None):
         print(f"{tenant},{avail:.4f}")
     print(f"lb_shard_down_short_circuits,{kill['shard_down_short_circuits']}")
 
+    reb = out["rebalance"]
+    print("\n# Rebalance: busy tenant migrated between shards under "
+          "read-heavy HTTP load (v2 admin plane)")
+    print("metric,value")
+    print(f"migration_phase,{reb['phase']}")
+    print(f"failed_v1_requests,{reb['failed']}")
+    print(f"roundtrip_bit_for_bit,{reb['roundtrip_bit_for_bit']}")
+    print(f"logs_preserved,{reb['logs_preserved']}")
+    print(f"source_purged,{reb['source_purged']}")
+    print(f"read_p99_ms,{reb['read']['p99_ms']:.2f}")
+    print(f"max_read_stall_ms,{reb['max_read_stall_ms']:.2f}")
+
     assert out["availability_replicated"] == 1.0, \
         "replicated API tier must mask single-replica crashes"
     assert idem["duplicates_created"] == 0
@@ -576,7 +705,22 @@ def main(argv=None):
             f"{tenant} lost availability to another tenant's shard dying")
     assert kill["recovered_after_restart"]
 
+    # rebalance: a live migration under load must lose NOTHING — no failed
+    # v1 calls, bit-for-bit records on the destination, logs intact, and
+    # the source actually relieved of the tenant
+    assert reb["phase"] == "DONE", f"migration ended {reb['phase']}"
+    assert reb["failed"] == 0, \
+        f"{reb['failed']} v1 requests failed during the rebalance"
+    assert reb["roundtrip_bit_for_bit"], \
+        "export->import did not round-trip the metastore"
+    assert reb["logs_preserved"]
+    assert reb["source_purged"] and reb["moved_to"] == "shard-1"
+
     if not out["quick"]:
+        # cutover stall: the longest read observed while the tenant moved
+        # (both write locks held during CUTOVER) stays bounded
+        assert reb["max_read_stall_ms"] < 2000, (
+            f"cutover stalled a read for {reb['max_read_stall_ms']:.0f}ms")
         # timing-sensitive tails: asserted only at full size (the quick
         # smoke still *runs* every drill so the HTTP paths cannot rot)
         base_p99 = http["baseline"]["behaved"]["p99_ms"]

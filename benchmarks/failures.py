@@ -79,8 +79,9 @@ def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
 
     ev = p.events
     # the paper mines UNIQUE pod names per failure reason (Table 8); we
-    # aggregate unique jobs per reason the same way (queued gangs re-log
-    # no-nodes every scheduling round, exactly like K8s retries).
+    # aggregate unique jobs per reason the same way (a queued gang re-logs
+    # no-nodes whenever the cluster/reservation state changed — the BSA
+    # verdict cache suppresses byte-identical repeats).
     reason_jobs: dict[str, set] = {
         "no_nodes_match_predicates": set(),
         "binding_rejected": set(),

@@ -6,15 +6,30 @@
 # The tier routes tenants to independent backend shards (repro.api.backend
 # / router / federation): each shard carries its own readers-writer lock,
 # so read traffic scales across handler threads and shards.
-from repro.api.auth import ALL_TENANTS, AuthService, Principal, READ, WRITE
+from repro.api.admin import AdminGateway, AdminPlane, MigrationPhase
+from repro.api.auth import (
+    ADMIN,
+    ALL_TENANTS,
+    AuthService,
+    Principal,
+    READ,
+    WRITE,
+)
 from repro.api.backend import AllShardsLock, Backend, RWLock
-from repro.api.client import ApiClient
+from repro.api.client import AdminClient, ApiClient
 from repro.api.gateway import ApiGateway
-from repro.api.http import ApiHttpServer, HttpTransport, ROUTES, STATUS_OF
+from repro.api.http import (
+    ADMIN_ROUTES,
+    ApiHttpServer,
+    HttpTransport,
+    ROUTES,
+    STATUS_OF,
+)
 from repro.api.lb import LoadBalancer
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi, TokenBucket
 from repro.api.router import TenantRouter
 from repro.api.types import (
+    ADMIN_API_VERSION,
     API_VERSION,
     ApiError,
     ErrorCode,
@@ -28,8 +43,14 @@ from repro.api.types import (
 from repro.api.federation import Federation, JOB_ID_STRIDE
 
 __all__ = [
+    "ADMIN",
+    "ADMIN_API_VERSION",
+    "ADMIN_ROUTES",
     "ALL_TENANTS",
     "API_VERSION",
+    "AdminClient",
+    "AdminGateway",
+    "AdminPlane",
     "AllShardsLock",
     "ApiClient",
     "ApiError",
@@ -43,6 +64,7 @@ __all__ = [
     "JOB_ID_STRIDE",
     "JobView",
     "LoadBalancer",
+    "MigrationPhase",
     "Page",
     "Principal",
     "RateLimitConfig",

@@ -10,7 +10,12 @@ We model that with opaque bearer keys issued per tenant:
     ``UNAUTHENTICATED``;
   * a principal for the wildcard tenant ``"*"`` is an operator/admin
     credential that may act across tenants (the platform's own facade uses
-    one so legacy callers keep their pre-auth behaviour).
+    one so legacy callers keep their pre-auth behaviour);
+  * the ``admin`` scope gates the v2 admin control plane
+    (``repro.api.admin``: tenants/quotas/shards/migrations as wire
+    resources). A plain ``"*"`` read/write key can still use the v1
+    cross-tenant *data*-plane reads, but cannot touch platform topology —
+    mint an operator key with ``issue_admin_key()`` for that.
 
 Keys are deterministic per AuthService instance (seeded counter + hash) so
 simulations stay reproducible.
@@ -27,6 +32,7 @@ from repro.api.types import ApiError, ErrorCode
 
 READ = "read"
 WRITE = "write"
+ADMIN = "admin"  # v2 control plane: tenants, quotas, shards, migrations
 ALL_TENANTS = "*"
 
 
@@ -62,6 +68,12 @@ class AuthService:
         self._keys[key] = Principal(tenant=tenant, scopes=tuple(scopes),
                                     key_id=f"key-{n:04d}")
         return key
+
+    def issue_admin_key(self) -> str:
+        """Operator credential for the v2 admin plane: wildcard tenant plus
+        the ``admin`` scope (and the data-plane scopes, so one key can both
+        drive a migration and verify the tenant's jobs afterwards)."""
+        return self.issue_key(ALL_TENANTS, scopes=(READ, WRITE, ADMIN))
 
     def revoke(self, key: str):
         self._keys.pop(key, None)

@@ -105,6 +105,10 @@ class Backend:
         self.platform = platform
         self.lock = RWLock(shared_reads=shared_reads)
         self.alive = True
+        # operator cordon (v2 admin plane): a cordoned shard keeps serving
+        # its resident tenants but accepts no NEW tenant placements and no
+        # migration destinations. drain = migrate everyone off, then cordon.
+        self.cordoned = False
 
     # -- shard lifecycle (chaos) ------------------------------------------
     def crash(self):
@@ -114,6 +118,13 @@ class Backend:
 
     def restart(self):
         self.alive = True
+
+    # -- operator lifecycle (v2 admin plane) ------------------------------
+    def cordon(self):
+        self.cordoned = True
+
+    def uncordon(self):
+        self.cordoned = False
 
     def read_locked(self):
         return self.lock.read_locked()

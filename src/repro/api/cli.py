@@ -12,6 +12,11 @@ the platform, so everything it can do, any HTTP client can do.
     python -m repro.api.cli status job-00001 --watch
     python -m repro.api.cli logs job-00001 --follow
     python -m repro.api.cli halt job-00001 && python -m repro.api.cli resume job-00001
+    # v2 admin plane (use the operator key `serve` prints):
+    python -m repro.api.cli admin shards
+    python -m repro.api.cli admin create-tenant team-a --quota 8 --shard shard-0
+    python -m repro.api.cli admin migrate team-a shard-1 --wait
+    python -m repro.api.cli admin drain shard-0
 
 ``serve`` boots a local simulated platform — optionally federated over
 ``--shards`` independent backend shards — prints one API key per
@@ -75,6 +80,8 @@ def cmd_serve(args) -> int:
     for tenant in args.tenant or ["demo"]:
         print(f"  tenant {tenant!r} -> {fed.shard_of(tenant)}: API key "
               f"{fed.auth.issue_key(tenant)}")
+    print(f"  operator (v2 admin plane) API key "
+          f"{fed.auth.issue_admin_key()}")
     limited = f"rate={args.rate}/s burst={args.burst}" if rate else "off"
     print(f"  rate limiting: {limited}")
     print("ticking simulation; Ctrl-C to stop")
@@ -200,6 +207,115 @@ def cmd_cancel(args) -> int:
     return 0
 
 
+# -- v2 admin plane (operator key with the 'admin' scope) ------------------
+
+def _admin(args):
+    from repro.api.client import AdminClient
+    return AdminClient(_transport(args), _key(args))
+
+
+def cmd_admin_shards(args) -> int:
+    for s in _admin(args).list_shards():
+        flags = ("cordoned" if s["cordoned"] else "") or ""
+        print(f"{s['shard_id']:10s} {s['status']:5s} "
+              f"chips={s['chips_used']}/{s['chips_total']} "
+              f"jobs={s['jobs']} active={s['active_jobs']} "
+              f"queue={s['queue_depth']} "
+              f"tenants={','.join(s['tenants']) or '-'} {flags}")
+    return 0
+
+
+def cmd_admin_tenants(args) -> int:
+    for t in _admin(args).list_tenants():
+        quota = t["quota_chips"] if t["quota_chips"] is not None else "-"
+        rate = f"{t['rate']}/{t['burst']}" if t["rate"] is not None else "-"
+        mig = " (migrating)" if t["migrating"] else ""
+        print(f"{t['name']:16s} shard={t['shard']:10s} quota={quota} "
+              f"tier={t['tier']} rate={rate}{mig}")
+    return 0
+
+
+def _tenant_fields(args) -> dict:
+    fields = {}
+    if args.quota is not None:
+        fields["quota_chips"] = args.quota
+    if args.tier is not None:
+        fields["tier"] = args.tier
+    if args.rate is not None:
+        fields["rate"] = args.rate
+    if args.burst is not None:
+        fields["burst"] = args.burst
+    return fields
+
+
+def cmd_admin_create_tenant(args) -> int:
+    fields = _tenant_fields(args)
+    if args.shard is not None:
+        fields["shard"] = args.shard
+    _print_json(_admin(args).create_tenant(args.name, **fields))
+    return 0
+
+
+def cmd_admin_patch_tenant(args) -> int:
+    _print_json(_admin(args).patch_tenant(args.name, **_tenant_fields(args)))
+    return 0
+
+
+def cmd_admin_delete_tenant(args) -> int:
+    _print_json(_admin(args).delete_tenant(args.name))
+    return 0
+
+
+def cmd_admin_cordon(args) -> int:
+    _print_json(_admin(args).cordon(args.shard_id))
+    return 0
+
+
+def cmd_admin_uncordon(args) -> int:
+    _print_json(_admin(args).uncordon(args.shard_id))
+    return 0
+
+
+def cmd_admin_drain(args) -> int:
+    _print_json(_admin(args).drain(args.shard_id))
+    return 0
+
+
+def _wait_migration(admin, migration_id: str, timeout_s: float) -> dict:
+    deadline = time.monotonic() + timeout_s
+    while True:
+        m = admin.migration(migration_id)
+        if m["phase"] in ("DONE", "FAILED") or time.monotonic() > deadline:
+            return m
+        time.sleep(0.2)
+
+
+def cmd_admin_migrate(args) -> int:
+    admin = _admin(args)
+    m = admin.migrate(args.tenant, args.to_shard)
+    if args.wait:
+        m = _wait_migration(admin, m["migration_id"], args.timeout)
+        _print_json(m)
+        # a timed-out wait leaves the migration in-flight: that is NOT
+        # success (scripts chain `--wait && decommission-source`)
+        return 0 if m["phase"] == "DONE" else 1
+    _print_json(m)
+    return 0 if m["phase"] != "FAILED" else 1
+
+
+def cmd_admin_migrations(args) -> int:
+    for m in _admin(args).list_migrations():
+        print(f"{m['migration_id']} {m['tenant']:16s} "
+              f"{m['from_shard']} -> {m['to_shard']} {m['phase']:8s} "
+              f"{m['error']}")
+    return 0
+
+
+def cmd_admin_migration(args) -> int:
+    _print_json(_admin(args).migration(args.migration_id))
+    return 0
+
+
 # --------------------------------------------------------------------------
 # Parser
 # --------------------------------------------------------------------------
@@ -302,6 +418,56 @@ def build_parser() -> argparse.ArgumentParser:
     s = sub.add_parser("cancel", help="DELETE /v1/jobs/{id}")
     s.add_argument("job_id")
     s.set_defaults(fn=cmd_cancel)
+
+    # -- v2 admin plane ----------------------------------------------------
+    adm = sub.add_parser(
+        "admin", help="v2 admin control plane (operator key with the "
+                      "'admin' scope; see docs/api.md)")
+    asub = adm.add_subparsers(dest="admin_cmd", required=True)
+
+    s = asub.add_parser("shards", help="GET /v2/admin/shards")
+    s.set_defaults(fn=cmd_admin_shards)
+    for name, fn in (("cordon", cmd_admin_cordon),
+                     ("uncordon", cmd_admin_uncordon),
+                     ("drain", cmd_admin_drain)):
+        s = asub.add_parser(name,
+                            help=f"POST /v2/admin/shards/{{id}}/{name}")
+        s.add_argument("shard_id")
+        s.set_defaults(fn=fn)
+
+    s = asub.add_parser("tenants", help="GET /v2/admin/tenants")
+    s.set_defaults(fn=cmd_admin_tenants)
+    for name, fn, with_shard in (
+            ("create-tenant", cmd_admin_create_tenant, True),
+            ("patch-tenant", cmd_admin_patch_tenant, False)):
+        s = asub.add_parser(name)
+        s.add_argument("name")
+        s.add_argument("--quota", type=int, help="chip quota")
+        s.add_argument("--tier", choices=("paid", "free"))
+        s.add_argument("--rate", type=float, help="req/s rate limit")
+        s.add_argument("--burst", type=int)
+        if with_shard:
+            s.add_argument("--shard", help="pin to a named shard")
+        s.set_defaults(fn=fn)
+    s = asub.add_parser("delete-tenant",
+                        help="DELETE /v2/admin/tenants/{name}")
+    s.add_argument("name")
+    s.set_defaults(fn=cmd_admin_delete_tenant)
+
+    s = asub.add_parser("migrate",
+                        help="POST /v2/admin/migrations (tenant -> shard)")
+    s.add_argument("tenant")
+    s.add_argument("to_shard")
+    s.add_argument("--wait", action="store_true",
+                   help="poll until DONE/FAILED")
+    s.add_argument("--timeout", type=float, default=60.0)
+    s.set_defaults(fn=cmd_admin_migrate)
+    s = asub.add_parser("migrations", help="GET /v2/admin/migrations")
+    s.set_defaults(fn=cmd_admin_migrations)
+    s = asub.add_parser("migration",
+                        help="GET /v2/admin/migrations/{id}")
+    s.add_argument("migration_id")
+    s.set_defaults(fn=cmd_admin_migration)
     return ap
 
 

@@ -132,3 +132,69 @@ class ApiClient:
 
     def cancel(self, job_id: str):
         return self.transport.cancel(self.api_key, job_id)
+
+
+class AdminClient:
+    """Operator-key convenience client for the v2 admin control plane.
+
+    ``transport`` is anything exposing the thirteen v2 admin verbs with
+    ``(api_key, ...)`` signatures: the in-process
+    :class:`~repro.api.admin.AdminGateway` (``platform.admin_api`` /
+    ``federation.admin_api``) or an
+    :class:`~repro.api.http.HttpTransport`. Verbs return the wire dicts
+    verbatim (``"api_version": "v2"`` envelopes).
+    """
+
+    def __init__(self, transport, api_key: str):
+        self.transport = transport
+        self.api_key = api_key
+
+    @classmethod
+    def for_platform(cls, platform) -> "AdminClient":
+        """Mint an operator key with the ``admin`` scope and bind it to
+        the platform's (or federation's) in-process admin gateway."""
+        return cls(platform.admin_api, platform.auth.issue_admin_key())
+
+    # -- tenants ----------------------------------------------------------
+    def create_tenant(self, name: str, **fields) -> dict:
+        return self.transport.create_tenant(self.api_key,
+                                            {"name": name, **fields})
+
+    def get_tenant(self, name: str) -> dict:
+        return self.transport.get_tenant(self.api_key, name)
+
+    def list_tenants(self) -> list:
+        return self.transport.list_tenants(self.api_key)["items"]
+
+    def patch_tenant(self, name: str, **fields) -> dict:
+        return self.transport.patch_tenant(self.api_key, name, fields)
+
+    def delete_tenant(self, name: str) -> dict:
+        return self.transport.delete_tenant(self.api_key, name)
+
+    # -- shards -----------------------------------------------------------
+    def list_shards(self) -> list:
+        return self.transport.list_shards(self.api_key)["items"]
+
+    def get_shard(self, shard_id: str) -> dict:
+        return self.transport.get_shard(self.api_key, shard_id)
+
+    def cordon(self, shard_id: str) -> dict:
+        return self.transport.cordon_shard(self.api_key, shard_id)
+
+    def uncordon(self, shard_id: str) -> dict:
+        return self.transport.uncordon_shard(self.api_key, shard_id)
+
+    def drain(self, shard_id: str) -> dict:
+        return self.transport.drain_shard(self.api_key, shard_id)
+
+    # -- migrations -------------------------------------------------------
+    def migrate(self, tenant: str, to_shard: str) -> dict:
+        return self.transport.start_migration(
+            self.api_key, {"tenant": tenant, "to_shard": to_shard})
+
+    def migration(self, migration_id: str) -> dict:
+        return self.transport.get_migration(self.api_key, migration_id)
+
+    def list_migrations(self) -> list:
+        return self.transport.list_migrations(self.api_key)["items"]

@@ -26,12 +26,19 @@ measures against the old global-lock baseline.
 A ``Federation`` quacks like a platform to the HTTP layer: it exposes
 ``api``, ``auth``, ``api_replicas``, and ``router``, so
 ``ApiHttpServer(Federation(...))`` serves the identical v1 wire contract.
+
+The **v2 admin control plane** (``repro.api.admin``) rides on top:
+``federation.admin`` is the shared :class:`AdminPlane` (tenants, shards,
+migrations as resources), ``federation.admin_api`` the admin-scoped
+gateway over it, and ``tick()`` advances live tenant migrations one phase
+per round after the shard ticks.
 """
 
 from __future__ import annotations
 
 from typing import Dict, Optional
 
+from repro.api.admin import AdminGateway, AdminPlane
 from repro.api.auth import AuthService
 from repro.api.gateway import ApiGateway
 from repro.api.lb import LoadBalancer
@@ -64,6 +71,9 @@ class Federation:
             ApiGateway(self.router, self.auth, replica_id=f"api-{i}")
             for i in range(max(1, n_api_replicas))]
         self.api = LoadBalancer(self.api_replicas)
+        # v2 admin control plane: one shared plane, admin-scoped gateway
+        self.admin = AdminPlane(self.router, self.auth)
+        self.admin_api = AdminGateway(self.admin, self.auth)
 
     # -- routing ----------------------------------------------------------
     def pin(self, tenant: str, shard_id: str):
@@ -73,15 +83,23 @@ class Federation:
     def shard_of(self, tenant: str) -> str:
         return self.router.shard_for(tenant).shard_id
 
+    # -- admin convenience (the wire surface is repro.api.admin) ----------
+    def migrate(self, tenant: str, to_shard: str) -> str:
+        """Start a live tenant migration; returns the migration id. The
+        state machine advances one phase per ``tick()``."""
+        return self.admin.start_migration(tenant, to_shard)["migration_id"]
+
     # -- engine -----------------------------------------------------------
     def tick(self):
         """One round on every live shard, each under its OWN write lock —
-        reads on other shards are never blocked by this shard's tick."""
+        reads on other shards are never blocked by this shard's tick.
+        Live tenant migrations advance one phase per round afterwards."""
         for backend in self.backends:
             if not backend.alive:
                 continue
             with backend.write_locked():
                 backend.platform.tick()
+        self.admin.advance()
 
     def run_for(self, sim_seconds: float):
         n = int(sim_seconds / self.shards[0].tick_period)

@@ -199,37 +199,85 @@ class ApiGateway:
         A tenant key only ever looks on the tenant's own shard — a job id
         minted by another shard is NOT_FOUND for it, never data (tenant
         isolation holds across shards exactly as within one). An admin key
-        scans shards (read-locking one at a time); if the job is nowhere
-        but some shard was down, the honest answer is UNAVAILABLE, not
-        NOT_FOUND.
+        scans shards (read-locking one at a time); a copy found on a shard
+        the job's tenant is NOT routed to (the half-imported destination of
+        a live migration) is skipped in favour of the routed source of
+        truth. If the job is nowhere but some shard was down, the honest
+        answer is UNAVAILABLE, not NOT_FOUND.
         """
         if not principal.is_admin:
             return self._shard_for(principal.tenant)
         dead = None
+        unrouted_tenant = None
         for backend in self.router.backends:
             if not backend.alive:
                 dead = backend
                 continue
             with backend.read_locked(), _meta_guard():
-                if backend.platform.meta.get(job_id) is not None:
+                rec = backend.platform.meta.get(job_id)
+            if rec is not None:
+                if self.router.shard_for(rec.manifest.tenant) is backend:
                     return backend
+                unrouted_tenant = rec.manifest.tenant
+        if unrouted_tenant is not None:
+            # only a mid-migration copy exists and its source of truth is
+            # unreachable — never serve the stale import
+            raise _shard_down(self.router.shard_for(unrouted_tenant))
         if dead is not None:
             raise _shard_down(dead)
         raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
                        job_id=job_id)
 
-    def _owned_record(self, backend, principal: Principal, job_id: str):
-        """Caller must hold ``backend``'s lock."""
-        with _meta_guard():
-            rec = backend.platform.meta.get(job_id)
-        if rec is None:
-            raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
-                           job_id=job_id)
-        if not principal.owns(rec.manifest.tenant):
-            raise ApiError(ErrorCode.FORBIDDEN,
-                           f"job {job_id} belongs to another tenant",
-                           job_id=job_id)
-        return rec
+    @contextmanager
+    def _tenant_locked(self, tenant: str, write: bool = False):
+        """The tenant's backend with its lock held AND the routing verified
+        under that lock. A migration cutover flips the pin table while
+        holding both shards' write locks, so a verb that resolved the old
+        shard but acquired its lock only after the flip re-resolves — an
+        in-flight request can never observe a half-moved tenant."""
+        while True:
+            backend = self._shard_for(tenant)
+            ctx = (backend.write_locked() if write
+                   else backend.read_locked())
+            with ctx:
+                if self.router.shard_for(tenant) is backend:
+                    yield backend
+                    return
+            # pin flipped while we waited for the lock: retry on the new one
+
+    @contextmanager
+    def _job_locked(self, principal: Principal, job_id: str,
+                    write: bool = False):
+        """Locate + lock + ownership-check in one step, stable across a
+        concurrent migration cutover (re-locates once if the record moved
+        between resolution and lock acquisition)."""
+        attempt = 0
+        while True:
+            backend = self._locate(principal, job_id)
+            ctx = (backend.write_locked() if write
+                   else backend.read_locked())
+            with ctx:
+                moved = (not principal.is_admin and
+                         self.router.shard_for(principal.tenant)
+                         is not backend)
+                if not moved:
+                    with _meta_guard():
+                        rec = backend.platform.meta.get(job_id)
+                    if rec is None and principal.is_admin and attempt == 0:
+                        pass  # moved since the admin scan: re-scan once
+                    else:
+                        if rec is None:
+                            raise ApiError(ErrorCode.NOT_FOUND,
+                                           f"no such job: {job_id}",
+                                           job_id=job_id)
+                        if not principal.owns(rec.manifest.tenant):
+                            raise ApiError(
+                                ErrorCode.FORBIDDEN,
+                                f"job {job_id} belongs to another tenant",
+                                job_id=job_id)
+                        yield backend, rec
+                        return
+            attempt += 1
 
     # -- submit ----------------------------------------------------------
     def submit(self, api_key: str, req: SubmitRequest) -> SubmitResponse:
@@ -242,8 +290,10 @@ class ApiGateway:
                            f"submit as {m.tenant!r}")
         if m.n_learners < 1 or m.chips_per_learner < 0:
             raise ApiError(ErrorCode.INVALID_ARGUMENT, "invalid manifest")
-        backend = self._shard_for(m.tenant)
-        with backend.write_locked():
+        # about to create records: if the tenant's hash shard is cordoned,
+        # make the reroute sticky so an uncordon can't orphan the records
+        self.router.pin_for_write(m.tenant)
+        with self._tenant_locked(m.tenant, write=True) as backend:
             p = backend.platform
             if gang_chips(m) > p.cluster.total_chips:
                 raise ApiError(
@@ -296,14 +346,12 @@ class ApiGateway:
         the job goes terminal, or the budget runs out. ``ffdl status
         --watch`` / ``ApiClient.watch_status`` loop on exactly this."""
         principal = self._require(api_key, READ)
-        backend = self._locate(principal, job_id)
         last = _parse_last_status(last_status)
         deadline = time.monotonic() + _parse_wait_ms(wait_ms) / 1000.0
         while True:
-            if not backend.alive:
-                raise _shard_down(backend)
-            with backend.read_locked():
-                rec = self._owned_record(backend, principal, job_id)
+            # re-resolve every round: a migration cutover may move the
+            # tenant between polls, and a parked watcher must follow it
+            with self._job_locked(principal, job_id) as (backend, rec):
                 view = JobView.of(rec)  # project under the lock
                 terminal = rec.status in TERMINAL
             if last is None or view.status != last.value or terminal \
@@ -315,9 +363,7 @@ class ApiGateway:
 
     def status_history(self, api_key: str, job_id: str) -> list:
         principal = self._require(api_key, READ)
-        backend = self._locate(principal, job_id)
-        with backend.read_locked():
-            rec = self._owned_record(backend, principal, job_id)
+        with self._job_locked(principal, job_id) as (_backend, rec):
             return list(rec.status_history)
 
     def list_jobs(self, api_key: str, tenant: Optional[str] = None,
@@ -333,42 +379,106 @@ class ApiGateway:
         limit = _parse_limit(limit) or DEFAULT_PAGE
         if tenant is None and len(self.router.backends) > 1:
             return self._list_jobs_federated(status, cursor, limit)
-        backend = (self._shard_for(tenant) if tenant is not None
-                   else self._sole_shard())
+        if tenant is not None:
+            with self._tenant_locked(tenant) as backend, _meta_guard():
+                recs, next_cursor = backend.platform.meta.jobs_page(
+                    tenant=tenant, status=status,
+                    cursor=_parse_job_cursor(cursor), limit=limit)
+                # project INSIDE the lock: a concurrent tick may mutate the
+                # records the moment we release it (torn status/finished_at)
+                items = [JobView.of(r) for r in recs]
+            return Page(items=items, next_cursor=next_cursor)
+        backend = self._sole_shard()
         with backend.read_locked(), _meta_guard():
             recs, next_cursor = backend.platform.meta.jobs_page(
                 tenant=tenant, status=status,
                 cursor=_parse_job_cursor(cursor), limit=limit)
-            # project INSIDE the lock: a concurrent tick may mutate the
-            # records the moment we release it (torn status/finished_at)
             items = [JobView.of(r) for r in recs]
         return Page(items=items, next_cursor=next_cursor)
 
-    def _list_jobs_federated(self, status, cursor, limit: int) -> Page:
-        """Admin all-tenant listing over >1 shard: merge per-shard pages
-        behind a composite cursor. Each shard keeps its own stable job-id
-        cursor, so items never repeat and submits that land mid-iteration
-        on ANY shard are still served by a later page (every page re-polls
-        every shard from its cursor, in shard order)."""
-        cursors = parse_composite_cursor(cursor, self.router, JOB_CURSOR_RE)
-        items: list = []
+    def _hidden_import(self, backend, tenant: str) -> bool:
+        """True for records living on the DESTINATION shard of the
+        tenant's live migration: the half-imported copy must stay
+        invisible to cross-shard reads until cutover makes it the routed
+        source of truth (otherwise an admin walk would serve the same job
+        from both shards)."""
+        return self.router.migration_target(tenant) == backend.shard_id
+
+    def _mint_span(self, backend) -> tuple:
+        """The id interval ``(lo, hi]`` (as job-id strings, ``hi`` None =
+        unbounded) that ``backend`` mints from: ``job_id_base`` up to the
+        next shard's base. Every job id belongs to exactly one shard's
+        span, for life — even after a migration moves the record."""
+        base = getattr(backend.platform, "job_id_base", 0)
+        later = [b2 for b in self.router.backends
+                 if (b2 := getattr(b.platform, "job_id_base", 0)) > base]
+        hi = min(later) if later else None
+        return (f"job-{base:05d}",
+                None if hi is None else f"job-{hi:05d}")
+
+    def _stream_page(self, owner, status, cursors, need: int) -> list:
+        """One page of ``owner``'s minting-id stream: its span's records
+        in id order, collected from EVERY shard (a migration may have
+        moved them) past the stream's cursor. Half-imported destination
+        copies are hidden (the source still serves the id); equal ids are
+        deduped keeping the routed copy. Advances the stream cursor."""
+        lo, hi = self._mint_span(owner)
+        cur = cursors.get(owner.shard_id)
+        best: dict = {}  # job_id -> (is_routed_copy, JobView)
         for backend in self.router.backends:
-            need = limit - len(items)
-            if need <= 0:
-                break
             if not backend.alive:
                 # a partial admin listing would silently hide a shard's
                 # tenants; fail honestly instead
                 raise _shard_down(backend)
             with backend.read_locked(), _meta_guard():
-                recs, _ = backend.platform.meta.jobs_page(
-                    tenant=None, status=status,
-                    cursor=cursors.get(backend.shard_id), limit=need)
-                views = [JobView.of(r) for r in recs]  # project under lock
-            if recs:
-                cursors[backend.shard_id] = recs[-1].job_id
-                items += views
-        next_cursor = (encode_composite_cursor(cursors)
+                for r in backend.platform.meta.jobs_span(
+                        lo=lo, hi=hi, status=status, cursor=cur,
+                        limit=need):
+                    if self._hidden_import(backend, r.manifest.tenant):
+                        continue
+                    routed = self.router.shard_for(r.manifest.tenant) \
+                        is backend
+                    prev = best.get(r.job_id)
+                    if prev is None or (routed and not prev[0]):
+                        best[r.job_id] = (routed, JobView.of(r))
+        page = [best[jid][1] for jid in sorted(best)[:need]]
+        if page:
+            cursors[owner.shard_id] = page[-1].job_id
+        return page
+
+    def _list_jobs_federated(self, status, cursor, limit: int) -> Page:
+        """Admin all-tenant listing over >1 shard, merged behind a
+        composite cursor with one entry per shard's **minting-id
+        stream** — the contiguous id interval the shard mints from. A
+        record belongs to its minting stream for life, wherever a
+        migration moves it, so the stream cursor keeps meaning "every id
+        up to here was served" across any number of cutovers: items never
+        repeat and never go missing, even when a migration starts AND
+        finishes between two pages of the walk. Submits that land
+        mid-iteration on a still-open stream are served by a later page;
+        a stream that answers an EMPTY page is marked exhausted in the
+        cursor and never queried again for the rest of the walk — long
+        admin walks stop paying one probe per drained shard per page."""
+        cursors, exhausted = parse_composite_cursor(cursor, self.router,
+                                                    JOB_CURSOR_RE)
+        items: list = []
+        for owner in self.router.backends:
+            sid = owner.shard_id
+            if sid in exhausted:
+                continue
+            if len(items) >= limit:
+                break
+            while len(items) < limit:
+                need = limit - len(items)
+                page = self._stream_page(owner, status, cursors, need)
+                if not page:
+                    exhausted.add(sid)  # final page already served
+                    break
+                items += page
+                if len(page) < need:
+                    break  # stream dry for NOW — stays open so submits
+                    #        landing mid-iteration are served later
+        next_cursor = (encode_composite_cursor(cursors, exhausted)
                        if len(items) == limit else None)
         return Page(items=items, next_cursor=next_cursor)
 
@@ -376,16 +486,15 @@ class ApiGateway:
              limit: Optional[int] = None,
              wait_ms: Optional[int] = None) -> "Page[str]":
         principal = self._require(api_key, READ)
-        backend = self._locate(principal, job_id)
         start = _parse_cursor(cursor)
         limit = _parse_limit(limit) or MAX_PAGE
         budget_s = _parse_wait_ms(wait_ms) / 1000.0
         deadline = time.monotonic() + budget_s
         while True:
-            if not backend.alive:
-                raise _shard_down(backend)
-            with backend.read_locked():
-                rec = self._owned_record(backend, principal, job_id)
+            # re-resolve every round: a cutover may move the tenant while
+            # a follower is parked; per-job log offsets survive the move,
+            # so the SAME cursor keeps meaning the same line
+            with self._job_locked(principal, job_id) as (backend, rec):
                 # no limit means "a full page", never "the whole stream":
                 # MAX_PAGE bounds every single call
                 lines, next_off = backend.platform.log_index.stream_page(
@@ -414,23 +523,24 @@ class ApiGateway:
         if job_id is None and principal.is_admin \
                 and len(self.router.backends) > 1:
             return self._search_logs_federated(query, cursor, limit)
+        start = _parse_cursor(cursor)
         if job_id is not None:
-            backend = self._locate(principal, job_id)
+            with self._job_locked(principal, job_id) as (backend, _rec):
+                recs, next_cursor = backend.platform.log_index.search_page(
+                    query, job_id=job_id, cursor=start, limit=limit,
+                    allow=None)
         elif principal.is_admin:
             backend = self._sole_shard()
+            with backend.read_locked():
+                recs, next_cursor = backend.platform.log_index.search_page(
+                    query, job_id=None, cursor=start, limit=limit,
+                    allow=None)
         else:
-            backend = self._shard_for(principal.tenant)
-        with backend.read_locked():
-            if job_id is not None:
-                self._owned_record(backend, principal, job_id)
-                allow = None
-            elif principal.is_admin:
-                allow = None
-            else:
+            with self._tenant_locked(principal.tenant) as backend:
                 allow = self._tenant_filter(backend, principal)
-            recs, next_cursor = backend.platform.log_index.search_page(
-                query, job_id=job_id, cursor=_parse_cursor(cursor),
-                limit=limit, allow=allow)
+                recs, next_cursor = backend.platform.log_index.search_page(
+                    query, job_id=None, cursor=start, limit=limit,
+                    allow=allow)
         return Page(items=recs,
                     next_cursor=None if next_cursor is None
                     else str(next_cursor))
@@ -448,38 +558,64 @@ class ApiGateway:
 
         return allow
 
+    def _fed_search_allow(self, backend):
+        """Cross-shard search filter: hide lines of jobs this shard's
+        metastore does not know (tombstoned leftovers) and of tenants
+        whose live migration is importing INTO this shard (the half-moved
+        copy — the routed source shard still serves those lines). The
+        hidden set is computed ONCE per page, not per scanned record; the
+        per-record check is then two dict probes. Caller holds the
+        shard's read lock."""
+        meta = backend.platform.meta
+        with _meta_guard():
+            meta._check()  # one availability check for the whole page
+        hidden: set = set()
+        for tenant in self.router.migrating_into(backend.shard_id):
+            hidden.update(meta._by_tenant.get(tenant, ()))
+        jobs = meta._jobs
+
+        def allow(jid, _jobs=jobs, _hidden=hidden):
+            return jid in _jobs and jid not in _hidden
+        return allow
+
     def _search_logs_federated(self, query: str, cursor, limit: int) -> Page:
-        """Admin all-shard log search: same composite-cursor merge as the
-        federated listing, with per-shard append offsets as cursors."""
-        cursors = parse_composite_cursor(cursor, self.router,
-                                         OFFSET_CURSOR_RE)
+        """Admin all-shard log search: same composite-cursor merge (and
+        exhausted-shard markers) as the federated listing, with per-shard
+        append offsets as cursors."""
+        cursors, exhausted = parse_composite_cursor(cursor, self.router,
+                                                    OFFSET_CURSOR_RE)
         items: list = []
         for backend in self.router.backends:
-            need = limit - len(items)
-            if need <= 0:
+            sid = backend.shard_id
+            if sid in exhausted:
+                continue
+            if len(items) >= limit:
                 break
             if not backend.alive:
                 raise _shard_down(backend)
+            need = limit - len(items)
             with backend.read_locked():
                 recs, next_off = backend.platform.log_index.search_page(
-                    query, cursor=int(cursors.get(backend.shard_id, 0)),
-                    limit=need, allow=None)
+                    query, cursor=int(cursors.get(sid, 0)),
+                    limit=need, allow=self._fed_search_allow(backend))
                 if next_off is None:
                     # scanned to the end: remember how far, so records
-                    # appended later are still found by a later page
+                    # appended later are still found by a later page —
+                    # and an EMPTY scan closes the shard for this walk
                     next_off = len(backend.platform.log_index.records)
-            cursors[backend.shard_id] = str(next_off)
+                    if not recs:
+                        exhausted.add(sid)
+            cursors[sid] = str(next_off)
             items += recs
-        next_cursor = (encode_composite_cursor(cursors)
+        next_cursor = (encode_composite_cursor(cursors, exhausted)
                        if len(items) == limit else None)
         return Page(items=items, next_cursor=next_cursor)
 
     # -- lifecycle writes -------------------------------------------------
     def halt(self, api_key: str, job_id: str, requeue: bool = False):
         principal = self._require(api_key, WRITE)
-        backend = self._locate(principal, job_id)
-        with backend.write_locked():
-            rec = self._owned_record(backend, principal, job_id)
+        with self._job_locked(principal, job_id, write=True) \
+                as (backend, rec):
             # a late/retried halt must never rewrite a terminal record
             # (COMPLETED → HALTED would let resume() re-run a finished job)
             if rec.status in TERMINAL:
@@ -490,9 +626,8 @@ class ApiGateway:
 
     def resume(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
-        backend = self._locate(principal, job_id)
-        with backend.write_locked():
-            rec = self._owned_record(backend, principal, job_id)
+        with self._job_locked(principal, job_id, write=True) \
+                as (backend, rec):
             if rec.status != JobStatus.HALTED:
                 raise ApiError(ErrorCode.FAILED_PRECONDITION,
                                f"{job_id} is not HALTED")
@@ -501,9 +636,8 @@ class ApiGateway:
 
     def cancel(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
-        backend = self._locate(principal, job_id)
-        with backend.write_locked():
-            rec = self._owned_record(backend, principal, job_id)
+        with self._job_locked(principal, job_id, write=True) \
+                as (backend, rec):
             if rec.status in TERMINAL:
                 raise ApiError(ErrorCode.FAILED_PRECONDITION,
                                f"{job_id} is already {rec.status.value}")

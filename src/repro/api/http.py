@@ -42,6 +42,28 @@ Routes (``{job_id}`` is a path segment)::
     POST   /v1/jobs/{job_id}/resume     resume
     DELETE /v1/jobs/{job_id}            cancel
 
+The **v2 admin control plane** (``repro.api.admin``; requires an operator
+key carrying the ``admin`` scope, envelopes stamped ``"v2"``)::
+
+    POST   /v2/admin/tenants                        create tenant
+    GET    /v2/admin/tenants                        list tenants
+    GET    /v2/admin/tenants/{tenant}               get tenant
+    PATCH  /v2/admin/tenants/{tenant}               patch quota/tier/rate
+    DELETE /v2/admin/tenants/{tenant}               delete tenant
+    GET    /v2/admin/shards                         list shards + occupancy
+    GET    /v2/admin/shards/{shard_id}              get shard
+    POST   /v2/admin/shards/{shard_id}/cordon       cordon
+    POST   /v2/admin/shards/{shard_id}/uncordon     uncordon
+    POST   /v2/admin/shards/{shard_id}/drain        migrate all off + cordon
+    POST   /v2/admin/migrations                     start tenant→shard move
+    GET    /v2/admin/migrations                     list migrations
+    GET    /v2/admin/migrations/{migration_id}      get migration phase
+
+Operator-keyed admin calls bypass the per-tenant rate limiter (they are
+the operator's backpressure controls, not tenant traffic); unknown or
+tenant keys probing /v2 still spend tokens from their usual bucket. The
+error envelope and ``STATUS_OF`` mapping are shared with v1.
+
 Headers: ``Authorization: Bearer <key>`` on every authenticated route;
 ``Idempotency-Key`` on submit; ``Retry-After`` on 429/503 responses.
 """
@@ -61,6 +83,7 @@ from urllib import parse as urlparse
 from repro.api.backend import AllShardsLock
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi
 from repro.api.types import (
+    ADMIN_API_VERSION,
     API_VERSION,
     ApiError,
     ErrorCode,
@@ -102,6 +125,23 @@ ROUTES = (
     ("DELETE", "/v1/jobs/{job_id}"),
 )
 
+# The v2 admin control plane (docs/api.md is checked against this too).
+ADMIN_ROUTES = (
+    ("POST", "/v2/admin/tenants"),
+    ("GET", "/v2/admin/tenants"),
+    ("GET", "/v2/admin/tenants/{tenant}"),
+    ("PATCH", "/v2/admin/tenants/{tenant}"),
+    ("DELETE", "/v2/admin/tenants/{tenant}"),
+    ("GET", "/v2/admin/shards"),
+    ("GET", "/v2/admin/shards/{shard_id}"),
+    ("POST", "/v2/admin/shards/{shard_id}/cordon"),
+    ("POST", "/v2/admin/shards/{shard_id}/uncordon"),
+    ("POST", "/v2/admin/shards/{shard_id}/drain"),
+    ("POST", "/v2/admin/migrations"),
+    ("GET", "/v2/admin/migrations"),
+    ("GET", "/v2/admin/migrations/{migration_id}"),
+)
+
 MAX_BODY_BYTES = 1 << 20  # a manifest is small; reject anything bigger
 # An oversized-but-bounded body is still drained (so the 400 envelope is
 # delivered cleanly and the keep-alive connection survives); beyond this
@@ -131,8 +171,8 @@ def manifest_from_wire(d) -> JobManifest:
         raise ApiError(ErrorCode.INVALID_ARGUMENT, f"bad manifest: {e}")
 
 
-def error_to_wire(err: ApiError) -> dict:
-    return {"api_version": API_VERSION,
+def error_to_wire(err: ApiError, version: str = API_VERSION) -> dict:
+    return {"api_version": version,
             "error": {"code": err.code.value, "message": err.message,
                       "details": err.details}}
 
@@ -186,7 +226,9 @@ class _Handler(BaseHTTPRequestHandler):
             headers["Retry-After"] = max(1, math.ceil(err.retry_after or 0))
         elif err.code == ErrorCode.UNAVAILABLE:
             headers["Retry-After"] = 1
-        self._send_json(STATUS_OF[err.code], error_to_wire(err), headers)
+        version = getattr(self, "_envelope_version", API_VERSION)
+        self._send_json(STATUS_OF[err.code],
+                        error_to_wire(err, version), headers)
 
     def _api_key(self) -> str:
         auth = self.headers.get("Authorization")
@@ -247,10 +289,11 @@ class _Handler(BaseHTTPRequestHandler):
     # -- routing ----------------------------------------------------------
     @staticmethod
     def _known_route(method: str, parts: list) -> bool:
-        """ROUTES is the authoritative table: anything it doesn't name is a
-        404 *before* auth, so probing the route space needs no credential
-        and a typo'd URL isn't misreported as an auth failure."""
-        for m, template in ROUTES:
+        """ROUTES/ADMIN_ROUTES are the authoritative tables: anything they
+        don't name is a 404 *before* auth, so probing the route space needs
+        no credential and a typo'd URL isn't misreported as an auth
+        failure."""
+        for m, template in ROUTES + ADMIN_ROUTES:
             t_parts = [p for p in template.split("/") if p]
             if m == method and len(t_parts) == len(parts) and all(
                     tp.startswith("{") or tp == pp
@@ -264,6 +307,8 @@ class _Handler(BaseHTTPRequestHandler):
         parts = [p for p in split.path.split("/") if p]
         api = self.ctx.api
 
+        if parts[:1] == ["v2"]:
+            self._envelope_version = ADMIN_API_VERSION
         if not self._known_route(method, parts):
             raise ApiError(ErrorCode.NOT_FOUND,
                            f"no route for {method} {split.path}")
@@ -271,6 +316,9 @@ class _Handler(BaseHTTPRequestHandler):
             return self._health()
 
         key = self._api_key()
+
+        if parts[:2] == ["v2", "admin"]:
+            return self._admin_route(method, parts[2:], key)
 
         if parts[:2] == ["v1", "jobs"]:
             if method == "POST" and len(parts) == 2:
@@ -348,8 +396,61 @@ class _Handler(BaseHTTPRequestHandler):
                          "shards_alive": shards_alive,
                          "shards_total": len(backends),
                          "shards": [{"shard_id": b.shard_id,
-                                     "status": "ok" if b.alive else "down"}
+                                     "status": "ok" if b.alive else "down",
+                                     "cordoned": b.cordoned}
                                     for b in backends]})
+
+    def _admin_route(self, method: str, tail: list, key: str):
+        """The v2 admin control plane: resource routes over the shared
+        AdminGateway (``platform.admin_api``). Operator-keyed traffic
+        bypasses the per-tenant rate limiter — these are the operator's
+        backpressure controls, not tenant traffic — but unknown/tenant
+        keys still spend a token, so credential-guessing floods against
+        /v2 are 429-throttled before auth exactly like against v1."""
+        if self.ctx.ratelimiter is not None:
+            self.ctx.ratelimiter.throttle_non_admin(key)
+        admin = self.ctx.platform.admin_api
+        if tail and tail[0] == "tenants":
+            if len(tail) == 1:
+                if method == "POST":
+                    return self._send_json(
+                        201, admin.create_tenant(key, self._json_body()))
+                if method == "GET":
+                    return self._send_json(200, admin.list_tenants(key))
+            elif len(tail) == 2:
+                name = tail[1]
+                if method == "GET":
+                    return self._send_json(200, admin.get_tenant(key, name))
+                if method == "PATCH":
+                    return self._send_json(
+                        200, admin.patch_tenant(key, name,
+                                                self._json_body()))
+                if method == "DELETE":
+                    return self._send_json(
+                        200, admin.delete_tenant(key, name))
+        elif tail and tail[0] == "shards":
+            if len(tail) == 1 and method == "GET":
+                return self._send_json(200, admin.list_shards(key))
+            if len(tail) == 2 and method == "GET":
+                return self._send_json(200, admin.get_shard(key, tail[1]))
+            if len(tail) == 3 and method == "POST":
+                verb = {"cordon": admin.cordon_shard,
+                        "uncordon": admin.uncordon_shard,
+                        "drain": admin.drain_shard}.get(tail[2])
+                if verb is not None:
+                    return self._send_json(200, verb(key, tail[1]))
+        elif tail and tail[0] == "migrations":
+            if len(tail) == 1:
+                if method == "POST":
+                    return self._send_json(
+                        202, admin.start_migration(key, self._json_body()))
+                if method == "GET":
+                    return self._send_json(200, admin.list_migrations(key))
+            elif len(tail) == 2 and method == "GET":
+                return self._send_json(
+                    200, admin.get_migration(key, tail[1]))
+        raise ApiError(ErrorCode.NOT_FOUND,
+                       f"no route for {method} /v2/admin/{'/'.join(tail)}")
 
     def _submit(self, api, key: str):
         body = self._json_body()
@@ -405,6 +506,7 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _handle(self, method: str):
         self._body_read = False
+        self._envelope_version = API_VERSION
         try:
             self._route(method)
         except ApiError as e:
@@ -453,6 +555,11 @@ class ApiHttpServer:
             self.ratelimiter = RateLimitedApi(platform.api, platform.auth,
                                               rate_limit, per_tenant)
         self.api = self.ratelimiter or platform.api
+        # v2 admin plane: wire the rate limiter in so tenant PATCHes with
+        # rate/burst apply live to the token buckets
+        admin = getattr(platform, "admin", None)
+        if admin is not None and self.ratelimiter is not None:
+            admin.attach_ratelimiter(self.ratelimiter)
         handler = type("BoundHandler", (_Handler,), {"ctx": self})
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._thread: Optional[threading.Thread] = None
@@ -683,3 +790,55 @@ class HttpTransport:
 
     def cancel(self, api_key, job_id):
         self._request("DELETE", f"/v1/jobs/{job_id}", api_key)
+
+    # -- v2 admin control plane -------------------------------------------
+    # Same method names/signatures as the in-process AdminGateway, so
+    # AdminClient (repro.api.client) works over either transport.
+    def create_tenant(self, api_key, body: dict) -> dict:
+        return self._request("POST", "/v2/admin/tenants", api_key,
+                             body=body)[1]
+
+    def get_tenant(self, api_key, name: str) -> dict:
+        return self._request("GET", f"/v2/admin/tenants/{name}", api_key)[1]
+
+    def list_tenants(self, api_key) -> dict:
+        return self._request("GET", "/v2/admin/tenants", api_key)[1]
+
+    def patch_tenant(self, api_key, name: str, patch: dict) -> dict:
+        return self._request("PATCH", f"/v2/admin/tenants/{name}", api_key,
+                             body=patch)[1]
+
+    def delete_tenant(self, api_key, name: str) -> dict:
+        return self._request("DELETE", f"/v2/admin/tenants/{name}",
+                             api_key)[1]
+
+    def list_shards(self, api_key) -> dict:
+        return self._request("GET", "/v2/admin/shards", api_key)[1]
+
+    def get_shard(self, api_key, shard_id: str) -> dict:
+        return self._request("GET", f"/v2/admin/shards/{shard_id}",
+                             api_key)[1]
+
+    def cordon_shard(self, api_key, shard_id: str) -> dict:
+        return self._request("POST", f"/v2/admin/shards/{shard_id}/cordon",
+                             api_key, body={})[1]
+
+    def uncordon_shard(self, api_key, shard_id: str) -> dict:
+        return self._request(
+            "POST", f"/v2/admin/shards/{shard_id}/uncordon", api_key,
+            body={})[1]
+
+    def drain_shard(self, api_key, shard_id: str) -> dict:
+        return self._request("POST", f"/v2/admin/shards/{shard_id}/drain",
+                             api_key, body={})[1]
+
+    def start_migration(self, api_key, body: dict) -> dict:
+        return self._request("POST", "/v2/admin/migrations", api_key,
+                             body=body)[1]
+
+    def get_migration(self, api_key, migration_id: str) -> dict:
+        return self._request("GET", f"/v2/admin/migrations/{migration_id}",
+                             api_key)[1]
+
+    def list_migrations(self, api_key) -> dict:
+        return self._request("GET", "/v2/admin/migrations", api_key)[1]

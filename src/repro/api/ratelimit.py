@@ -35,6 +35,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
+from repro.api.auth import ADMIN
 from repro.api.types import ApiError, ErrorCode
 
 _ANON = "<anonymous>"
@@ -114,6 +115,17 @@ class RateLimitedApi:
         self.stats = {"admitted": 0, "throttled": 0, "shed_inflight": 0}
         self.throttled_by_tenant: Dict[str, int] = {}
 
+    def set_tenant_config(self, tenant: str, config: Optional[RateLimitConfig]):
+        """Live-update one tenant's budget (v2 admin PATCH). ``None``
+        reverts to the default config. The tenant's existing bucket is
+        dropped so the new rate/burst apply to the very next request."""
+        with self._buckets_lock:
+            if config is None:
+                self.per_tenant.pop(tenant, None)
+            else:
+                self.per_tenant[tenant] = config
+            self._buckets.pop(tenant, None)
+
     # -- admission --------------------------------------------------------
     def _tenant_of(self, api_key: str) -> str:
         principal = self.auth.peek(api_key)
@@ -156,6 +168,20 @@ class RateLimitedApi:
     def _exit(self):
         with self._inflight_lock:
             self._inflight -= 1
+
+    def throttle_non_admin(self, api_key: str):
+        """Admission check for the v2 admin plane: operator keys (the
+        ``admin``-scoped ``"*"`` principals) pass untouched — admin verbs
+        are the operator's backpressure controls, not tenant traffic — but
+        unknown keys, tenant keys, and wildcard keys WITHOUT the admin
+        scope spend a token from their usual bucket, so a flood against
+        ``/v2/admin`` is throttled before auth exactly like one against
+        v1."""
+        principal = self.auth.peek(api_key)
+        if principal is not None and principal.is_admin \
+                and principal.can(ADMIN):
+            return
+        self._admit(api_key)
 
     def _call(self, method: str, api_key: str, *args, **kwargs):
         # gate before bucket: a request shed at the in-flight limit (global

@@ -34,6 +34,11 @@ from repro.core.types import JobManifest, JobRecord
 
 API_VERSION = "v1"
 SUPPORTED_VERSIONS = ("v1",)
+# The v2 admin control plane (repro.api.admin) is a SEPARATE, versioned
+# surface: resource-oriented operator envelopes stamped "v2". The v1 job
+# data plane above is untouched by it — v1 requests still carry (and are
+# answered with) "v1", and v1 rejects anything else exactly as before.
+ADMIN_API_VERSION = "v2"
 
 T = TypeVar("T")
 

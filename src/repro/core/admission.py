@@ -41,6 +41,11 @@ class AdmissionController:
     def register_tenant(self, name: str, quota_chips: int, tier: str = "paid"):
         self.tenants[name] = Tenant(name, quota_chips, tier)
 
+    def unregister_tenant(self, name: str):
+        """Drop a tenant's quota (v2 admin tenant delete): its submissions
+        fall back to the 'no quota configured' open admission."""
+        self.tenants.pop(name, None)
+
     def _tenant_usage(self, tenant: str) -> int:
         """Chips held by a tenant's active (non-terminal, non-halted) jobs."""
         used = 0

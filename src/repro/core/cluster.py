@@ -87,6 +87,10 @@ class ClusterModel:
         self._bucket_of: dict[str, int] = {}
         self._max_chips = chips_per_host
         self._sched_cache: Optional[list[Host]] = None
+        # placement epoch: bumped whenever anything a placement decision
+        # can observe changes (free chips, schedulability). GangScheduler
+        # caches "gang does not fit" verdicts keyed on it.
+        self.epoch = 0
         for hid in self.hosts:
             self._heartbeat_leases[hid] = etcd.grant_lease(self.HEARTBEAT_TTL)
             etcd.put(f"/nodes/{hid}", "Ready",
@@ -118,6 +122,7 @@ class ClusterModel:
     def _reindex(self, host: Host):
         """Move ``host`` to the bucket for its current free capacity
         (schedulable hosts only)."""
+        self.epoch += 1
         old = self._bucket_of.pop(host.host_id, None)
         if old is not None:
             self._free_buckets[old].discard(host.host_id)

@@ -57,6 +57,9 @@ class LogIndex:
     """
 
     def __init__(self):
+        # purge_jobs (tenant migration) tombstones records IN PLACE via a
+        # `purged` flag: the list keeps its length and positions so
+        # scan-offset cursors stay valid.
         self.records: list[LogRecord] = []
         self._by_job: dict[str, list[LogRecord]] = defaultdict(list)
         # token → sorted posting offsets (into self.records), and the same
@@ -183,6 +186,40 @@ class LogIndex:
                 return []
         return sorted(base)
 
+    # -- tenant rebalancing (repro.api.admin migrations) -------------------
+    def export_job(self, job_id: str, since: int = 0) -> list[dict]:
+        """One job's records past a per-job watermark, as JSON-able dicts.
+        ``since + len(result)`` is the watermark for the next delta export.
+        Call under the shard's lock for a consistent cut."""
+        return [{"ts": r.ts, "job_id": r.job_id, "learner": r.learner,
+                 "line": r.line}
+                for r in self._by_job.get(job_id, [])[since:]]
+
+    def import_records(self, recs: list[dict]):
+        """Append exported records into THIS index (normal ``append`` path,
+        so the inverted index stays consistent). Per-job offsets — the log
+        cursors clients hold — are preserved because deltas arrive in
+        order and start where the previous import stopped."""
+        for d in recs:
+            self.append(LogRecord(**d))
+
+    def purge_jobs(self, job_ids) -> int:
+        """Tombstone every record of ``job_ids`` (post-cutover source
+        cleanup). The global record list keeps its LENGTH and positions —
+        records are flagged in place — so the integer scan-offset cursors
+        other tenants hold against this shard stay valid. Cost is
+        O(purged jobs' records), not a scan of the whole shard (the purge
+        runs under BOTH shards' write locks at cutover): the per-job
+        pools reference the same record objects, so flagging through them
+        tombstones the global list too. Returns the tombstone count."""
+        n = 0
+        for jid in set(job_ids):
+            for rec in self._by_job.pop(jid, []):
+                rec.purged = True  # visible through self.records as well
+                n += 1
+            self._job_postings.pop(jid, None)
+        return n
+
     # -- search -----------------------------------------------------------
     def search(self, query: str, job_id: Optional[str] = None) -> list[LogRecord]:
         return self.search_page(query, job_id=job_id)[0]
@@ -218,15 +255,17 @@ class LogIndex:
             while i < len(pool):
                 r = pool[i]
                 i += 1
-                if query in r.line and (allow is None or allow(r.job_id)):
+                if not getattr(r, "purged", False) and query in r.line \
+                        and (allow is None or allow(r.job_id)):
                     out.append(r)
                     if limit is not None and len(out) >= limit:
                         break
             return out, (i if i < len(pool) else None)
         out = []
         for off in cands[bisect_left(cands, cursor):]:
-            r = pool[off]
-            if query in r.line and (allow is None or allow(r.job_id)):
+            r = pool[off]  # purged = tombstone of a migrated-away job
+            if not getattr(r, "purged", False) and query in r.line \
+                    and (allow is None or allow(r.job_id)):
                 out.append(r)
                 if limit is not None and len(out) >= limit:
                     # the scan would have stopped right after this record

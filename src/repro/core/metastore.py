@@ -29,6 +29,18 @@ WAL group-commit: journal ops buffer in memory and are made durable by ONE
 amortises the flush across many mutations — the control-plane tick and
 bulk ingest use this). ``insert_job`` outside a batch keeps the exact
 durable-before-ack contract: its op is on disk before it returns.
+
+Tenant rebalancing (the v2 admin plane, ``repro.api.admin``): a tenant's
+slice of the store can be moved between shards with
+``export_tenant``/``import_tenant``/``purge_tenant``. An export carries
+(a) the tenant's journal ops past a watermark — replayed into the
+destination's own WAL so the move is durable there — and (b) exact record
+snapshots overlaying the fields the WAL does not journal (``finished_at``,
+``progress_step``, restarts, the verbatim status history), so the imported
+records are bit-for-bit equal to the source's. Re-exporting from the new
+watermark yields only the mutations that landed during the copy (the
+CATCHUP phase); ``purge_tenant`` journals the removal so a recovered
+source shard does not resurrect a moved tenant.
 """
 
 from __future__ import annotations
@@ -155,6 +167,8 @@ class MetaStore:
                            op.get("msg", ""))
             self._index_restatus(op["job_id"], rec.manifest.tenant,
                                  old, rec.status)
+        elif op["op"] == "purge_tenant":
+            self._purge_tenant_state(op["tenant"])
 
     # -- index maintenance ------------------------------------------------
     def _index_insert(self, job_id: str, tenant: str, status: JobStatus):
@@ -260,6 +274,24 @@ class MetaStore:
         return ([self._jobs[jid] for jid in page_ids],
                 page_ids[-1] if more else None)
 
+    def jobs_span(self, lo: Optional[str] = None, hi: Optional[str] = None,
+                  status: Optional[JobStatus] = None,
+                  cursor: Optional[str] = None,
+                  limit: int = 20) -> list[JobRecord]:
+        """Records with ``max(lo, cursor) < job_id <= hi`` in id order, at
+        most ``limit``. The federated admin walk uses this to page one
+        *minting-shard id stream* (a contiguous id interval) out of any
+        shard's index — including ids that migrated in from another shard.
+        """
+        self._check()
+        idx = self._index_for(None, status)
+        start_key = lo
+        if cursor is not None and (start_key is None or cursor > start_key):
+            start_key = cursor
+        start = bisect_right(idx, start_key) if start_key is not None else 0
+        end = bisect_right(idx, hi) if hi is not None else len(idx)
+        return [self._jobs[jid] for jid in idx[start:min(start + limit, end)]]
+
     def history(self, tenant: str) -> list[dict]:
         """Per-tenant job history (the 'business artifact' query)."""
         return [
@@ -268,3 +300,121 @@ class MetaStore:
              "finished_at": r.finished_at}
             for r in self.jobs(tenant=tenant)
         ]
+
+    # -- tenant rebalancing (repro.api.admin migrations) -------------------
+    @staticmethod
+    def _record_to_wire(rec: JobRecord) -> dict:
+        """Exact, JSON-able snapshot of one record (models a wire copy)."""
+        return {
+            "job_id": rec.job_id, "manifest": asdict(rec.manifest),
+            "status": rec.status.value,
+            "status_history": [list(h) for h in rec.status_history],
+            "submitted_at": rec.submitted_at,
+            "scheduled_at": rec.scheduled_at,
+            "finished_at": rec.finished_at,
+            "placement": dict(rec.placement) if rec.placement else None,
+            "restarts": rec.restarts, "deploy_retries": rec.deploy_retries,
+            "progress_step": rec.progress_step, "message": rec.message,
+        }
+
+    @staticmethod
+    def _record_from_wire(d: dict) -> JobRecord:
+        rec = JobRecord(job_id=d["job_id"],
+                        manifest=JobManifest(**d["manifest"]),
+                        submitted_at=d["submitted_at"])
+        rec.status = JobStatus(d["status"])
+        rec.status_history = [tuple(h) for h in d["status_history"]]
+        rec.scheduled_at = d["scheduled_at"]
+        rec.finished_at = d["finished_at"]
+        rec.placement = dict(d["placement"]) if d["placement"] else None
+        rec.restarts = d["restarts"]
+        rec.deploy_retries = d["deploy_retries"]
+        rec.progress_step = d["progress_step"]
+        rec.message = d["message"]
+        return rec
+
+    def export_tenant(self, tenant: str, since: int = 0) -> dict:
+        """Consistent snapshot of one tenant's slice of the store.
+
+        ``ops`` are the tenant's journal entries with index >= ``since``
+        (only for jobs still live — a previously purged tenant exports
+        nothing); ``records`` are exact snapshots carrying the fields the
+        WAL does not journal. A FULL export (``since=0``) snapshots every
+        record; a delta export snapshots only the jobs the delta ops
+        touched — any record still mutating mutates through journaled
+        status flips (the migration quiesce guarantees this before the
+        final delta), so a delta-untouched record is identical to the
+        copy the previous export already delivered. ``watermark`` is the
+        journal position to pass as ``since`` on the next export. Call
+        under the shard's lock for a consistent cut.
+        """
+        self._check()
+        jids = set(self._by_tenant.get(tenant, []))
+        ops = []
+        for op in self._journal[since:]:
+            if op["op"] == "purge_tenant":
+                continue  # a fresh import must not carry an old purge
+            if op.get("job_id") in jids:
+                ops.append(op)
+        snap_ids = jids if since == 0 else {op["job_id"] for op in ops}
+        return {
+            "tenant": tenant,
+            "ops": ops,
+            "records": {jid: self._record_to_wire(self._jobs[jid])
+                        for jid in snap_ids},
+            "idem": {key: jid for (t, key), jid in self._idem.items()
+                     if t == tenant},
+            "watermark": len(self._journal),
+        }
+
+    def import_tenant(self, snap: dict):
+        """Install an ``export_tenant`` snapshot into THIS store.
+
+        The source's ops are appended to the local WAL (one group commit),
+        so the moved tenant survives a crash/recover of the destination;
+        the record snapshots then overwrite the in-memory records exactly
+        (bit-for-bit with the source, including status history and the
+        non-journaled fields). Re-imports are idempotent: a record already
+        present is replaced, not duplicated.
+        """
+        self._check()
+        with self.batch():
+            for op in snap["ops"]:
+                self._append(op)
+            for jid, wire in snap["records"].items():
+                old = self._jobs.get(jid)
+                if old is not None:
+                    self._index_remove(jid, old.manifest.tenant, old.status)
+                rec = self._record_from_wire(wire)
+                self._jobs[jid] = rec
+                self._index_insert(jid, rec.manifest.tenant, rec.status)
+            for key, jid in snap["idem"].items():
+                self._idem[(snap["tenant"], key)] = jid
+
+    def purge_tenant(self, tenant: str) -> list[str]:
+        """Remove every record of ``tenant`` (post-cutover source cleanup,
+        or rollback of a partial import on an aborted migration). Journaled,
+        so recovering this shard's WAL does not resurrect the moved tenant.
+        Returns the purged job ids."""
+        self._check()
+        purged = self._purge_tenant_state(tenant)
+        if purged:
+            self._append({"op": "purge_tenant", "tenant": tenant,
+                          "ts": self.clock.now()})
+            self._commit()
+        return purged
+
+    def _purge_tenant_state(self, tenant: str) -> list[str]:
+        jids = list(self._by_tenant.get(tenant, []))
+        for jid in jids:
+            rec = self._jobs.pop(jid)
+            self._index_remove(jid, tenant, rec.status)
+        for key in [k for k in self._idem if k[0] == tenant]:
+            del self._idem[key]
+        return jids
+
+    def _index_remove(self, job_id: str, tenant: str, status: JobStatus):
+        _idx_del(self._order, job_id)
+        _idx_del(self._by_tenant.get(tenant, []), job_id)
+        _idx_del(self._by_status.get(status, []), job_id)
+        _idx_del(self._by_tenant_status.get((tenant, status), []), job_id)

@@ -81,6 +81,7 @@ class FfDLPlatform:
         # federation; shared_reads=False degrades the shard lock to the
         # pre-federation exclusive behaviour (benchmark baseline).
         self.shard_id = shard_id
+        self.job_id_base = job_id_base
         self.clock = clock or SimClock()
         self.tick_period = tick_period
         self.events = EventLog(self.clock)
@@ -121,6 +122,12 @@ class FfDLPlatform:
                        events=self.events)
             for i in range(max(1, n_api_replicas))]
         self.api = LoadBalancer(self.api_replicas, events=self.events)
+        # v2 admin control plane (repro.api.admin): on a standalone
+        # platform it manages tenants/quotas/rate limits and exposes the
+        # single shard as a resource; migrations need a Federation.
+        from repro.api.admin import AdminGateway, AdminPlane
+        self.admin = AdminPlane(self.router, self.auth)
+        self.admin_api = AdminGateway(self.admin, self.auth)
 
     # ------------------------------------------------- API tier lifecycle
     @property

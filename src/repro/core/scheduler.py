@@ -71,6 +71,15 @@ class GangScheduler:
         self._reserved_chips: Counter = Counter()  # host_id → chips
         self._chips_per_pod: dict[str, int] = {}
         self.on_placed: Optional[Callable[[GangRequest], None]] = None
+        # BSA verdict cache: a gang that did not fit cannot fit again until
+        # the cluster (free chips / schedulability) or this scheduler's
+        # reservations change. "Does not fit" is deterministic in that
+        # state (bsa_place returns None iff sum(free//cpp) < n_pods, before
+        # consuming any randomness), so skipping the re-run is observably
+        # identical — placements and the rng stream are unchanged.
+        self._res_epoch = 0                 # bumped on reserve/confirm/release
+        self._nofit: dict[str, tuple] = {}  # job_id → epoch pair at failure
+        self.stats = {"bsa_runs": 0, "bsa_cache_hits": 0}
 
     # -- API ----------------------------------------------------------------
     def submit(self, req: GangRequest):
@@ -89,11 +98,13 @@ class GangScheduler:
             cpp = self._chips_per_pod.pop(job_id, 0)
             for h in hosts:
                 self._reserved_chips[h] -= cpp
+            self._res_epoch += 1
 
     def release(self, job_id: str):
         """Free a gang (finished/failed/preempted/rolled back)."""
         self.confirm(job_id)  # drop any unconfirmed reservation
         self.queue = [r for r in self.queue if r.job_id != job_id]
+        self._nofit.pop(job_id, None)
 
     def queue_depth(self) -> int:
         return len(self.queue)
@@ -114,11 +125,22 @@ class GangScheduler:
         while progress and self.queue:
             progress = False
             for req in list(self.queue):
+                epoch = (self.cluster.epoch, self._res_epoch)
+                if self._nofit.get(req.job_id) == epoch:
+                    # nothing a placement can observe changed since this
+                    # gang last failed to fit: the verdict stands, skip the
+                    # BSA re-run (and the repeat no-nodes event)
+                    self.stats["bsa_cache_hits"] += 1
+                    if self.strict_fcfs:
+                        return  # head-of-line still blocks
+                    continue
+                self.stats["bsa_runs"] += 1
                 assignment = bsa_place(
                     self._host_views(), req.n_pods, req.chips_per_pod,
                     policy=self.placement, torus=self.cluster.torus,
                     samples=self.bsa_samples, rng=self.rng)
                 if assignment is None:
+                    self._nofit[req.job_id] = epoch
                     self.events.emit(
                         "scheduler", "no_nodes_available", job=req.job_id,
                         reason="no nodes match all predicates "
@@ -127,11 +149,13 @@ class GangScheduler:
                         return  # head-of-line blocks
                     continue
                 # All-or-nothing reservation, atomic wrt this scheduler.
+                self._nofit.pop(req.job_id, None)
                 req.placement = assignment
                 self._reserved[req.job_id] = assignment
                 self._chips_per_pod[req.job_id] = req.chips_per_pod
                 for h in assignment:
                     self._reserved_chips[h] += req.chips_per_pod
+                self._res_epoch += 1
                 self.queue.remove(req)
                 self.events.emit("scheduler", "gang_placed", job=req.job_id,
                                  hosts=sorted(set(assignment)))

@@ -6,7 +6,7 @@ code→HTTP-status table must match `repro.api.http`.
 import pathlib
 import re
 
-from repro.api import ErrorCode, ROUTES, STATUS_OF
+from repro.api import ADMIN_ROUTES, ErrorCode, ROUTES, STATUS_OF
 
 DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
 ARCH = DOCS.parent / "architecture.md"
@@ -42,11 +42,53 @@ def test_every_route_documented():
 
 
 def test_no_phantom_routes_documented():
-    """Docs must not advertise `VERB /v1/...` routes the server lacks."""
+    """Docs must not advertise `VERB /v1/...` or `VERB /v2/...` routes
+    the server lacks."""
     doc = _api_md()
-    advertised = set(re.findall(r"`(GET|POST|PUT|PATCH|DELETE) (/v1/[^` ]*)`",
-                                doc))
-    assert advertised <= set(ROUTES), advertised - set(ROUTES)
+    advertised = set(re.findall(
+        r"`(GET|POST|PUT|PATCH|DELETE) (/v[12]/[^` ]*)`", doc))
+    known = set(ROUTES) | set(ADMIN_ROUTES)
+    assert advertised <= known, advertised - known
+
+
+def test_every_admin_route_documented():
+    """The v2 admin control plane is a contract too: every ADMIN_ROUTES
+    entry must appear in docs/api.md."""
+    doc = _api_md()
+    for method, path in ADMIN_ROUTES:
+        assert re.search(rf"`{method} {re.escape(path)}`", doc), \
+            f"route {method} {path} missing from docs/api.md"
+
+
+def test_migration_contract_documented_and_real():
+    """The migration phase machine named in the docs must be the one the
+    code runs, and the admin wire surface must actually exist."""
+    from repro.api import AdminGateway, AdminPlane, HttpTransport
+    from repro.api.admin import MigrationPhase
+    from repro.core.helpers import LogIndex
+    from repro.core.metastore import MetaStore
+    doc = _api_md()
+    for phase in MigrationPhase:
+        assert phase.value in doc, f"phase {phase.value} missing from docs"
+    for name in ("export_tenant", "import_tenant", "purge_tenant"):
+        assert hasattr(MetaStore, name), f"MetaStore.{name} gone — fix docs"
+    for name in ("export_job", "import_records", "purge_jobs"):
+        assert hasattr(LogIndex, name), f"LogIndex.{name} gone — fix docs"
+    # the HTTP transport speaks every admin verb the gateway exposes
+    for name in ("create_tenant", "get_tenant", "list_tenants",
+                 "patch_tenant", "delete_tenant", "list_shards",
+                 "get_shard", "cordon_shard", "uncordon_shard",
+                 "drain_shard", "start_migration", "get_migration",
+                 "list_migrations"):
+        assert hasattr(AdminGateway, name)
+        assert hasattr(HttpTransport, name)
+    for name in ("advance", "drain", "start_migration"):
+        assert hasattr(AdminPlane, name)
+    arch = ARCH.read_text()
+    assert "## Control plane v2 & tenant migration" in arch
+    for term in ("SNAPSHOT", "CATCHUP", "CUTOVER", "export_tenant",
+                 "`admin` scope", "api/admin.py"):
+        assert term in arch, f"{term!r} missing from architecture.md"
 
 
 def test_headers_documented():

@@ -114,6 +114,52 @@ def test_gang_largest_first_on_same_instant():
     assert placed[0] == "big"  # largest gang first (§3.6)
 
 
+def test_gang_bsa_verdict_cache_skips_unchanged_reruns():
+    """A queued gang's 'does not fit' verdict is cached per (cluster,
+    reservation) epoch: idle ticks stop re-running BSA per gang, and any
+    relevant change (a release, a pod transition) invalidates exactly as
+    the uncached scheduler would have observed it."""
+    clock, events, cluster = make_cluster(2, 4)
+    sched = GangScheduler(cluster, events)
+    placed = []
+    sched.on_placed = placed.append
+    sched.submit(GangRequest("a", 2, 4, submitted_at=0.0))
+    sched.submit(GangRequest("b", 2, 4, submitted_at=1.0))
+    sched.tick()
+    assert len(placed) == 1 and sched.queue_depth() == 1
+    runs = sched.stats["bsa_runs"]
+    no_nodes = len(events.of_kind("no_nodes_available"))
+    for _ in range(50):  # nothing changes: zero BSA re-runs, zero re-logs
+        sched.tick()
+    assert sched.stats["bsa_runs"] == runs
+    assert sched.stats["bsa_cache_hits"] >= 50
+    assert len(events.of_kind("no_nodes_available")) == no_nodes
+    # a release is a reservation-epoch change: the verdict is recomputed
+    # and the waiting gang places, exactly like the uncached scheduler
+    sched.release("a")
+    sched.tick()
+    assert sched.queue_depth() == 0 and len(placed) == 2
+    assert sched.stats["bsa_runs"] > runs
+
+
+def test_gang_bsa_cache_invalidated_by_cluster_change():
+    from repro.core.types import Pod
+    clock, events, cluster = make_cluster(2, 4)
+    sched = GangScheduler(cluster, events)
+    placed = []
+    sched.on_placed = placed.append
+    # fill the cluster with a bound pod so the gang cannot fit
+    pod = Pod(name="filler", job_id="other", kind="learner", chips=4)
+    assert cluster.bind_pod(pod, "host-0000")
+    sched.submit(GangRequest("g", 2, 4, submitted_at=0.0))
+    sched.tick()
+    sched.tick()
+    assert not placed and sched.stats["bsa_cache_hits"] >= 1
+    cluster.delete_pod("filler")  # pod transition bumps the cluster epoch
+    sched.tick()
+    assert placed and placed[0].job_id == "g"
+
+
 def test_gang_release_frees_reservation():
     clock, events, cluster = make_cluster(2, 4)
     sched = GangScheduler(cluster, events)
