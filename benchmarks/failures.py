@@ -50,7 +50,7 @@ def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
         arrivals = sorted(rng.uniform(month * month_s, t_month_end,
                                       jobs_per_month))
         ai = 0
-        ev_before = len(p.events.events)
+        ev_mark = p.events.seq
         while p.clock.now() < t_month_end:
             while ai < len(arrivals) and arrivals[ai] <= p.clock.now():
                 n_l = int(rng.choice([1, 1, 2, 4], p=[.5, .2, .2, .1]))
@@ -62,7 +62,7 @@ def run(months: int = 2, jobs_per_month: int = 550, seed: int = 0) -> dict:
                     max_restarts=6)))
                 ai += 1
             p.tick()
-        month_events = p.events.events[ev_before:]
+        month_events = p.events.since(ev_mark)
         deletions = [e for e in month_events if e.kind == "pod_deleted"]
         node_fail_del = [e for e in deletions
                          if e.fields.get("reason") == "node_failure"]

@@ -1,0 +1,196 @@
+"""Observability-plane benchmark: SSE streaming vs long-poll, and
+exactly-once event replay across a mid-stream shard kill.
+
+FfDL §3.2's API tier must carry many concurrent followers (``ffdl logs
+--follow`` et al.) without turning each into a request train. This
+benchmark measures the two transports the tier now offers:
+
+  * ``sse_vs_longpoll`` — one follower tails a job's logs to completion
+    twice: over long-poll (bounded ``wait_ms`` per request) and over ONE
+    server-sent-events connection. The transport's own counters
+    (``requests_sent`` / ``streams_opened``) are the measurement: both
+    followers deliver identical lines, and the SSE follower must issue
+    **≥10× fewer HTTP requests** (asserted in full mode).
+  * ``event_replay`` — a 2-shard federation emits a known event load;
+    an admin pages ``/v2/events`` through composite cursors while one
+    shard is killed mid-chain and restarted. The dead shard answers
+    UNAVAILABLE (no silently partial pages); the same cursor then
+    resumes, and the chain must serve every retained event exactly once
+    — zero duplicates, zero gaps (asserted in both modes).
+
+Emits machine-readable ``BENCH_observability.json`` at the repo root.
+``--quick`` shrinks the job and the event load; the replay invariants
+still hold, only the timing-sensitive 10× request-ratio assertion is
+full-mode-only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+
+from repro.api import ApiClient, ApiError, ApiHttpServer, Federation, \
+    HttpTransport
+from repro.core import FfDLPlatform, JobManifest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_observability.json")
+
+
+class _Driver:
+    def __init__(self, server, platform):
+        self.server, self.platform = server, platform
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.is_set():
+            with self.server.lock:
+                self.platform.tick()
+            time.sleep(0.002)
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join()
+
+
+def _follow_longpoll(server, platform, key, sim_s: int, wait_ms: int):
+    t = HttpTransport(server.base_url)
+    client = ApiClient(t, key, prefer_sse=False)
+    job = client.submit(JobManifest(name="lp", tenant="bench",
+                                    sim_duration=sim_s))
+    with _Driver(server, platform):
+        t0 = time.perf_counter()
+        lines = list(client.follow_logs(job, wait_ms=wait_ms))
+        wall = time.perf_counter() - t0
+    requests = t.requests_sent  # snapshot before the verification read
+    assert lines == client.logs(job), "long-poll follower dropped lines"
+    return {"lines": len(lines), "requests": requests,
+            "streams": t.streams_opened, "wall_s": round(wall, 3)}
+
+
+def _follow_sse(server, platform, key, sim_s: int):
+    t = HttpTransport(server.base_url)
+    client = ApiClient(t, key)  # prefer_sse=True
+    job = client.submit(JobManifest(name="sse", tenant="bench",
+                                    sim_duration=sim_s))
+    with _Driver(server, platform):
+        t0 = time.perf_counter()
+        lines = list(client.follow_logs(job))
+        wall = time.perf_counter() - t0
+    requests = t.requests_sent
+    assert lines == client.logs(job), "SSE follower dropped lines"
+    return {"lines": len(lines), "requests": requests,
+            "streams": t.streams_opened, "wall_s": round(wall, 3)}
+
+
+def _sse_vs_longpoll_drill(quick: bool) -> dict:
+    sim_s = 60 if quick else 240
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    key = p.auth.issue_key("bench")
+    with ApiHttpServer(p, heartbeat_s=1.0) as server:
+        lp = _follow_longpoll(server, p, key, sim_s, wait_ms=10)
+        sse = _follow_sse(server, p, key, sim_s)
+        streams_opened_srv = server.streams_opened
+    assert sse["streams"] == 1, sse          # the whole follow: ONE stream
+    assert streams_opened_srv == 1
+    # submit is 1 request on each side; the follow itself is the rest
+    lp_follow = lp["requests"] - 1
+    sse_follow = sse["requests"] - 1 + sse["streams"]
+    ratio = lp_follow / max(1, sse_follow)
+    return {"long_poll": lp, "sse": sse,
+            "follow_requests_long_poll": lp_follow,
+            "follow_requests_sse": sse_follow,
+            "request_ratio": round(ratio, 1)}
+
+
+def _event_replay_drill(quick: bool) -> dict:
+    n_events = 200 if quick else 2_000
+    fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4)
+    admin = fed.auth.issue_admin_key()
+    for i in range(n_events):
+        fed.shards[i % 2].events.emit("bench", "job_submitted", n=i)
+    kill_at = n_events // 2
+    served: set = set()
+    cursor = None
+    pages = unavailable = duplicates = 0
+    killed = False
+    t0 = time.perf_counter()
+    while True:
+        try:
+            out = fed.api.events(admin, cursor=cursor, limit=50)
+        except ApiError:
+            unavailable += 1
+            fed.shard_restart(1)  # operator brings the shard back
+            continue
+        if not out["items"]:
+            break
+        pages += 1
+        for e in out["items"]:
+            k = (e["shard"], e["seq"])
+            if k in served:
+                duplicates += 1
+            served.add(k)
+        cursor = out["next_cursor"]
+        if not killed and len(served) >= kill_at:
+            fed.shard_crash(1)  # mid-chain kill
+            killed = True
+    wall = time.perf_counter() - t0
+    total = sum(s.events.seq - s.events.dropped_total for s in fed.shards)
+    assert killed and unavailable >= 1, \
+        "the kill never hit the page chain — shrink kill_at"
+    assert duplicates == 0, f"{duplicates} events replayed"
+    assert len(served) == total, \
+        f"served {len(served)} of {total} retained events"
+    return {"events_emitted": n_events, "events_total_retained": total,
+            "events_served": len(served), "pages": pages,
+            "duplicates": duplicates, "unavailable_pages": unavailable,
+            "events_per_s": round(len(served) / max(wall, 1e-9)),
+            "wall_s": round(wall, 3)}
+
+
+def run(quick: bool = False) -> dict:
+    out = {"quick": quick}
+
+    print("sse_vs_longpoll: one follower, two transports ...", flush=True)
+    out["sse_vs_longpoll"] = _sse_vs_longpoll_drill(quick)
+    d = out["sse_vs_longpoll"]
+    print(f"  long-poll {d['follow_requests_long_poll']} requests vs "
+          f"SSE {d['follow_requests_sse']} "
+          f"({d['request_ratio']}x fewer)")
+
+    print("event_replay: 2 shards, mid-chain kill ...", flush=True)
+    out["event_replay"] = _event_replay_drill(quick)
+    d = out["event_replay"]
+    print(f"  {d['events_served']} events over {d['pages']} pages, "
+          f"{d['unavailable_pages']} UNAVAILABLE during the kill, "
+          f"0 duplicates ({d['events_per_s']:,} events/s)")
+
+    if not quick:
+        # the PR's acceptance bar (timing-sensitive: full size only)
+        assert out["sse_vs_longpoll"]["request_ratio"] >= 10, \
+            out["sse_vs_longpoll"]
+    return out
+
+
+def main(argv=None):
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    out = run(quick=quick)
+    if not quick:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {OUT_PATH}")
+    print("OBSERVABILITY BENCH OK")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@
   §Roofline  → benchmarks.roofline     (dry-run-derived roofline table)
   §3.2       → benchmarks.api_tier     (replicated API availability/latency)
   §7         → benchmarks.hotpath      (indexed control-plane hot paths)
+  §3.2/§4    → benchmarks.observability (SSE streaming, event replay)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
 ``hotpath``'s full run additionally writes ``BENCH_hotpath.json`` at the
@@ -38,6 +39,7 @@ def main() -> None:
         failures,
         gang,
         hotpath,
+        observability,
         overhead,
         recovery,
         roofline,
@@ -49,6 +51,7 @@ def main() -> None:
     all_benches = [
         ("api_tier_s3_2", api_tier.main),
         ("hotpath", hotpath.main),
+        ("observability", observability.main),
         ("overhead_table1_2", overhead.main),
         ("recovery_table3", recovery.main),
         ("spread_pack_fig3", spread_pack.main),

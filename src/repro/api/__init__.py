@@ -22,6 +22,7 @@ from repro.api.http import (
     ADMIN_ROUTES,
     ApiHttpServer,
     HttpTransport,
+    OBS_ROUTES,
     ROUTES,
     STATUS_OF,
 )
@@ -65,6 +66,7 @@ __all__ = [
     "JobView",
     "LoadBalancer",
     "MigrationPhase",
+    "OBS_ROUTES",
     "Page",
     "Principal",
     "RateLimitConfig",

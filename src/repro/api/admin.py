@@ -395,7 +395,22 @@ class AdminPlane:
                       to_shard=dst.shard_id, created_at=self._now(),
                       updated_at=self._now())
         self.migrations[m.migration_id] = m
+        self._emit_phase(m)
         return self.migration_view(m)
+
+    def _emit_phase(self, m: Migration):
+        """migration_phase platform event into the SOURCE shard's bus,
+        stamped with the migrating tenant (so the tenant can watch its own
+        migration on /v2/events). Best-effort: observability must never
+        fail a phase step."""
+        try:
+            src = self.router.backend(m.from_shard)
+            src.platform.events.emit(
+                "admin", "migration_phase", tenant=m.tenant,
+                migration=m.migration_id, phase=m.phase.value,
+                to_shard=m.to_shard)
+        except Exception:
+            pass
 
     @_serialized
     def get_migration(self, migration_id: str) -> dict:
@@ -502,6 +517,7 @@ class AdminPlane:
                 elif m.phase == MigrationPhase.CUTOVER:
                     self._cutover(m, src, dst)
                     m.phase = MigrationPhase.DONE
+                self._emit_phase(m)
             except (ConnectionError, ObjectStoreError) as e:
                 # a metastore or object store failed mid-step: abort back
                 # to the intact source of truth
@@ -636,6 +652,7 @@ class AdminPlane:
         m.phase = MigrationPhase.FAILED
         m.error = error
         m.updated_at = self._now()
+        self._emit_phase(m)
         self.router.unlock_tenant(m.tenant)
         if m.halted_jobs:
             # resume wherever the tenant is ROUTED now — normally the

@@ -12,6 +12,8 @@ the platform, so everything it can do, any HTTP client can do.
     python -m repro.api.cli status job-00001 --watch
     python -m repro.api.cli logs job-00001 --follow
     python -m repro.api.cli halt job-00001 && python -m repro.api.cli resume job-00001
+    python -m repro.api.cli events --follow --kind job_completed
+    python -m repro.api.cli usage
     # v2 admin plane (use the operator key `serve` prints):
     python -m repro.api.cli admin shards
     python -m repro.api.cli admin create-tenant team-a --quota 8 --shard shard-0
@@ -22,8 +24,10 @@ the platform, so everything it can do, any HTTP client can do.
 ``--shards`` independent backend shards — prints one API key per
 ``--tenant`` (with its shard placement), and ticks the simulation in the
 foreground so submitted jobs actually run — the zero-to-aha path for
-``make serve``. ``logs --follow`` long-polls the server-side cursor until
-the job finishes.
+``make serve``. ``logs --follow``, ``status --watch`` and
+``events --follow`` each hold ONE SSE connection (heartbeats, exact
+resume via ``Last-Event-ID``); ``--long-poll`` forces the request-train
+fallback.
 """
 
 from __future__ import annotations
@@ -135,7 +139,8 @@ def cmd_list(args) -> int:
 def cmd_status(args) -> int:
     if args.watch:
         from repro.api.client import ApiClient
-        client = ApiClient(_transport(args), _key(args))
+        client = ApiClient(_transport(args), _key(args),
+                           prefer_sse=not args.long_poll)
         for v in client.watch_status(args.job_id, wait_ms=args.wait_ms):
             print(f"{v.job_id} {v.status:12s} step={v.progress_step:<6d} "
                   f"{v.message}", flush=True)
@@ -158,7 +163,8 @@ def cmd_history(args) -> int:
 def cmd_logs(args) -> int:
     if args.follow:
         from repro.api.client import ApiClient
-        client = ApiClient(_transport(args), _key(args))
+        client = ApiClient(_transport(args), _key(args),
+                           prefer_sse=not args.long_poll)
         for line in client.follow_logs(args.job_id, cursor=args.cursor,
                                        wait_ms=args.wait_ms):
             print(line, flush=True)
@@ -186,6 +192,41 @@ def cmd_search(args) -> int:
         print(f"{rec.job_id} learner={rec.learner} {rec.line}")
     if page.next_cursor is not None:
         print(f"# next cursor: {page.next_cursor}  (pass --cursor)")
+    return 0
+
+
+def cmd_events(args) -> int:
+    from repro.api.client import ApiClient
+    client = ApiClient(_transport(args), _key(args),
+                       prefer_sse=not args.long_poll)
+    if args.follow:
+        try:
+            for e in client.follow_events(cursor=args.cursor,
+                                          kind=args.kind,
+                                          wait_ms=args.wait_ms):
+                print(json.dumps(e), flush=True)
+        except KeyboardInterrupt:
+            pass
+        return 0
+    out = client.events(cursor=args.cursor, limit=args.limit,
+                        kind=args.kind)
+    for e in out["items"]:
+        print(json.dumps(e))
+    if out["missed"]:
+        print(f"# {out['missed']} events aged out of retention before "
+              f"this cursor", file=sys.stderr)
+    print(f"# next cursor: {out['next_cursor']}", file=sys.stderr)
+    return 0
+
+
+def cmd_usage(args) -> int:
+    from repro.api.client import ApiClient
+    rows = ApiClient(_transport(args), _key(args)).usage(tenant=args.tenant)
+    for u in rows:
+        print(f"{u['tenant']:16s} chip_s={u['chip_seconds']:<10g} "
+              f"jobs={u['jobs_submitted']}/{u['jobs_completed']}"
+              f"/{u['jobs_failed']} (sub/done/fail) "
+              f"log_bytes={u['log_bytes']} 429s={u['throttled_429s']}")
     return 0
 
 
@@ -380,6 +421,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "the job reaches a terminal state")
     s.add_argument("--wait-ms", type=int, default=8000,
                    help="server-side park per --watch poll (capped 10s)")
+    s.add_argument("--long-poll", action="store_true",
+                   help="force long-poll for --watch instead of one SSE "
+                        "stream")
     s.set_defaults(fn=cmd_status)
 
     s = sub.add_parser("history", help="GET /v1/jobs/{id}/history")
@@ -397,6 +441,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "terminal state")
     s.add_argument("--wait-ms", type=int, default=8000,
                    help="server-side park per --follow poll (capped 10s)")
+    s.add_argument("--long-poll", action="store_true",
+                   help="force long-poll for --follow instead of one SSE "
+                        "stream")
     s.set_defaults(fn=cmd_logs)
 
     s = sub.add_parser("search", help="GET /v1/logs/search")
@@ -405,6 +452,23 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument("--cursor")
     s.add_argument("--limit", type=int)
     s.set_defaults(fn=cmd_search)
+
+    s = sub.add_parser("events", help="GET /v2/events (platform event "
+                                      "stream; one JSON object per line)")
+    s.add_argument("--cursor", help="resume from this event cursor")
+    s.add_argument("--kind", help="only events of this kind")
+    s.add_argument("--limit", type=int, help="page size (no --follow)")
+    s.add_argument("--follow", "-f", action="store_true",
+                   help="stream new events until interrupted")
+    s.add_argument("--wait-ms", type=int, default=8000,
+                   help="server-side park per --follow poll (capped 10s)")
+    s.add_argument("--long-poll", action="store_true",
+                   help="force long-poll instead of one SSE stream")
+    s.set_defaults(fn=cmd_events)
+
+    s = sub.add_parser("usage", help="GET /v1/usage (per-tenant metering)")
+    s.add_argument("--tenant", help="one tenant's row (admin keys)")
+    s.set_defaults(fn=cmd_usage)
 
     s = sub.add_parser("halt", help="POST /v1/jobs/{id}/halt")
     s.add_argument("job_id")

@@ -10,21 +10,54 @@ It replaces the retired ``FfDLPlatform.submit/status/...`` facade with the
 same ergonomic return shapes (job ids, ``JobStatus``, plain lists) but the
 v1 error contract: every failure is an ``ApiError`` with a stable code —
 never a raw ``KeyError``/``ValueError``/``PermissionError``.
+
+Streaming: when the transport exposes SSE (``stream_logs`` /
+``stream_status`` / ``stream_events`` — :class:`HttpTransport` does,
+in-process transports don't), ``follow_logs``/``watch_status``/
+``follow_events`` ride ONE server-sent-events connection with heartbeats
+instead of a long-poll request train. A dropped stream reconnects from its
+``Last-Event-ID`` (exact resume, no replay and no gap); a server without
+SSE (``sse_unsupported``) demotes the client to long-poll permanently.
+``prefer_sse=False`` forces long-poll (the ``--long-poll`` CLI flag).
 """
 
 from __future__ import annotations
 
+import json
 from typing import Optional
 
 from repro.api.auth import ALL_TENANTS, READ, WRITE
-from repro.api.types import Page, SubmitRequest, SubmitResponse
+from repro.api.types import ApiError, ErrorCode, JobView, Page, \
+    SubmitRequest, SubmitResponse
 from repro.core.types import TERMINAL, JobManifest, JobStatus
+
+# consecutive UNAVAILABLE stream (re)opens before giving up — a live
+# server that keeps resetting streams is as unreachable as a dead one
+_MAX_STREAM_FAILURES = 3
+
+
+def _frame_error(data) -> ApiError:
+    """Decode an ``event: error`` frame (the standard wire error envelope
+    delivered in-stream) back into the ApiError it carries."""
+    try:
+        wire = json.loads(data)["error"]
+        code = ErrorCode(wire["code"])
+        details = {k: v for k, v in wire.items()
+                   if k not in ("code", "message")}
+        return ApiError(code, wire.get("message", ""), **details)
+    except (ValueError, KeyError, TypeError):
+        return ApiError(ErrorCode.UNAVAILABLE,
+                        f"undecodable stream error frame: {data!r}")
 
 
 class ApiClient:
-    def __init__(self, transport, api_key: str):
+    def __init__(self, transport, api_key: str, prefer_sse: bool = True):
         self.transport = transport
         self.api_key = api_key
+        self.prefer_sse = prefer_sse
+
+    def _sse(self, verb: str) -> bool:
+        return self.prefer_sse and hasattr(self.transport, verb)
 
     @classmethod
     def for_platform(cls, platform, tenant: str = ALL_TENANTS,
@@ -61,10 +94,40 @@ class ApiClient:
 
     def watch_status(self, job_id: str, wait_ms: int = 8000):
         """Yield the job's ``JobView`` once now and again on every status
-        change, long-polling the server (bounded ``wait_ms`` per call,
-        parked off-lock server-side) until the job reaches a terminal
-        state — the engine behind ``ffdl status --watch``."""
+        change until the job reaches a terminal state — the engine behind
+        ``ffdl status --watch``. Rides one SSE connection when the
+        transport streams; otherwise long-polls (bounded ``wait_ms`` per
+        call, parked off-lock server-side)."""
         last = None
+        if self._sse("stream_status"):
+            failures = 0
+            while True:
+                ended = False
+                try:
+                    for fr in self.transport.stream_status(
+                            self.api_key, job_id, last_status=last):
+                        if fr.comment is not None:
+                            continue
+                        if fr.event == "end":
+                            ended = True
+                            break
+                        if fr.event == "error":
+                            raise _frame_error(fr.data)
+                        failures = 0
+                        view = JobView(**json.loads(fr.data))
+                        last = fr.id or view.status
+                        yield view
+                except ApiError as e:
+                    if e.details.get("sse_unsupported"):
+                        break  # server can't stream: long-poll forever
+                    failures += 1
+                    if e.code is not ErrorCode.UNAVAILABLE \
+                            or failures >= _MAX_STREAM_FAILURES:
+                        raise
+                else:
+                    if ended:
+                        return
+                    # clean close (stream budget spent): resume from last
         while True:
             view = self.transport.status(self.api_key, job_id,
                                          wait_ms=wait_ms, last_status=last)
@@ -93,10 +156,39 @@ class ApiClient:
 
     def follow_logs(self, job_id: str, cursor: Optional[str] = None,
                     wait_ms: int = 8000):
-        """Yield log lines as they appear, long-polling the server-side
-        cursor (bounded ``wait_ms`` per call), until the job reaches a
-        terminal state and the stream is fully consumed — the engine
-        behind ``ffdl logs --follow``."""
+        """Yield log lines as they appear until the job reaches a terminal
+        state and the stream is fully consumed — the engine behind
+        ``ffdl logs --follow``. One SSE connection when the transport
+        streams (every frame id is the exact resume cursor); long-poll on
+        the server-side cursor otherwise."""
+        if self._sse("stream_logs"):
+            failures = 0
+            while True:
+                ended = False
+                try:
+                    for fr in self.transport.stream_logs(
+                            self.api_key, job_id, cursor=cursor):
+                        if fr.comment is not None:
+                            continue
+                        if fr.event == "end":
+                            ended = True
+                            break
+                        if fr.event == "error":
+                            raise _frame_error(fr.data)
+                        failures = 0
+                        if fr.id is not None:
+                            cursor = fr.id
+                        yield json.loads(fr.data)
+                except ApiError as e:
+                    if e.details.get("sse_unsupported"):
+                        break
+                    failures += 1
+                    if e.code is not ErrorCode.UNAVAILABLE \
+                            or failures >= _MAX_STREAM_FAILURES:
+                        raise
+                else:
+                    if ended:
+                        return
         while True:
             page = self.transport.logs(self.api_key, job_id, cursor=cursor,
                                        wait_ms=wait_ms)
@@ -132,6 +224,60 @@ class ApiClient:
 
     def cancel(self, job_id: str):
         return self.transport.cancel(self.api_key, job_id)
+
+    # -- observability plane ----------------------------------------------
+    def usage(self, tenant: Optional[str] = None) -> list:
+        """Per-tenant usage rows (chip-seconds, job counts, log bytes,
+        429s). A tenant key reads its own row; an admin key reads all
+        tenants (or one, with ``tenant=``)."""
+        return self.transport.usage(self.api_key, tenant=tenant)["items"]
+
+    def events(self, cursor: Optional[str] = None,
+               limit: Optional[int] = None, kind: Optional[str] = None,
+               wait_ms: Optional[int] = None) -> dict:
+        """One page of the platform event stream:
+        ``{"items", "next_cursor", "missed"}``. The cursor chain serves
+        every retained event exactly once; ``missed`` counts events that
+        aged out of retention before this page read them."""
+        return self.transport.events(self.api_key, cursor=cursor,
+                                     limit=limit, kind=kind,
+                                     wait_ms=wait_ms)
+
+    def follow_events(self, cursor: Optional[str] = None,
+                      kind: Optional[str] = None, wait_ms: int = 8000):
+        """Yield platform events as they happen — the engine behind
+        ``ffdl events --follow``. The stream has no natural end; iterate
+        until done and close the generator. SSE when the transport
+        streams, long-poll otherwise."""
+        if self._sse("stream_events"):
+            failures = 0
+            while True:
+                try:
+                    for fr in self.transport.stream_events(
+                            self.api_key, cursor=cursor, kind=kind):
+                        if fr.comment is not None:
+                            continue
+                        if fr.event == "end":
+                            return
+                        if fr.event == "error":
+                            raise _frame_error(fr.data)
+                        failures = 0
+                        if fr.id is not None:
+                            cursor = fr.id
+                        yield json.loads(fr.data)
+                except ApiError as e:
+                    if e.details.get("sse_unsupported"):
+                        break
+                    failures += 1
+                    if e.code is not ErrorCode.UNAVAILABLE \
+                            or failures >= _MAX_STREAM_FAILURES:
+                        raise
+                # clean close: reconnect from the last delivered id
+        while True:
+            out = self.transport.events(self.api_key, cursor=cursor,
+                                        kind=kind, wait_ms=wait_ms)
+            yield from out["items"]
+            cursor = out["next_cursor"]
 
 
 class AdminClient:

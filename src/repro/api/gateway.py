@@ -58,8 +58,12 @@ from repro.api.types import (
     check_version,
 )
 from repro.core.types import JobStatus, TERMINAL, gang_chips
+from repro.obs import UsageMeter, event_to_wire
 
 DEFAULT_PAGE = 20
+# /v2/events default page size (its own knob: event pages are cheap —
+# no metastore projection — so the default is bigger than DEFAULT_PAGE)
+DEFAULT_EVENTS_PAGE = 100
 # Upper bound on any page size: one tenant must not be able to drag the
 # whole metastore/log index through a single call (multi-tenant fairness).
 MAX_PAGE = 1000
@@ -157,20 +161,20 @@ class ApiGateway:
         self.router = router
         self.auth = auth
         self.replica_id = replica_id
-        self.events = events
+        self.event_log = events  # the owning shard's bus (verb `events` differs)
         self.alive = True
 
     # -- replica lifecycle (chaos) --------------------------------------
     def crash(self):
         self.alive = False
-        if self.events is not None:
-            self.events.emit("api", "replica_crashed",
+        if self.event_log is not None:
+            self.event_log.emit("api", "replica_crashed",
                              replica=self.replica_id)
 
     def restart(self):
         self.alive = True
-        if self.events is not None:
-            self.events.emit("api", "api_restarted", replica=self.replica_id)
+        if self.event_log is not None:
+            self.event_log.emit("api", "api_restarted", replica=self.replica_id)
 
     def _require(self, api_key: str, scope: str) -> Principal:
         # Liveness first: a dead replica fails before touching any state.
@@ -643,3 +647,114 @@ class ApiGateway:
                                f"{job_id} is already {rec.status.value}")
             with _meta_guard():
                 backend.platform._cancel_internal(job_id)
+
+    # -- observability plane (repro.obs) ----------------------------------
+    def usage(self, api_key: str, tenant: Optional[str] = None) -> dict:
+        """GET /v1/usage: per-tenant usage rows summed across every shard
+        (a migrated tenant's history lives on both its shards' meters).
+        A tenant key sees its own row; an admin key sees all tenants, or
+        one with ``?tenant=``. Any dead shard fails the read — billing
+        must never silently undercount."""
+        principal = self._require(api_key, READ)
+        if tenant is None:
+            tenant = None if principal.is_admin else principal.tenant
+        elif not principal.owns(tenant):
+            raise ApiError(ErrorCode.FORBIDDEN,
+                           f"cannot read usage of tenant {tenant!r}")
+        snaps = []
+        for backend in self.router.backends:
+            if not backend.alive:
+                raise _shard_down(backend)
+            with backend.read_locked():
+                snaps.append(backend.platform.meter.snapshot())
+        merged = UsageMeter.merge(snaps, tenant=tenant)
+        if tenant is not None and tenant not in merged:
+            merged[tenant] = UsageMeter().get(tenant)  # all-zero row
+        items = [{"tenant": t,
+                  **{f: (round(v, 3) if isinstance(v, float) else v)
+                     for f, v in row.items()}}
+                 for t, row in sorted(merged.items())]
+        return {"items": items}
+
+    @staticmethod
+    def _parse_event_kind(kind):
+        if kind is not None and (not isinstance(kind, str) or not kind):
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"kind must be a non-empty string, got {kind!r}")
+        return kind
+
+    def events(self, api_key: str, cursor: Optional[str] = None,
+               limit: Optional[int] = None, kind: Optional[str] = None,
+               wait_ms: Optional[int] = None) -> dict:
+        """GET /v2/events: cursor replay over the platform event stream.
+
+        Exactly-once per shard over successful responses: each page's
+        ``next_cursor`` continues precisely after the last sequence number
+        the page consumed, so a seq is never served twice on one cursor
+        chain, and retention drops are reported explicitly as ``missed``
+        (never silently skipped). A tenant key reads its own shard's
+        stream filtered to its own events; an admin key reads everything —
+        across a federation, behind the same composite-cursor scheme as
+        the other admin walks. ``next_cursor`` is ALWAYS present: the
+        stream has no end. With ``wait_ms`` the call parks (off the shard
+        lock) until an event matches, for ``events --follow``."""
+        principal = self._require(api_key, READ)
+        limit = _parse_limit(limit) or DEFAULT_EVENTS_PAGE
+        kind = self._parse_event_kind(kind)
+        deadline = time.monotonic() + _parse_wait_ms(wait_ms) / 1000.0
+        multi = principal.is_admin and len(self.router.backends) > 1
+        while True:
+            if multi:
+                out = self._events_federated(cursor, limit, kind)
+            else:
+                out = self._events_single(principal, cursor, limit, kind)
+            if out["items"] or time.monotonic() >= deadline:
+                return out
+            cursor = out["next_cursor"]  # keep the scan's progress
+            time.sleep(_POLL_S)
+
+    def _events_single(self, principal: Principal, cursor, limit: int,
+                       kind) -> dict:
+        if principal.is_admin:
+            backend = self._sole_shard()
+            visible = None
+        else:
+            backend = self._shard_for(principal.tenant)
+            tenant = principal.tenant
+            # tenant isolation: ONLY events stamped with this tenant;
+            # unstamped platform-internal events are admin-only
+            visible = (lambda e, _t=tenant: e.tenant == _t)
+        cur = _parse_cursor(cursor)
+        with backend.read_locked():
+            evs, nxt, missed = backend.platform.events.read_since(
+                cur, limit, visible=visible, kind=kind)
+            items = [event_to_wire(e, backend.shard_id) for e in evs]
+        return {"items": items, "next_cursor": str(nxt), "missed": missed}
+
+    def _events_federated(self, cursor, limit: int, kind) -> dict:
+        """Admin event walk over >1 shard: shard-major fill behind a
+        composite cursor (one integer seq per shard). No exhausted
+        markers — an event stream never ends — so every response carries
+        the full composite for the next poll."""
+        cursors, _exhausted = parse_composite_cursor(cursor, self.router,
+                                                     OFFSET_CURSOR_RE)
+        items: list = []
+        missed = 0
+        for backend in self.router.backends:
+            sid = backend.shard_id
+            if len(items) >= limit:
+                break
+            if not backend.alive:
+                # a partial admin stream would silently lose a shard's
+                # events for this page; fail honestly, cursor unchanged
+                raise _shard_down(backend)
+            need = limit - len(items)
+            with backend.read_locked():
+                evs, nxt, m = backend.platform.events.read_since(
+                    int(cursors.get(sid, 0)), need, kind=kind)
+                items += [event_to_wire(e, sid) for e in evs]
+            cursors[sid] = str(nxt)
+            missed += m
+        return {"items": items,
+                "next_cursor": encode_composite_cursor(cursors, set()),
+                "missed": missed}

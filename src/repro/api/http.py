@@ -64,8 +64,24 @@ the operator's backpressure controls, not tenant traffic); unknown or
 tenant keys probing /v2 still spend tokens from their usual bucket. The
 error envelope and ``STATUS_OF`` mapping are shared with v1.
 
+The **observability plane** (``repro.obs``)::
+
+    GET    /metrics       Prometheus text exposition (no auth, no envelope)
+    GET    /v1/usage      per-tenant usage meter (tenant: own row; admin: all)
+    GET    /v2/events     platform event stream, cursor replay (+ SSE)
+
+``/v1/jobs/{id}/logs``, ``/v1/jobs/{id}`` (status) and ``/v2/events``
+additionally speak **Server-Sent Events**: a request carrying
+``Accept: text/event-stream`` (or ``?stream=sse``) gets one chunked
+response that stays open — data frames with resume ids, ``: hb``
+heartbeat comments while idle, an ``event: end`` frame when a followed
+job goes terminal. A reconnecting client sends ``Last-Event-ID`` and the
+stream resumes exactly after it. Long-poll (``wait_ms``) remains the
+fallback contract on the same routes.
+
 Headers: ``Authorization: Bearer <key>`` on every authenticated route;
-``Idempotency-Key`` on submit; ``Retry-After`` on 429/503 responses.
+``Idempotency-Key`` on submit; ``Retry-After`` on 429/503 responses;
+``Accept: text/event-stream`` + ``Last-Event-ID`` for SSE.
 """
 
 from __future__ import annotations
@@ -75,13 +91,21 @@ import http.client
 import json
 import math
 import socket
+import sys
 import threading
+import time
+from collections import Counter
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib import parse as urlparse
 
 from repro.api.backend import AllShardsLock
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi
+from repro.api.router import (
+    OFFSET_CURSOR_RE,
+    encode_composite_cursor,
+    parse_composite_cursor,
+)
 from repro.api.types import (
     ADMIN_API_VERSION,
     API_VERSION,
@@ -93,7 +117,19 @@ from repro.api.types import (
     SubmitResponse,
 )
 from repro.core.helpers import LogRecord
-from repro.core.types import JobManifest, JobStatus
+from repro.core.types import JobManifest, JobStatus, TERMINAL
+from repro.obs import (
+    Histogram,
+    SSE_CONTENT_TYPE,
+    UsageMeter,
+    format_comment,
+    format_event,
+    iter_sse,
+    render_metrics,
+)
+
+# job statuses as they appear on the wire
+_TERMINAL_WIRE = {s.value for s in TERMINAL}
 
 # Stable ErrorCode → HTTP status mapping. docs/api.md documents exactly
 # this table and tests/test_docs_api.py fails if they ever diverge (or if
@@ -140,6 +176,13 @@ ADMIN_ROUTES = (
     ("POST", "/v2/admin/migrations"),
     ("GET", "/v2/admin/migrations"),
     ("GET", "/v2/admin/migrations/{migration_id}"),
+)
+
+# The observability plane (docs/api.md is checked against this as well).
+OBS_ROUTES = (
+    ("GET", "/metrics"),
+    ("GET", "/v1/usage"),
+    ("GET", "/v2/events"),
 )
 
 MAX_BODY_BYTES = 1 << 20  # a manifest is small; reject anything bigger
@@ -209,6 +252,7 @@ class _Handler(BaseHTTPRequestHandler):
     def _send_json(self, status: int, payload: dict,
                    extra_headers: Optional[dict] = None):
         self._drain_unread_body()  # keep-alive: never leave request bytes
+        self._status_sent = status
         body = json.dumps(payload).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
@@ -288,18 +332,19 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- routing ----------------------------------------------------------
     @staticmethod
-    def _known_route(method: str, parts: list) -> bool:
-        """ROUTES/ADMIN_ROUTES are the authoritative tables: anything they
-        don't name is a 404 *before* auth, so probing the route space needs
-        no credential and a typo'd URL isn't misreported as an auth
-        failure."""
-        for m, template in ROUTES + ADMIN_ROUTES:
+    def _match_route(method: str, parts: list) -> Optional[str]:
+        """ROUTES/ADMIN_ROUTES/OBS_ROUTES are the authoritative tables:
+        anything they don't name is a 404 *before* auth, so probing the
+        route space needs no credential and a typo'd URL isn't misreported
+        as an auth failure. Returns the matched ``"METHOD /template"`` —
+        the label request metrics aggregate under — or None."""
+        for m, template in ROUTES + ADMIN_ROUTES + OBS_ROUTES:
             t_parts = [p for p in template.split("/") if p]
             if m == method and len(t_parts) == len(parts) and all(
                     tp.startswith("{") or tp == pp
                     for tp, pp in zip(t_parts, parts)):
-                return True
-        return False
+                return f"{m} {template}"
+        return None
 
     def _route(self, method: str):
         split = urlparse.urlsplit(self.path)
@@ -309,16 +354,31 @@ class _Handler(BaseHTTPRequestHandler):
 
         if parts[:1] == ["v2"]:
             self._envelope_version = ADMIN_API_VERSION
-        if not self._known_route(method, parts):
+        self._route_template = self._match_route(method, parts)
+        if self._route_template is None:
             raise ApiError(ErrorCode.NOT_FOUND,
                            f"no route for {method} {split.path}")
         if method == "GET" and parts == ["v1", "health"]:
             return self._health()
+        if method == "GET" and parts == ["metrics"]:
+            return self._metrics()  # scrape endpoint: no auth, like health
 
         key = self._api_key()
 
         if parts[:2] == ["v2", "admin"]:
             return self._admin_route(method, parts[2:], key)
+        if method == "GET" and parts == ["v1", "usage"]:
+            out = api.usage(key, tenant=qs.get("tenant", [None])[0])
+            return self._send_json(200, {"api_version": API_VERSION, **out})
+        if method == "GET" and parts == ["v2", "events"]:
+            if self._wants_sse(qs):
+                return self._stream_events(api, key, qs)
+            out = api.events(key, cursor=qs.get("cursor", [None])[0],
+                             limit=self._int_param(qs, "limit"),
+                             kind=qs.get("kind", [None])[0],
+                             wait_ms=self._int_param(qs, "wait_ms"))
+            return self._send_json(
+                200, {"api_version": ADMIN_API_VERSION, **out})
 
         if parts[:2] == ["v1", "jobs"]:
             if method == "POST" and len(parts) == 2:
@@ -328,6 +388,8 @@ class _Handler(BaseHTTPRequestHandler):
             if len(parts) == 3:
                 job_id = parts[2]
                 if method == "GET":
+                    if self._wants_sse(qs):
+                        return self._stream_status(api, key, job_id, qs)
                     view = api.status(
                         key, job_id,
                         wait_ms=self._int_param(qs, "wait_ms"),
@@ -345,6 +407,8 @@ class _Handler(BaseHTTPRequestHandler):
                         200, {"api_version": API_VERSION,
                               "items": [list(h) for h in hist]})
                 if method == "GET" and tail == "logs":
+                    if self._wants_sse(qs):
+                        return self._stream_logs(api, key, job_id, qs)
                     page = api.logs(key, job_id,
                                     cursor=qs.get("cursor", [None])[0],
                                     limit=self._int_param(qs, "limit"),
@@ -389,16 +453,249 @@ class _Handler(BaseHTTPRequestHandler):
         degraded = alive < len(replicas) or shards_alive < len(backends)
         status = ("down" if not alive
                   else ("degraded" if degraded else "ok"))
+        # additive observability fields (the operator loop reads these to
+        # spot a stalled shard without scraping /metrics): uptime_ticks =
+        # scheduling rounds, events_seq = the shard's event high-water mark
         self._send_json(200 if alive else 503,
                         {"api_version": API_VERSION, "status": status,
                          "replicas_alive": alive,
                          "replicas_total": len(replicas),
                          "shards_alive": shards_alive,
                          "shards_total": len(backends),
+                         "uptime_ticks": max(
+                             (getattr(b.platform, "ticks", 0)
+                              for b in backends), default=0),
                          "shards": [{"shard_id": b.shard_id,
                                      "status": "ok" if b.alive else "down",
-                                     "cordoned": b.cordoned}
+                                     "cordoned": b.cordoned,
+                                     "uptime_ticks": getattr(
+                                         b.platform, "ticks", 0),
+                                     "events_seq": b.platform.events.seq}
                                     for b in backends]})
+
+    def _metrics(self):
+        """Prometheus text exposition — plain text, not the JSON envelope
+        (scrapers speak the exposition format, nothing else)."""
+        text = render_metrics(self.ctx.collect_metric_families())
+        self._drain_unread_body()
+        self._status_sent = 200
+        body = text.encode("utf-8")
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    # -- SSE streaming (the true-streaming transport) ---------------------
+    def _wants_sse(self, qs: dict) -> bool:
+        """``Accept: text/event-stream`` (the standard) or ``?stream=sse``
+        (curl-friendly) selects the streaming transport."""
+        raw = (qs.get("stream", [None])[0] or "").lower()
+        return raw in ("1", "true", "sse") \
+            or SSE_CONTENT_TYPE in (self.headers.get("Accept") or "")
+
+    def _start_sse(self):
+        """Commit to a chunked event stream. Everything that can fail with
+        a normal error envelope (auth, 404, rate limit, stream caps) must
+        have happened already — after this point errors go out mid-stream
+        as ``event: error`` frames."""
+        self._drain_unread_body()
+        self.send_response(200)
+        self.send_header("Content-Type", SSE_CONTENT_TYPE)
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Transfer-Encoding", "chunked")
+        self.send_header("Connection", "close")
+        self.close_connection = True
+        self.end_headers()
+        self._status_sent = 200
+        self._sse_started = True
+
+    def _sse_write(self, payload: bytes):
+        self.wfile.write(b"%X\r\n" % len(payload) + payload + b"\r\n")
+        self.wfile.flush()
+
+    def _sse_end(self):
+        self.wfile.write(b"0\r\n\r\n")
+        self.wfile.flush()
+
+    def _sse_fail(self, err: ApiError):
+        """A failure after the stream started: deliver the standard error
+        envelope as an ``event: error`` frame, then close. The client
+        transport re-raises it as the same ApiError."""
+        try:
+            version = getattr(self, "_envelope_version", API_VERSION)
+            self._sse_write(format_event(
+                json.dumps(error_to_wire(err, version)), event="error"))
+            self._sse_end()
+        except OSError:
+            pass  # client already gone
+
+    def _stream_admit(self, key: str):
+        """Stream admission, BEFORE the SSE response commits (failures
+        here are normal envelopes): the server-wide ``max_streams`` cap
+        bounds concurrent streams, and one rate-limit token is spent at
+        open — a stream then holds no in-flight slot for its lifetime,
+        unlike a parked long-poll."""
+        self.ctx.stream_begin()
+        try:
+            if self.ctx.ratelimiter is not None:
+                self.ctx.ratelimiter.admit_once(key)
+        except BaseException:
+            self.ctx.stream_end()
+            raise
+
+    def _sse_budget(self):
+        now = time.monotonic()
+        return now + self.ctx.max_stream_s, now + self.ctx.heartbeat_s
+
+    def _sse_idle(self, deadline: float, next_beat: float) -> tuple:
+        """One idle step: heartbeat if due; returns ``(wait_ms, next_beat,
+        expired)`` where ``wait_ms`` is the next inner long-poll budget
+        (≥1 so the gateway's follow-cursor contract stays engaged)."""
+        now = time.monotonic()
+        if now >= deadline:
+            return 0, next_beat, True
+        if now >= next_beat:
+            # count before the write: the client may act on the frame the
+            # instant it lands, and the counter must already reflect it
+            self.ctx.bump_heartbeat()
+            self._sse_write(format_comment("hb"))
+            next_beat = now + self.ctx.heartbeat_s
+        wait_s = min(next_beat - time.monotonic(), deadline - now)
+        return max(1, int(wait_s * 1000)), next_beat, False
+
+    def _stream_logs(self, api, key: str, job_id: str, qs: dict):
+        raw = qs.get("cursor", [None])[0] \
+            or self.headers.get("Last-Event-ID")
+        try:
+            cur_off = int(raw) if raw is not None else 0
+        except ValueError:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"malformed cursor: {raw!r}")
+        self._stream_admit(key)
+        try:
+            # first call BEFORE the stream commits: auth/404/shard-down
+            # still answer as ordinary error envelopes
+            page = api.logs(key, job_id, cursor=str(cur_off), wait_ms=1)
+            self._start_sse()
+            deadline, next_beat = self._sse_budget()
+            while True:
+                for line in page.items:
+                    cur_off += 1
+                    # id = the resume cursor AFTER this line: exact
+                    # pick-up on reconnect via Last-Event-ID
+                    self._sse_write(format_event(json.dumps(line),
+                                                 id=str(cur_off)))
+                if page.items:
+                    next_beat = time.monotonic() + self.ctx.heartbeat_s
+                if page.next_cursor is None:  # terminal AND fully consumed
+                    self._sse_write(format_event(
+                        json.dumps({"job_id": job_id, "cursor": cur_off}),
+                        event="end"))
+                    self._sse_end()
+                    return
+                wait_ms, next_beat, expired = self._sse_idle(deadline,
+                                                             next_beat)
+                if expired:  # stream budget spent: clean close, client
+                    self._sse_end()    # reconnects from its Last-Event-ID
+                    return
+                page = api.logs(key, job_id, cursor=str(cur_off),
+                                wait_ms=wait_ms)
+        except ApiError as e:
+            if not self._sse_started:
+                raise
+            self._sse_fail(e)
+        except OSError:
+            pass  # client disconnected mid-stream
+        finally:
+            self.ctx.stream_end()
+
+    def _stream_status(self, api, key: str, job_id: str, qs: dict):
+        last = qs.get("last_status", [None])[0] \
+            or self.headers.get("Last-Event-ID")
+        self._stream_admit(key)
+        try:
+            view = api.status(key, job_id, wait_ms=1, last_status=last)
+            self._start_sse()
+            deadline, next_beat = self._sse_budget()
+            while True:
+                if view.status != last:
+                    # id = the status itself: a reconnect resumes with
+                    # Last-Event-ID as last_status and only changes stream
+                    self._sse_write(format_event(
+                        json.dumps(dataclasses.asdict(view)),
+                        event="status", id=view.status))
+                    last = view.status
+                    next_beat = time.monotonic() + self.ctx.heartbeat_s
+                if view.status in _TERMINAL_WIRE:
+                    self._sse_write(format_event(
+                        json.dumps({"job_id": job_id,
+                                    "status": view.status}), event="end"))
+                    self._sse_end()
+                    return
+                wait_ms, next_beat, expired = self._sse_idle(deadline,
+                                                             next_beat)
+                if expired:
+                    self._sse_end()
+                    return
+                view = api.status(key, job_id, wait_ms=wait_ms,
+                                  last_status=last)
+        except ApiError as e:
+            if not self._sse_started:
+                raise
+            self._sse_fail(e)
+        except OSError:
+            pass
+        finally:
+            self.ctx.stream_end()
+
+    def _stream_events(self, api, key: str, qs: dict):
+        cursor = qs.get("cursor", [None])[0] \
+            or self.headers.get("Last-Event-ID")
+        kind = qs.get("kind", [None])[0]
+        self._stream_admit(key)
+        try:
+            out = api.events(key, cursor=cursor, kind=kind, wait_ms=1)
+            # Composite (multi-shard admin) streams carry a composite id
+            # per item — maintained incrementally so ANY item's id is an
+            # exact resume point; single-shard ids are the plain seq.
+            composite = "=" in out["next_cursor"]
+            shard_curs: dict = {}
+            if composite:
+                shard_curs, _ = parse_composite_cursor(
+                    cursor, self.ctx.platform.router, OFFSET_CURSOR_RE)
+            self._start_sse()
+            deadline, next_beat = self._sse_budget()
+            while True:
+                for item in out["items"]:
+                    if composite:
+                        shard_curs[item["shard"]] = str(item["seq"])
+                        eid = encode_composite_cursor(shard_curs, set())
+                    else:
+                        eid = str(item["seq"])
+                    self._sse_write(format_event(json.dumps(item), id=eid))
+                if out["items"]:
+                    next_beat = time.monotonic() + self.ctx.heartbeat_s
+                cursor = out["next_cursor"]
+                if composite:
+                    shard_curs, _ = parse_composite_cursor(
+                        cursor, self.ctx.platform.router, OFFSET_CURSOR_RE)
+                wait_ms, next_beat, expired = self._sse_idle(deadline,
+                                                             next_beat)
+                if expired:  # the event stream itself never ends
+                    self._sse_end()
+                    return
+                out = api.events(key, cursor=cursor, kind=kind,
+                                 wait_ms=wait_ms)
+        except ApiError as e:
+            if not self._sse_started:
+                raise
+            self._sse_fail(e)
+        except OSError:
+            pass
+        finally:
+            self.ctx.stream_end()
 
     def _admin_route(self, method: str, tail: list, key: str):
         """The v2 admin control plane: resource routes over the shared
@@ -507,13 +804,23 @@ class _Handler(BaseHTTPRequestHandler):
     def _handle(self, method: str):
         self._body_read = False
         self._envelope_version = API_VERSION
+        self._route_template = None
+        self._status_sent = None
+        self._sse_started = False
+        t0 = time.perf_counter()
         try:
             self._route(method)
         except ApiError as e:
-            self._send_error_envelope(e)
+            if not self._sse_started:  # mid-stream failures already went
+                self._send_error_envelope(e)  # out as `event: error`
         except Exception as e:  # noqa: BLE001 — never leak a traceback page
-            self._send_error_envelope(
-                ApiError(ErrorCode.UNAVAILABLE, f"internal error: {e}"))
+            if not self._sse_started:
+                self._send_error_envelope(
+                    ApiError(ErrorCode.UNAVAILABLE, f"internal error: {e}"))
+        finally:
+            self.ctx.record_request(
+                self._route_template or f"{method} <unrouted>",
+                self._status_sent or 0, time.perf_counter() - t0)
 
     def do_GET(self):
         self._handle("GET")
@@ -532,6 +839,18 @@ class _Handler(BaseHTTPRequestHandler):
         self._handle("PATCH")
 
 
+class _QuietDisconnectServer(ThreadingHTTPServer):
+    """An SSE follower hanging up mid-stream surfaces as a broken pipe
+    during connection teardown (after the handler already cleaned up) —
+    routine for streams, so don't let socketserver splat a traceback."""
+
+    def handle_error(self, request, client_address):
+        exc = sys.exc_info()[1]
+        if isinstance(exc, (ConnectionError, TimeoutError)):
+            return
+        super().handle_error(request, client_address)
+
+
 class ApiHttpServer:
     """Threaded stdlib HTTP server over a platform's (or a
     :class:`~repro.api.federation.Federation`'s) API tier.
@@ -547,7 +866,9 @@ class ApiHttpServer:
 
     def __init__(self, platform, host: str = "127.0.0.1", port: int = 0,
                  rate_limit: Optional[RateLimitConfig] = None,
-                 per_tenant: Optional[dict] = None):
+                 per_tenant: Optional[dict] = None,
+                 heartbeat_s: float = 10.0, max_stream_s: float = 3600.0,
+                 max_streams: int = 256):
         self.platform = platform
         self.lock = AllShardsLock(platform.router)
         self.ratelimiter = None
@@ -560,9 +881,143 @@ class ApiHttpServer:
         admin = getattr(platform, "admin", None)
         if admin is not None and self.ratelimiter is not None:
             admin.attach_ratelimiter(self.ratelimiter)
+        # observability: throttles become rate_limited platform events
+        if self.ratelimiter is not None:
+            self.ratelimiter.attach_observability(platform.router)
+        # -- SSE stream plane: cadence of `: hb` heartbeats on an idle
+        # stream, per-stream wall budget (a spent stream closes cleanly
+        # and the client resumes from its Last-Event-ID), and a server-
+        # wide concurrency cap (streams hold no rate-limiter in-flight
+        # slot, so they need their own bound).
+        self.heartbeat_s = heartbeat_s
+        self.max_stream_s = max_stream_s
+        self.max_streams = max_streams
+        self._metrics_lock = threading.Lock()
+        self.streams_opened = 0
+        self.streams_active = 0
+        self.heartbeats_sent = 0
+        # per-route request metrics, fed by every handled request
+        self.route_requests: dict = {}   # (template, status) -> count
+        self.route_latency: dict = {}    # template -> Histogram
         handler = type("BoundHandler", (_Handler,), {"ctx": self})
-        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd = _QuietDisconnectServer((host, port), handler)
         self._thread: Optional[threading.Thread] = None
+
+    # -- observability plumbing (handler callbacks) -----------------------
+    def record_request(self, template: str, status: int, seconds: float):
+        with self._metrics_lock:
+            k = (template, status)
+            self.route_requests[k] = self.route_requests.get(k, 0) + 1
+            h = self.route_latency.get(template)
+            if h is None:
+                h = self.route_latency[template] = Histogram()
+        h.observe(seconds)
+
+    def stream_begin(self):
+        with self._metrics_lock:
+            if self.streams_active >= self.max_streams:
+                raise ApiError(
+                    ErrorCode.RATE_LIMITED,
+                    f"server at max concurrent streams ({self.max_streams})",
+                    retry_after=1)
+            self.streams_active += 1
+            self.streams_opened += 1
+
+    def stream_end(self):
+        with self._metrics_lock:
+            self.streams_active -= 1
+
+    def bump_heartbeat(self):
+        with self._metrics_lock:
+            self.heartbeats_sent += 1
+
+    def collect_metric_families(self) -> list:
+        """Everything /metrics serves, scraped live. Platform values are
+        read WITHOUT shard locks: scrapes are monitoring reads and must
+        stay cheap under load — a torn gauge is tolerable, a scrape that
+        queues behind a migration cutover is not. Family names are pinned
+        in ``repro.obs.METRIC_NAMES``."""
+        backends = self.platform.router.backends
+        shard_up, chips, occ, qdepth = [], [], [], []
+        wal, ev_seq, ev_drop, uptime = [], [], [], []
+        snaps = []
+        for b in backends:
+            lbl = {"shard": b.shard_id}
+            p = b.platform
+            shard_up.append((lbl, 1 if b.alive else 0))
+            chips.append((lbl, p.cluster.total_chips))
+            occ.append((lbl, p.cluster.used_chips))
+            qdepth.append((lbl, len(getattr(p.scheduler, "queue", ()))))
+            wal.append((lbl, getattr(p.meta, "flushes", 0)))
+            ev_seq.append((lbl, p.events.seq))
+            ev_drop.append((lbl, p.events.dropped_total))
+            uptime.append((lbl, getattr(p, "ticks", 0)))
+            snaps.append(p.meter.snapshot())
+        usage = UsageMeter.merge(snaps)
+        migr = Counter()
+        admin = getattr(self.platform, "admin", None)
+        if admin is not None:
+            for m in admin.migrations.values():
+                migr[m.phase.value] += 1
+        if self.ratelimiter is not None:
+            limited = dict(self.ratelimiter.throttled_by_tenant)
+        else:
+            limited = {t: row["throttled_429s"] for t, row in usage.items()
+                       if row["throttled_429s"]}
+        with self._metrics_lock:
+            reqs = dict(self.route_requests)
+            lat = dict(self.route_latency)
+            streams = (self.streams_active, self.streams_opened,
+                       self.heartbeats_sent)
+        return [
+            ("ffdl_uptime_ticks", "gauge",
+             "Scheduling rounds completed per shard", uptime),
+            ("ffdl_shard_up", "gauge",
+             "1 if the shard backend is alive", shard_up),
+            ("ffdl_shard_chips_total", "gauge",
+             "Total accelerator chips per shard", chips),
+            ("ffdl_shard_occupancy_chips", "gauge",
+             "Chips currently reserved by placed gangs", occ),
+            ("ffdl_scheduler_queue_depth", "gauge",
+             "Gangs waiting for placement", qdepth),
+            ("ffdl_wal_flushes_total", "counter",
+             "Metastore WAL flushes (group commit)", wal),
+            ("ffdl_events_seq", "gauge",
+             "Event-bus high-water sequence number", ev_seq),
+            ("ffdl_events_dropped_total", "counter",
+             "Events dropped by retention", ev_drop),
+            ("ffdl_migrations", "gauge", "Migrations by phase",
+             [({"phase": ph}, n) for ph, n in sorted(migr.items())]),
+            ("ffdl_http_requests_total", "counter",
+             "HTTP requests by route and status",
+             [({"route": t, "status": str(s)}, n)
+              for (t, s), n in sorted(reqs.items())]),
+            ("ffdl_http_request_latency_seconds", "histogram",
+             "HTTP request latency by route",
+             [({"route": t}, h) for t, h in sorted(lat.items())]),
+            ("ffdl_http_streams_active", "gauge",
+             "SSE streams currently open", [(None, streams[0])]),
+            ("ffdl_http_streams_opened_total", "counter",
+             "SSE streams opened since start", [(None, streams[1])]),
+            ("ffdl_http_heartbeats_total", "counter",
+             "SSE heartbeat comments sent", [(None, streams[2])]),
+            ("ffdl_rate_limited_total", "counter",
+             "Requests answered 429 per tenant",
+             [({"tenant": t}, n) for t, n in sorted(limited.items())]),
+            ("ffdl_tenant_chip_seconds_total", "counter",
+             "Accrued chip-seconds per tenant",
+             [({"tenant": t}, row["chip_seconds"])
+              for t, row in sorted(usage.items())]),
+            ("ffdl_tenant_jobs_total", "counter",
+             "Jobs by tenant and outcome",
+             [({"tenant": t, "outcome": oc}, row[f"jobs_{oc}"])
+              for t, row in sorted(usage.items())
+              for oc in ("submitted", "completed", "failed")]),
+            ("ffdl_tenant_log_bytes_total", "counter",
+             "Log bytes indexed per tenant",
+             [({"tenant": t}, row["log_bytes"])
+              for t, row in sorted(usage.items())]),
+        ]
 
     @property
     def port(self) -> int:
@@ -598,6 +1053,34 @@ class ApiHttpServer:
 # Client transport
 # --------------------------------------------------------------------------
 
+def _error_from_payload(status: int, payload) -> ApiError:
+    """Decode a wire error envelope back into an ApiError (shared by the
+    request path and the SSE stream path)."""
+    try:
+        wire = json.loads(payload)["error"]
+        if not isinstance(wire, dict) or "code" not in wire:
+            wire = None
+    except (ValueError, KeyError, TypeError):
+        wire = None
+    if wire is None:
+        err = ApiError(ErrorCode.UNAVAILABLE,
+                       f"HTTP {status}: undecodable error body")
+    else:
+        try:
+            code = ErrorCode(wire["code"])
+            extra = {}
+        except ValueError:
+            # a newer server's code this client doesn't know: keep the raw
+            # string and fall back to a NON-retryable code (UNAVAILABLE
+            # would invite blind re-execution)
+            code = ErrorCode.FAILED_PRECONDITION
+            extra = {"wire_code": wire["code"]}
+        err = ApiError(code, wire.get("message", ""),
+                       **{**wire.get("details", {}), **extra})
+    err.details.setdefault("http_status", status)
+    return err
+
+
 class HttpTransport:
     """v1 verb surface over the wire — drop-in for the in-process
     ``LoadBalancer`` anywhere a transport is expected (``ApiClient``,
@@ -618,6 +1101,11 @@ class HttpTransport:
         self._port = split.port or 80
         self.timeout = timeout
         self._local = threading.local()
+        # transport telemetry (benchmarks/observability.py compares these:
+        # one SSE stream replaces a whole long-poll request train)
+        self._counters_lock = threading.Lock()
+        self.requests_sent = 0
+        self.streams_opened = 0
 
     # -- low-level --------------------------------------------------------
     def _drop_conn(self):
@@ -641,6 +1129,8 @@ class HttpTransport:
                  headers: Optional[dict] = None,
                  allow_error_status: bool = False,
                  timeout_floor: Optional[float] = None) -> tuple[int, dict]:
+        with self._counters_lock:
+            self.requests_sent += 1
         if query:
             qs = {k: v for k, v in query.items() if v is not None}
             if qs:
@@ -694,29 +1184,7 @@ class HttpTransport:
                     f"connection lost awaiting response: {e}") from None
 
         if status >= 400 and not allow_error_status:
-            try:
-                wire = json.loads(payload)["error"]
-                if not isinstance(wire, dict) or "code" not in wire:
-                    wire = None
-            except (ValueError, KeyError, TypeError):
-                wire = None
-            if wire is None:
-                err = ApiError(ErrorCode.UNAVAILABLE,
-                               f"HTTP {status}: undecodable error body")
-            else:
-                try:
-                    code = ErrorCode(wire["code"])
-                    extra = {}
-                except ValueError:
-                    # a newer server's code this client doesn't know: keep
-                    # the raw string and fall back to a NON-retryable code
-                    # (UNAVAILABLE would invite blind re-execution)
-                    code = ErrorCode.FAILED_PRECONDITION
-                    extra = {"wire_code": wire["code"]}
-                err = ApiError(code, wire.get("message", ""),
-                               **{**wire.get("details", {}), **extra})
-            err.details.setdefault("http_status", status)
-            raise err
+            raise _error_from_payload(status, payload)
         try:
             return status, json.loads(payload or b"{}")
         except ValueError as e:
@@ -790,6 +1258,86 @@ class HttpTransport:
 
     def cancel(self, api_key, job_id):
         self._request("DELETE", f"/v1/jobs/{job_id}", api_key)
+
+    # -- observability plane ----------------------------------------------
+    def usage(self, api_key, tenant=None) -> dict:
+        _, d = self._request("GET", "/v1/usage", api_key,
+                             query={"tenant": tenant})
+        return {"items": d["items"]}
+
+    def events(self, api_key, cursor=None, limit=None, kind=None,
+               wait_ms=None) -> dict:
+        floor = None if not wait_ms else wait_ms / 1000.0 + 5.0
+        _, d = self._request("GET", "/v2/events", api_key,
+                             query={"cursor": cursor, "limit": limit,
+                                    "kind": kind, "wait_ms": wait_ms},
+                             timeout_floor=floor)
+        return {"items": d["items"], "next_cursor": d["next_cursor"],
+                "missed": d.get("missed", 0)}
+
+    # -- SSE streams ------------------------------------------------------
+    def _stream(self, path: str, api_key: str,
+                query: Optional[dict] = None,
+                last_event_id: Optional[str] = None):
+        """One SSE connection, yielded as parsed :class:`SseMessage`
+        frames. Uses a dedicated (non-pooled) connection: the stream owns
+        its socket for its whole life. Server-side error statuses raise
+        the decoded ApiError; a route that answers with a non-SSE content
+        type raises FAILED_PRECONDITION with ``sse_unsupported`` so
+        callers can fall back to long-poll permanently."""
+        with self._counters_lock:
+            self.streams_opened += 1
+        if query:
+            qs = {k: v for k, v in query.items() if v is not None}
+            if qs:
+                path += "?" + urlparse.urlencode(qs)
+        hdrs = {"Authorization": f"Bearer {api_key}",
+                "Accept": SSE_CONTENT_TYPE}
+        if last_event_id is not None:
+            hdrs["Last-Event-ID"] = str(last_event_id)
+        # read timeout must comfortably exceed the server's heartbeat
+        # cadence — a silent stream is only dead if heartbeats stop too
+        conn = http.client.HTTPConnection(
+            self._host, self._port, timeout=max(self.timeout, 60.0))
+        try:
+            try:
+                conn.connect()
+                conn.sock.setsockopt(socket.IPPROTO_TCP,
+                                     socket.TCP_NODELAY, 1)
+                conn.request("GET", path, headers=hdrs)
+                resp = conn.getresponse()
+            except (http.client.HTTPException, OSError) as e:
+                raise ApiError(ErrorCode.UNAVAILABLE,
+                               f"cannot open stream: {e}") from None
+            if resp.status >= 400:
+                raise _error_from_payload(resp.status, resp.read())
+            ctype = resp.getheader("Content-Type") or ""
+            if SSE_CONTENT_TYPE not in ctype:
+                raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                               f"server answered {ctype!r}, not SSE",
+                               sse_unsupported=True)
+            try:
+                # http.client decodes chunked transfer transparently
+                yield from iter_sse(resp)
+            except (http.client.HTTPException, OSError) as e:
+                raise ApiError(ErrorCode.UNAVAILABLE,
+                               f"stream lost: {e}") from None
+        finally:
+            conn.close()
+
+    def stream_logs(self, api_key, job_id, cursor=None):
+        return self._stream(f"/v1/jobs/{job_id}/logs", api_key,
+                            query={"stream": "sse"}, last_event_id=cursor)
+
+    def stream_status(self, api_key, job_id, last_status=None):
+        return self._stream(f"/v1/jobs/{job_id}", api_key,
+                            query={"stream": "sse"},
+                            last_event_id=last_status)
+
+    def stream_events(self, api_key, cursor=None, kind=None):
+        return self._stream("/v2/events", api_key,
+                            query={"stream": "sse", "kind": kind},
+                            last_event_id=cursor)
 
     # -- v2 admin control plane -------------------------------------------
     # Same method names/signatures as the in-process AdminGateway, so

@@ -35,7 +35,7 @@ class LoadBalancer:
         if not replicas:
             raise ValueError("need at least one replica")
         self.replicas: list[ApiGateway] = list(replicas)
-        self.events = events
+        self.event_log = events  # the owning shard's bus (verb `events` differs)
         self._rr = 0
         # handler threads hit the balancer concurrently now that verbs
         # lock per shard instead of under one global HTTP lock — guard the
@@ -73,8 +73,8 @@ class LoadBalancer:
                     raise
                 last = e
                 self._bump("failovers")
-                if self.events is not None:
-                    self.events.emit("api", "lb_failover",
+                if self.event_log is not None:
+                    self.event_log.emit("api", "lb_failover",
                                      replica=replica.replica_id,
                                      method=method)
         self._bump("exhausted")
@@ -108,3 +108,10 @@ class LoadBalancer:
 
     def cancel(self, api_key, job_id):
         return self._call("cancel", api_key, job_id)
+
+    # -- observability plane ----------------------------------------------
+    def usage(self, api_key, **kwargs):
+        return self._call("usage", api_key, **kwargs)
+
+    def events(self, api_key, **kwargs):
+        return self._call("events", api_key, **kwargs)

@@ -114,6 +114,9 @@ class RateLimitedApi:
         self._stats_lock = threading.Lock()
         self.stats = {"admitted": 0, "throttled": 0, "shed_inflight": 0}
         self.throttled_by_tenant: Dict[str, int] = {}
+        # observability hookup (attach_observability): throttles become
+        # `rate_limited` platform events + per-tenant meter counts
+        self._router = None
 
     def set_tenant_config(self, tenant: str, config: Optional[RateLimitConfig]):
         """Live-update one tenant's budget (v2 admin PATCH). ``None``
@@ -148,10 +151,38 @@ class RateLimitedApi:
                 self.stats["throttled"] += 1
                 self.throttled_by_tenant[tenant] = \
                     self.throttled_by_tenant.get(tenant, 0) + 1
+            self._note_throttle(tenant)
             raise ApiError(ErrorCode.RATE_LIMITED,
                            f"tenant {tenant!r} exceeded its request rate",
                            tenant=tenant, retry_after=round(retry_after, 4))
         return tenant
+
+    def admit_once(self, api_key: str) -> str:
+        """Spend ONE token for a long-lived SSE stream at open time. A
+        stream then holds no in-flight slot and no further tokens — the
+        server's own ``max_streams`` cap bounds concurrency instead."""
+        return self._admit(api_key)
+
+    # -- observability ----------------------------------------------------
+    def attach_observability(self, router):
+        """Give the limiter a TenantRouter so 429s become ``rate_limited``
+        platform events on the throttled tenant's home shard (satellite:
+        throttling must be operator-visible). No wire behavior change —
+        the 429/Retry-After envelope is untouched."""
+        self._router = router
+
+    def _note_throttle(self, tenant: str):
+        # Emitted WITHOUT any shard lock (handler thread) — the bus takes
+        # its own mutex. Best-effort: anonymous floods have no home shard.
+        if self._router is None or tenant == _ANON:
+            return
+        try:
+            backend = self._router.shard_for(tenant)
+            if backend.alive:
+                backend.platform.events.emit("ratelimit", "rate_limited",
+                                             tenant=tenant)
+        except Exception:
+            pass
 
     def _enter(self):
         with self._inflight_lock:
@@ -222,3 +253,10 @@ class RateLimitedApi:
 
     def cancel(self, api_key, job_id):
         return self._call("cancel", api_key, job_id)
+
+    # -- observability plane, gated ---------------------------------------
+    def usage(self, api_key, **kwargs):
+        return self._call("usage", api_key, **kwargs)
+
+    def events(self, api_key, **kwargs):
+        return self._call("events", api_key, **kwargs)

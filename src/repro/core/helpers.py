@@ -70,6 +70,10 @@ class LogIndex:
         # rebuilt lazily when new tokens appeared since the last search
         self._vocab: Optional[list[str]] = None
         self._rvocab: Optional[list[str]] = None
+        # observability tap: called with each appended record (the usage
+        # meter bills log bytes here); suppressed during import_records so
+        # migrated lines are not billed twice.
+        self.on_append = None
 
     def append(self, rec: LogRecord):
         off_g = len(self.records)
@@ -88,6 +92,8 @@ class LogIndex:
             if jarr is None:
                 job_post[tok] = jarr = array("q")
             jarr.append(off_j)
+        if self.on_append is not None:
+            self.on_append(rec)
 
     # -- query planning ---------------------------------------------------
     @staticmethod
@@ -200,8 +206,12 @@ class LogIndex:
         so the inverted index stays consistent). Per-job offsets — the log
         cursors clients hold — are preserved because deltas arrive in
         order and start where the previous import stopped."""
-        for d in recs:
-            self.append(LogRecord(**d))
+        hook, self.on_append = self.on_append, None
+        try:  # migrated lines were billed on their source shard already
+            for d in recs:
+                self.append(LogRecord(**d))
+        finally:
+            self.on_append = hook
 
     def purge_jobs(self, job_ids) -> int:
         """Tombstone every record of ``job_ids`` (post-cutover source

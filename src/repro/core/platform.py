@@ -63,8 +63,10 @@ from repro.core.types import (
     JobStatus,
     SimClock,
     TERMINAL,
+    gang_chips,
 )
 from repro.data.objectstore import ObjectStore
+from repro.obs import DEFAULT_RETENTION, UsageMeter, install_meter
 
 
 class FfDLPlatform:
@@ -74,7 +76,8 @@ class FfDLPlatform:
                  tick_period: float = 1.0, seed: int = 0,
                  objstore_bandwidth: Optional[float] = None,
                  n_api_replicas: int = 3, shard_id: str = "shard-0",
-                 job_id_base: int = 0, shared_reads: bool = True):
+                 job_id_base: int = 0, shared_reads: bool = True,
+                 event_retention: int = DEFAULT_RETENTION):
         # -- shard construction hooks (repro.api.federation) --------------
         # shard_id names this platform as a backend shard; job_id_base
         # offsets the job counter so ids stay globally unique across a
@@ -84,7 +87,9 @@ class FfDLPlatform:
         self.job_id_base = job_id_base
         self.clock = clock or SimClock()
         self.tick_period = tick_period
-        self.events = EventLog(self.clock)
+        self.ticks = 0  # scheduling rounds since construction (uptime)
+        self.events = EventLog(self.clock, retention=event_retention,
+                               shard_id=shard_id)
         self.etcd = EtcdLike(self.clock, self.events)
         self.meta = MetaStore(self.clock)
         self.objstore = ObjectStore(clock=None,
@@ -105,6 +110,14 @@ class FfDLPlatform:
         self.chaos = ChaosMonkey(chaos or ChaosConfig(), self)
         self.metrics = MetricsService(self.clock)
         self.log_index = LogIndex()
+        # -- observability plane (repro.obs): the bus stamps events with
+        # their owning tenant (so /v2/events can scope visibility) and the
+        # meter accrues per-tenant usage — job outcomes + 429s via a bus
+        # tap, log bytes via the index append hook, chip-seconds in tick().
+        self.meter = UsageMeter()
+        self.events.tenant_resolver = self._tenant_of_job
+        install_meter(self.events, self.meter)
+        self.log_index.on_append = self._meter_log_bytes
         self.guardians: dict[str, object] = {}
         self.volumes: dict[str, JobVolume] = {}
         self._job_ctr = itertools.count(job_id_base + 1)
@@ -177,8 +190,42 @@ class FfDLPlatform:
         if g is not None:
             g._fail("user cancelled")
 
+    # ---------------------------------------------- observability helpers
+    def _tenant_of_job(self, job_id: str) -> Optional[str]:
+        """Bus tenant resolver: who owns this job? None while the
+        metastore is unreachable — the event stays unstamped (admin-only
+        visibility) rather than blocking the emitter."""
+        try:
+            rec = self.meta.get(job_id)
+        except Exception:
+            return None
+        return rec.manifest.tenant if rec is not None else None
+
+    def _meter_log_bytes(self, rec):
+        tenant = self._tenant_of_job(rec.job_id)
+        if tenant is not None:
+            self.meter.bump(tenant, "log_bytes", len(rec.line))
+
+    # chip-holding statuses: the gang's chips are reserved on hosts
+    _BILLABLE = frozenset({JobStatus.DEPLOYING, JobStatus.DOWNLOADING,
+                           JobStatus.PROCESSING, JobStatus.STORING})
+
+    def _accrue_chip_seconds(self):
+        """One tick of per-tenant chip-second accrual — the federation
+        aggregates usage at exactly this cadence (FfDL §4 billing)."""
+        for job_id in list(self.guardians):
+            try:
+                rec = self.meta.get(job_id)
+            except Exception:
+                break  # metastore down this round: bill nothing, not junk
+            if rec is None or rec.status not in self._BILLABLE:
+                continue
+            self.meter.bump(rec.manifest.tenant, "chip_seconds",
+                            gang_chips(rec.manifest) * self.tick_period)
+
     # ------------------------------------------------------------- engine
     def tick(self):
+        self.ticks += 1
         self.clock.advance(self.tick_period)
         self.clock.run_until(self.clock.now())
         # Group-commit scope: every metastore status flip this round rides
@@ -194,6 +241,7 @@ class FfDLPlatform:
             self.admission.tick()
             self.scheduler.tick()
         self.metrics.sample_utilization(self.cluster.utilization())
+        self._accrue_chip_seconds()
         # GC finished guardians
         for job_id, g in list(self.guardians.items()):
             if g.stage == "GC_DONE":

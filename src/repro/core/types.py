@@ -63,30 +63,16 @@ class WallClock:
 
 
 # --------------------------------------------------------------------------
-# Structured event log (drives the §5.6 failure-analysis benchmark)
+# Structured event log (drives the §5.6 failure-analysis benchmark).
+# Promoted into the observability plane's per-shard event bus: sequence
+# numbers, bounded retention, tenant stamping, wire visibility via
+# GET /v2/events. `EventLog` stays as the historical name — same emit /
+# of_kind / count surface, now backed by repro.obs.bus.EventBus.
 # --------------------------------------------------------------------------
 
-@dataclass
-class Event:
-    ts: float
-    component: str
-    kind: str
-    fields: dict
+from repro.obs.bus import Event, EventBus  # noqa: E402  (re-export)
 
-
-class EventLog:
-    def __init__(self, clock):
-        self.clock = clock
-        self.events: list[Event] = []
-
-    def emit(self, component: str, kind: str, **fields):
-        self.events.append(Event(self.clock.now(), component, kind, fields))
-
-    def of_kind(self, kind: str) -> list[Event]:
-        return [e for e in self.events if e.kind == kind]
-
-    def count(self, kind: str) -> int:
-        return sum(1 for e in self.events if e.kind == kind)
+EventLog = EventBus
 
 
 # --------------------------------------------------------------------------

@@ -6,7 +6,7 @@ code→HTTP-status table must match `repro.api.http`.
 import pathlib
 import re
 
-from repro.api import ADMIN_ROUTES, ErrorCode, ROUTES, STATUS_OF
+from repro.api import ADMIN_ROUTES, ErrorCode, OBS_ROUTES, ROUTES, STATUS_OF
 
 DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
 ARCH = DOCS.parent / "architecture.md"
@@ -47,7 +47,7 @@ def test_no_phantom_routes_documented():
     doc = _api_md()
     advertised = set(re.findall(
         r"`(GET|POST|PUT|PATCH|DELETE) (/v[12]/[^` ]*)`", doc))
-    known = set(ROUTES) | set(ADMIN_ROUTES)
+    known = set(ROUTES) | set(ADMIN_ROUTES) | set(OBS_ROUTES)
     assert advertised <= known, advertised - known
 
 
@@ -131,6 +131,55 @@ def test_hot_paths_documented_and_real():
     assert {"wait_ms", "last_status"} <= set(sig.parameters)
     api = _api_md()
     assert "last_status" in api and "watch" in api
+
+
+def test_observability_contract_documented_and_real():
+    """docs/api.md's observability sections (satellite) must name only
+    machinery that exists: every OBS route, every pinned /metrics family,
+    the SSE dialect, and the additive health fields."""
+    from repro.api import ApiGateway, ApiClient, HttpTransport
+    from repro.obs import METRIC_NAMES, EventBus, UsageMeter
+    doc = _api_md()
+    for method, path in OBS_ROUTES:
+        assert re.search(rf"`{method} {re.escape(path)}`", doc), \
+            f"route {method} {path} missing from docs/api.md"
+    for name in METRIC_NAMES:
+        assert name in doc, f"metric family {name} missing from docs/api.md"
+    # the SSE dialect is part of the wire contract
+    for term in ("text/event-stream", "Last-Event-ID", "heartbeat",
+                 "`event: end`", "`event: error`"):
+        assert term in doc, f"{term!r} missing from docs/api.md"
+    # additive /v1/health fields
+    for term in ("uptime_ticks", "events_seq"):
+        assert term in doc, f"{term!r} missing from docs/api.md"
+    # ... and the named surfaces actually exist
+    for name in ("usage", "events"):
+        assert hasattr(ApiGateway, name)
+    for name in ("usage", "events", "stream_logs", "stream_status",
+                 "stream_events"):
+        assert hasattr(HttpTransport, name)
+    for name in ("usage", "events", "follow_events", "follow_logs",
+                 "watch_status"):
+        assert hasattr(ApiClient, name)
+    for name in ("emit", "read_since", "since", "count", "of_kind"):
+        assert hasattr(EventBus, name)
+    for name in ("bump", "get", "snapshot", "merge"):
+        assert hasattr(UsageMeter, name)
+
+
+def test_observability_plane_in_architecture_md():
+    """docs/architecture.md must carry the Observability plane section
+    and name every platform event kind the bus can emit."""
+    from repro.obs import PLATFORM_EVENT_KINDS
+    arch = ARCH.read_text()
+    assert "## Observability plane" in arch
+    for kind in PLATFORM_EVENT_KINDS:
+        assert kind in arch, f"event kind {kind!r} missing"
+    for term in ("EventBus", "UsageMeter", "chip_seconds", "/metrics",
+                 "dropped_total", "obs/bus.py", "obs/meter.py",
+                 "obs/metrics.py", "obs/sse.py",
+                 "BENCH_observability.json"):
+        assert term in arch, f"{term!r} missing from Observability section"
 
 
 def test_architecture_doc_maps_api_modules():

@@ -1,0 +1,393 @@
+"""The observability plane: the per-shard EventBus (retention ring,
+monotonic seqs, exactly-once cursor reads), the per-tenant UsageMeter,
+the Prometheus text exposition, and the /v1/usage + /v2/events wire
+surfaces (tenant-scoped visibility, composite cursors, kind filters)."""
+
+import random
+
+import pytest
+
+from repro.api import ApiError, ErrorCode, Federation, SubmitRequest
+from repro.api.ratelimit import RateLimitConfig, RateLimitedApi
+from repro.core import FfDLPlatform, JobManifest
+from repro.core.types import SimClock
+from repro.obs import (
+    EventBus,
+    Histogram,
+    METRIC_NAMES,
+    PLATFORM_EVENT_KINDS,
+    UsageMeter,
+    install_meter,
+    render_metrics,
+)
+
+
+def _bus(retention=8):
+    return EventBus(SimClock(), retention=retention, shard_id="shard-t")
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+def run_job(p, key, **kw):
+    resp = p.api.submit(key, SubmitRequest(manifest=sim_job(**kw)))
+    for _ in range(300):
+        p.tick()
+        if p.api.status(key, resp.job_id).status in ("COMPLETED", "FAILED"):
+            break
+    return resp.job_id
+
+
+# -------------------------------------------------------------------------
+# EventBus: ring, seqs, drops (satellite 1)
+# -------------------------------------------------------------------------
+
+def test_seqs_monotonic_from_one():
+    bus = _bus()
+    seqs = [bus.emit("t", "job_submitted", n=i).seq for i in range(5)]
+    assert seqs == [1, 2, 3, 4, 5]
+    assert bus.seq == 5 and bus.first_seq == 1 and bus.dropped_total == 0
+
+
+def test_retention_drops_are_explicit_and_bounded():
+    bus = _bus(retention=8)
+    for i in range(40):
+        bus.emit("t", "job_submitted", n=i)
+    # at least `retention` retained, every drop counted, seqs contiguous
+    assert len(bus.events) >= 8
+    assert bus.dropped_total == 40 - len(bus.events)
+    assert bus.first_seq == bus.dropped_total + 1
+    assert [e.seq for e in bus.events] == \
+        list(range(bus.first_seq, 41))
+    # of_kind sees the window, count() is exact for all time
+    assert len(bus.of_kind("job_submitted")) == len(bus.events)
+    assert bus.count("job_submitted") == 40
+
+
+def test_count_survives_compaction_per_kind():
+    bus = _bus(retention=4)
+    for i in range(30):
+        bus.emit("t", "job_submitted" if i % 3 else "job_failed", n=i)
+    assert bus.count("job_failed") == 10
+    assert bus.count("job_submitted") == 20
+    assert bus.count("never_emitted") == 0
+
+
+def test_read_since_reports_missed_then_zero():
+    bus = _bus(retention=8)
+    for i in range(40):
+        bus.emit("t", "job_submitted", n=i)
+    evs, cur, missed = bus.read_since(0, limit=10)
+    assert missed == bus.dropped_total  # everything aged out before us
+    assert evs[0].seq == bus.first_seq
+    evs2, cur2, missed2 = bus.read_since(cur, limit=100)
+    assert missed2 == 0
+    assert {e.seq for e in evs} | {e.seq for e in evs2} == \
+        set(range(bus.first_seq, 41))
+
+
+def test_read_since_filters_consume_the_scan():
+    """Filtered-out events advance the cursor: a kind filter must not
+    make the same region re-scanned forever."""
+    bus = _bus(retention=100)
+    for i in range(10):
+        bus.emit("t", "job_submitted" if i % 2 else "pod_evicted", n=i)
+    evs, cur, _ = bus.read_since(0, limit=100, kind="job_submitted")
+    assert len(evs) == 5
+    assert cur == 10  # scanned to the end, not just to the last match
+    evs2, cur2, _ = bus.read_since(cur, limit=100, kind="job_submitted")
+    assert evs2 == [] and cur2 == 10
+
+
+def test_subscriber_exceptions_do_not_break_emit():
+    bus = _bus()
+    bus.subscribe(lambda e: 1 / 0)
+    seen = []
+    bus.subscribe(seen.append)
+    bus.emit("t", "job_submitted")
+    assert len(seen) == 1
+
+
+def test_tenant_resolver_stamps_job_events():
+    bus = _bus()
+    bus.tenant_resolver = {"job-1": "team-a"}.get
+    assert bus.emit("g", "job_completed", job="job-1").tenant == "team-a"
+    assert bus.emit("g", "job_completed", job="job-9").tenant is None
+    # explicit tenant= always wins
+    assert bus.emit("g", "rate_limited", tenant="team-b").tenant == "team-b"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_exactly_once_under_random_interleavings(seed):
+    """The acceptance property: however emits, drops and paged reads
+    interleave, a cursor chain serves every seq AT MOST once, and every
+    emitted seq is accounted for — served or explicitly missed."""
+    rng = random.Random(seed)
+    bus = _bus(retention=rng.choice([4, 16, 64]))
+    served, cursor, emitted, missed_total = set(), 0, 0, 0
+
+    def read(limit):
+        nonlocal cursor, missed_total
+        kind = rng.choice([None, "a", "b"])
+        evs, cursor, missed = bus.read_since(cursor, limit, kind=kind)
+        for e in evs:
+            assert e.seq not in served, "seq served twice"
+            served.add(e.seq)
+        missed_total += missed
+
+    for _ in range(200):
+        if rng.random() < 0.6:
+            for _ in range(rng.randint(1, 12)):
+                emitted += 1
+                bus.emit("t", rng.choice(["a", "b"]), n=emitted)
+        else:
+            read(rng.randint(1, 8))
+    for _ in range(1000):  # drain (kind filters may stall the tail)
+        before = cursor
+        read(1000)
+        if cursor == before and cursor == bus.seq:
+            break
+    # the unfiltered identity: scanned + missed covers every emit exactly
+    assert cursor == emitted
+    assert missed_total <= bus.dropped_total
+    assert served <= set(range(1, emitted + 1))
+
+
+# -------------------------------------------------------------------------
+# UsageMeter
+# -------------------------------------------------------------------------
+
+def test_meter_bump_get_and_unknown_field():
+    m = UsageMeter()
+    m.bump("team-a", "jobs_submitted")
+    m.bump("team-a", "chip_seconds", 2.5)
+    row = m.get("team-a")
+    assert row["jobs_submitted"] == 1 and row["chip_seconds"] == 2.5
+    assert m.get("ghost")["jobs_submitted"] == 0
+    with pytest.raises(ValueError):
+        m.bump("team-a", "not_a_field")
+
+
+def test_meter_merge_across_shards():
+    a, b = UsageMeter(), UsageMeter()
+    a.bump("t1", "jobs_completed")
+    b.bump("t1", "jobs_completed")
+    b.bump("t2", "log_bytes", 10)
+    merged = UsageMeter.merge([a.snapshot(), b.snapshot()])
+    assert merged["t1"]["jobs_completed"] == 2
+    assert merged["t2"]["log_bytes"] == 10
+    only = UsageMeter.merge([a.snapshot(), b.snapshot()], tenant="t2")
+    assert set(only) == {"t2"}
+
+
+def test_install_meter_taps_tenant_stamped_events_only():
+    bus, meter = _bus(), UsageMeter()
+    install_meter(bus, meter)
+    bus.emit("g", "job_submitted", tenant="team-a")
+    bus.emit("g", "job_failed", tenant="team-a")
+    bus.emit("g", "rate_limited", tenant="team-a")
+    bus.emit("g", "job_submitted")  # unstamped: no tenant to bill
+    row = meter.get("team-a")
+    assert row["jobs_submitted"] == 1
+    assert row["jobs_failed"] == 1
+    assert row["throttled_429s"] == 1
+    assert meter.snapshot().keys() == {"team-a"}
+
+
+# -------------------------------------------------------------------------
+# Prometheus text exposition
+# -------------------------------------------------------------------------
+
+def test_render_metrics_text_format():
+    h = Histogram(buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    text = render_metrics([
+        ("up", "gauge", "is it up", [(None, 1)]),
+        ("reqs_total", "counter", "requests",
+         [({"route": 'GET "/x"', "code": "200"}, 3)]),
+        ("lat_seconds", "histogram", "latency", [(None, h)]),
+    ])
+    assert '# TYPE up gauge' in text
+    assert "up 1" in text.splitlines()
+    # label values escape backslash/quote/newline per the text format
+    assert 'reqs_total{route="GET \\"/x\\"",code="200"} 3' in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+    assert "lat_seconds_count 2" in text
+    assert text.endswith("\n")
+
+
+def test_metric_names_pinned_vocabulary():
+    assert len(METRIC_NAMES) == len(set(METRIC_NAMES))
+    assert all(n.startswith("ffdl_") for n in METRIC_NAMES)
+
+
+# -------------------------------------------------------------------------
+# Platform wiring: metering accrual + /v1/usage + /v2/events verbs
+# -------------------------------------------------------------------------
+
+@pytest.fixture
+def platform():
+    return FfDLPlatform(n_hosts=4, chips_per_host=4)
+
+
+def test_platform_accrues_chip_seconds_and_job_counts(platform):
+    p = platform
+    key = p.auth.issue_key("team-a")
+    run_job(p, key, name="meter1", chips_per_learner=2)
+    row = p.meter.get("team-a")
+    assert row["jobs_submitted"] == 1
+    assert row["jobs_completed"] == 1
+    # 2 chips held for >= sim_duration of billable states
+    assert row["chip_seconds"] >= 2 * 60
+    assert row["log_bytes"] > 0
+
+
+def test_usage_wire_scoping(platform):
+    p = platform
+    key_a = p.auth.issue_key("team-a")
+    key_b = p.auth.issue_key("team-b")
+    admin = p.auth.issue_admin_key()
+    run_job(p, key_a, name="ua")
+    # a tenant reads its own row, never a sibling's
+    rows = p.api.usage(key_a)["items"]
+    assert [r["tenant"] for r in rows] == ["team-a"]
+    with pytest.raises(ApiError) as ei:
+        p.api.usage(key_b, tenant="team-a")
+    assert ei.value.code is ErrorCode.FORBIDDEN
+    # an admin reads everyone; a never-seen tenant gets an all-zero row
+    assert any(r["tenant"] == "team-a" for r in p.api.usage(admin)["items"])
+    ghost = p.api.usage(admin, tenant="ghost")["items"]
+    assert ghost[0]["jobs_submitted"] == 0
+
+
+def test_events_wire_tenant_isolation(platform):
+    p = platform
+    key_a = p.auth.issue_key("team-a")
+    key_b = p.auth.issue_key("team-b")
+    admin = p.auth.issue_admin_key()
+    run_job(p, key_a, name="ea", tenant="team-a")
+    run_job(p, key_b, name="eb", tenant="team-b")
+    seen_a = p.api.events(key_a, limit=500)["items"]
+    assert seen_a and all(e["tenant"] == "team-a" for e in seen_a)
+    # admin sees both tenants AND platform-internal (unstamped) events
+    all_ev = p.api.events(admin, limit=1000)["items"]
+    tenants = {e["tenant"] for e in all_ev}
+    assert {"team-a", "team-b"} <= tenants
+    kinds = {e["kind"] for e in all_ev}
+    assert "job_submitted" in kinds and kinds & set(PLATFORM_EVENT_KINDS)
+
+
+def test_events_wire_cursor_chain_exactly_once(platform):
+    p = platform
+    admin = p.auth.issue_admin_key()
+    key = p.auth.issue_key("team-a")
+    run_job(p, key, name="chain")
+    served, cursor = set(), None
+    while True:
+        out = p.api.events(admin, cursor=cursor, limit=7)
+        if not out["items"]:
+            break
+        for e in out["items"]:
+            assert e["seq"] not in served
+            served.add(e["seq"])
+        cursor = out["next_cursor"]
+    assert len(served) == p.events.seq - p.events.dropped_total
+
+
+def test_events_wire_kind_filter_and_bad_inputs(platform):
+    p = platform
+    admin = p.auth.issue_admin_key()
+    key = p.auth.issue_key("team-a")
+    run_job(p, key, name="kf")
+    out = p.api.events(admin, kind="job_completed", limit=100)
+    assert out["items"] and all(
+        e["kind"] == "job_completed" for e in out["items"])
+    for bad in ({"cursor": "nope"}, {"limit": 0}, {"limit": -3}):
+        with pytest.raises(ApiError) as ei:
+            p.api.events(admin, **bad)
+        assert ei.value.code is ErrorCode.INVALID_ARGUMENT
+
+
+# -------------------------------------------------------------------------
+# Rate limiter 429s -> meter + platform event (satellite 2)
+# -------------------------------------------------------------------------
+
+def test_throttle_meters_tenant_and_emits_event(platform):
+    p = platform
+    key = p.auth.issue_key("team-a")
+    rl = RateLimitedApi(p.api, p.auth, RateLimitConfig(rate=1, burst=1))
+    rl.attach_observability(p.router)
+    rl.list_jobs(key)  # spends the single burst token
+    with pytest.raises(ApiError) as ei:
+        rl.list_jobs(key)
+    assert ei.value.code is ErrorCode.RATE_LIMITED
+    assert p.events.count("rate_limited") == 1
+    ev = p.events.of_kind("rate_limited")[0]
+    assert ev.tenant == "team-a"
+    # the bus tap billed the 429 to the tenant's meter row
+    assert p.meter.get("team-a")["throttled_429s"] == 1
+
+
+# -------------------------------------------------------------------------
+# Federation: composite cursors, exactly-once across a shard kill
+# -------------------------------------------------------------------------
+
+def test_federated_admin_events_composite_exactly_once():
+    fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4,
+                     pins={"team-a": "shard-0", "team-b": "shard-1"})
+    admin = fed.auth.issue_admin_key()
+    for shard, tenant in ((0, "team-a"), (1, "team-b")):
+        fed.shards[shard].events.emit(
+            "t", "job_submitted", tenant=tenant, n=1)
+    fed.run_for(10)
+    served, cursor = set(), None
+    while True:
+        out = fed.api.events(admin, cursor=cursor, limit=5)
+        if not out["items"]:
+            break
+        for e in out["items"]:
+            k = (e["shard"], e["seq"])
+            assert k not in served, "composite cursor replayed an event"
+            served.add(k)
+        cursor = out["next_cursor"]
+        assert "=" in cursor  # composite across the federation
+    total = sum(s.events.seq - s.events.dropped_total for s in fed.shards)
+    assert len(served) == total
+    shards_seen = {s for s, _ in served}
+    assert shards_seen == {"shard-0", "shard-1"}
+
+
+def test_federated_events_shard_kill_no_partial_pages():
+    """A page that cannot cover a dead shard fails loudly (UNAVAILABLE)
+    rather than silently skipping it; after restart the same cursor
+    resumes with no duplicates and no gaps."""
+    fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4)
+    admin = fed.auth.issue_admin_key()
+    for p in fed.shards:
+        for i in range(6):
+            p.events.emit("t", "job_submitted", n=i)
+    out = fed.api.events(admin, limit=4)
+    served = {(e["shard"], e["seq"]) for e in out["items"]}
+    cursor = out["next_cursor"]
+    fed.shard_crash(1)
+    with pytest.raises(ApiError) as ei:
+        fed.api.events(admin, cursor=cursor, limit=4)
+    assert ei.value.code is ErrorCode.UNAVAILABLE
+    fed.shard_restart(1)
+    while True:
+        out = fed.api.events(admin, cursor=cursor, limit=4)
+        if not out["items"]:
+            break
+        for e in out["items"]:
+            k = (e["shard"], e["seq"])
+            assert k not in served
+            served.add(k)
+        cursor = out["next_cursor"]
+    total = sum(s.events.seq - s.events.dropped_total for s in fed.shards)
+    assert len(served) == total

@@ -1,0 +1,336 @@
+"""The SSE streaming plane: one chunked connection per follower with
+heartbeats, exact Last-Event-ID resume, terminal close, the server-side
+stream cap, and the framing edge cases (disconnect releases the slot,
+budget expiry closes cleanly). Satellite 3 of the observability plane."""
+
+import io
+import json
+import threading
+import time
+
+import pytest
+
+from repro.api import (
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    HttpTransport,
+)
+from repro.core import FfDLPlatform, JobManifest
+from repro.obs import SseMessage, format_comment, format_event, iter_sse
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+@pytest.fixture
+def served():
+    """(platform, server, transport, key) with a fast heartbeat so stream
+    tests run in wall-milliseconds, not tens of seconds."""
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    server = ApiHttpServer(p, heartbeat_s=0.05)
+    with server:
+        yield p, server, HttpTransport(server.base_url), \
+            p.auth.issue_key("team-a")
+
+
+class _Driver:
+    """Background tick thread (holds the all-shards lock per tick)."""
+
+    def __init__(self, server, platform):
+        self.server, self.platform = server, platform
+        self.stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self.stop.is_set():
+            with self.server.lock:
+                self.platform.tick()
+            time.sleep(0.002)
+
+    def __enter__(self):
+        self.thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop.set()
+        self.thread.join()
+
+
+def _wait_for(cond, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+# -------------------------------------------------------------------------
+# framing: format + parse round trip
+# -------------------------------------------------------------------------
+
+def test_sse_format_parse_round_trip():
+    raw = (format_event(json.dumps({"a": 1}), event="status", id="5")
+           + format_comment("hb")
+           + format_event("line one\nline two", id="7")
+           + format_event("done", event="end"))
+    frames = list(iter_sse(io.BytesIO(raw)))
+    assert frames[0] == SseMessage(data='{"a": 1}', event="status", id="5")
+    assert frames[1].comment == "hb"
+    # multi-line data survives the data: split/join
+    assert frames[2].data == "line one\nline two" and frames[2].id == "7"
+    assert frames[3] == SseMessage(data="done", event="end")
+
+
+def test_sse_default_event_omitted_on_wire():
+    raw = format_event("x")
+    assert b"event:" not in raw  # "message" is the SSE default
+    assert raw.endswith(b"\n\n")
+
+
+# -------------------------------------------------------------------------
+# logs --follow: one connection, end frame, exact resume
+# -------------------------------------------------------------------------
+
+def test_stream_logs_single_connection_terminal_close(served):
+    p, server, t, key = served
+    job = ApiClient(t, key).submit(sim_job("sse1"))
+    lines, end = [], None
+    with _Driver(server, p):
+        for fr in t.stream_logs(key, job):
+            if fr.comment is not None:
+                continue
+            if fr.event == "end":
+                end = json.loads(fr.data)
+                break
+            lines.append(json.loads(fr.data))
+    # the whole follow rode ONE stream and closed itself at terminal
+    assert server.streams_opened == 1
+    assert t.streams_opened == 1
+    assert end == {"job_id": job, "cursor": len(lines)}
+    assert lines == t.logs(key, job).items
+    assert _wait_for(lambda: server.streams_active == 0)
+
+
+def test_stream_logs_resume_from_last_event_id_is_exact(served):
+    p, server, t, key = served
+    job = ApiClient(t, key).submit(sim_job("sse2"))
+    with _Driver(server, p):
+        first, last_id = [], None
+        for fr in t.stream_logs(key, job):
+            if fr.comment is not None or fr.event != "message":
+                continue
+            first.append(json.loads(fr.data))
+            last_id = fr.id
+            if len(first) == 2:
+                break  # simulate a dropped stream mid-job
+        rest = []
+        for fr in t.stream_logs(key, job, cursor=last_id):
+            if fr.comment is not None:
+                continue
+            if fr.event == "end":
+                break
+            rest.append(json.loads(fr.data))
+    # no replay, no gap: the two halves are the full log
+    assert first + rest == t.logs(key, job).items
+
+
+def test_stream_pre_start_errors_are_plain_envelopes(served):
+    p, server, t, key = served
+    with pytest.raises(ApiError) as ei:
+        next(iter(t.stream_logs(key, "job-99999")))
+    assert ei.value.code is ErrorCode.NOT_FOUND
+    with pytest.raises(ApiError) as ei:
+        next(iter(t.stream_logs("bad-key", "job-1")))
+    assert ei.value.code is ErrorCode.UNAUTHENTICATED
+    assert server.streams_active == 0
+
+
+# -------------------------------------------------------------------------
+# status --watch over SSE
+# -------------------------------------------------------------------------
+
+def test_stream_status_emits_changes_then_end(served):
+    p, server, t, key = served
+    job = ApiClient(t, key).submit(sim_job("sse3"))
+    statuses, end = [], None
+    with _Driver(server, p):
+        for fr in t.stream_status(key, job):
+            if fr.comment is not None:
+                continue
+            if fr.event == "end":
+                end = json.loads(fr.data)
+                break
+            assert fr.event == "status"
+            view = json.loads(fr.data)
+            assert fr.id == view["status"]
+            statuses.append(view["status"])
+    assert len(statuses) == len(set(statuses))  # each change once
+    assert statuses[-1] == "COMPLETED"
+    assert end["status"] == "COMPLETED"
+    assert server.streams_opened == 1
+
+
+# -------------------------------------------------------------------------
+# heartbeats, disconnect, budget, cap
+# -------------------------------------------------------------------------
+
+def test_idle_stream_heartbeats_at_cadence(served):
+    p, server, t, key = served
+    admin = p.auth.issue_admin_key()
+    beats = 0
+    start = time.monotonic()
+    for fr in t.stream_events(admin):  # idle bus: nothing but heartbeats
+        if fr.comment is not None:
+            beats += 1
+            if beats == 3:
+                break
+    took = time.monotonic() - start
+    assert took < 3.0, "3 heartbeats at 50ms cadence took too long"
+    assert server.heartbeats_sent >= 3
+
+
+def test_client_disconnect_releases_stream_slot(served):
+    p, server, t, key = served
+    admin = p.auth.issue_admin_key()
+    gen = t.stream_events(admin)
+    next(gen)  # stream established (first heartbeat)
+    assert server.streams_active == 1
+    gen.close()  # client walks away mid-stream
+    # the next heartbeat write hits the dead socket and releases the slot
+    assert _wait_for(lambda: server.streams_active == 0)
+    assert server.streams_opened == 1
+
+
+def test_stream_budget_expiry_closes_cleanly():
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    server = ApiHttpServer(p, heartbeat_s=0.03, max_stream_s=0.15)
+    with server:
+        t = HttpTransport(server.base_url)
+        admin = p.auth.issue_admin_key()
+        frames = list(t.stream_events(admin))  # ends when budget expires
+        assert all(fr.comment is not None for fr in frames)
+        assert _wait_for(lambda: server.streams_active == 0)
+
+
+def test_max_streams_cap_answers_rate_limited(served):
+    p, server, t, key = served
+    server.max_streams = 1
+    admin = p.auth.issue_admin_key()
+    gen = t.stream_events(admin)
+    next(gen)  # occupies the only slot
+    with pytest.raises(ApiError) as ei:
+        next(iter(t.stream_events(admin)))
+    assert ei.value.code is ErrorCode.RATE_LIMITED
+    assert ei.value.retry_after is not None
+    gen.close()
+    assert _wait_for(lambda: server.streams_active == 0)
+    # slot released: a new stream opens fine
+    gen2 = t.stream_events(admin)
+    assert next(gen2) is not None
+    gen2.close()
+
+
+# -------------------------------------------------------------------------
+# ApiClient: SSE preferred, long-poll fallback
+# -------------------------------------------------------------------------
+
+def test_client_follow_logs_rides_sse(served):
+    p, server, t, key = served
+    client = ApiClient(t, key)
+    job = client.submit(sim_job("sse4"))
+    with _Driver(server, p):
+        lines = list(client.follow_logs(job))
+    assert lines == t.logs(key, job).items
+    assert server.streams_opened == 1
+    assert t.requests_sent < 5  # submit + logs checks, not a poll train
+
+
+def test_client_watch_status_rides_sse_until_terminal(served):
+    p, server, t, key = served
+    client = ApiClient(t, key)
+    job = client.submit(sim_job("sse5"))
+    with _Driver(server, p):
+        views = list(client.watch_status(job))
+    assert views[-1].status == "COMPLETED"
+    assert server.streams_opened == 1
+
+
+def test_client_follow_events_streams_and_resumes(served):
+    p, server, t, key = served
+    admin = p.auth.issue_admin_key()
+    client = ApiClient(t, admin)
+    job = ApiClient(t, key).submit(sim_job("sse6"))
+    got = []
+    with _Driver(server, p):
+        for e in client.follow_events():
+            got.append(e)
+            if e["kind"] == "job_completed":
+                break
+    seqs = [e["seq"] for e in got]
+    assert seqs == sorted(set(seqs)), "follow_events replayed a seq"
+    assert any(e["fields"].get("job") == job for e in got)
+
+
+def test_client_prefers_long_poll_when_asked(served):
+    p, server, t, key = served
+    client = ApiClient(t, key, prefer_sse=False)
+    job = client.submit(sim_job("sse7"))
+    with _Driver(server, p):
+        lines = list(client.follow_logs(job, wait_ms=500))
+    assert lines == t.logs(key, job).items
+    assert server.streams_opened == 0  # pure long-poll
+    assert t.requests_sent > 2
+
+
+def test_client_falls_back_without_stream_transport():
+    """In-process transports have no stream_* verbs: prefer_sse=True must
+    quietly use long-poll (hasattr gate), same results."""
+    p = FfDLPlatform(n_hosts=4, chips_per_host=4)
+    client = ApiClient(p.api, p.auth.issue_key("team-a"), prefer_sse=True)
+    job = client.submit(sim_job("sse8"))
+    assert p.run_until_terminal([job], max_sim_s=5000)
+    assert list(client.follow_logs(job, wait_ms=0)) == client.logs(job)
+    assert client.status(job).value == "COMPLETED"
+
+
+# -------------------------------------------------------------------------
+# CLI end to end: `ffdl logs --follow` over one SSE connection
+# -------------------------------------------------------------------------
+
+def test_cli_logs_follow_single_sse_connection(served, capsys):
+    p, server, t, key = served
+    from repro.api import cli
+    job = ApiClient(t, key).submit(sim_job("cli1"))
+    with _Driver(server, p):
+        rc = cli.main(["--endpoint", server.base_url, "--key", key,
+                       "logs", job, "--follow"])
+    assert rc == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out == [str(line) for line in t.logs(key, job).items]
+    assert server.streams_opened == 1  # the whole follow: ONE connection
+
+
+def test_cli_events_page_and_usage(served, capsys):
+    p, server, t, key = served
+    admin = p.auth.issue_admin_key()
+    job = ApiClient(t, key).submit(sim_job("cli2"))
+    with _Driver(server, p):
+        _wait_for(lambda: p.events.count("job_completed") >= 1)
+    from repro.api import cli
+    assert cli.main(["--endpoint", server.base_url, "--key", admin,
+                     "events", "--kind", "job_submitted"]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out and all(
+        json.loads(line)["kind"] == "job_submitted" for line in out)
+    assert cli.main(["--endpoint", server.base_url, "--key", key,
+                     "usage"]) == 0
+    out = capsys.readouterr().out
+    assert "team-a" in out and "chip_s=" in out
+    assert job  # the submitted job drove the metering above
