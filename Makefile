@@ -25,6 +25,7 @@ bench-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/api_tier.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/hotpath.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/observability.py --quick
+	PYTHONPATH=src:. $(PY) benchmarks/operator.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/recovery.py
 
 # the full API-tier drill, including the timing-sensitive p99 assertions

@@ -1,0 +1,214 @@
+"""Autonomous-operator drill: autoscaling, hot-tenant isolation, and a
+rolling upgrade, under a bursty multi-tenant trace with the v1 data plane
+answering every tick.
+
+The operator (repro.obs.operator) must react to load the way FfDL §6's
+retrospective demands — automatically — and the reaction must be free for
+tenants: **zero failed v1 requests** while shards are spawned, drained,
+retired, and upgraded underneath them. Three drills:
+
+  * ``autoscale`` — a burst saturates a 2-shard fleet; the operator must
+    scale up (spawn + drain-into), then, when the burst completes, scale
+    back down (drain + retire) to the floor. Every tick, every tenant
+    lists and stats its jobs; any ApiError is a failure (asserted 0).
+  * ``isolation`` — two tenants share a shard, one runs hot; the operator
+    must migrate the hot one to the quietest shard (asserted), again with
+    zero failed tenant reads.
+  * ``rollout`` — a 3-shard fleet with resident tenants upgrades to a new
+    version in GUARD-style waves; the drill asserts every shard lands on
+    the target version, one wave per shard, and tenants never failed.
+
+Emits machine-readable ``BENCH_operator.json`` at the repo root (full
+mode). ``--quick`` shrinks tick counts and tenant fan-out; every
+zero-failure and action assertion still holds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.api import AdminClient, ApiClient, ApiError, Federation
+from repro.api.ops import install_operator
+from repro.core import JobManifest
+from repro.obs.operator import OperatorConfig
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_operator.json")
+
+
+def _probe(clients, jobs, counters):
+    """One availability sweep: every tenant lists its jobs and stats one.
+    This IS the measurement — any ApiError during an operator action is a
+    tenant-visible failure."""
+    for tenant, c in clients.items():
+        counters["requests"] += 2
+        try:
+            c.list_jobs(limit=5)
+            if tenant in jobs:
+                c.view(jobs[tenant])
+        except ApiError as e:
+            counters["failures"] += 1
+            counters.setdefault("failure_kinds", []).append(
+                f"{tenant}: {e.code.value}")
+
+
+def _autoscale_drill(quick: bool) -> dict:
+    n_tenants = 4 if quick else 8
+    ticks = 160 if quick else 400
+    # tick_period=10 sim-s/tick so the burst finishes inside the drill
+    # window and the scale-down half of the loop gets exercised too
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=2,
+                     tick_period=10.0)  # 8 chips
+    tenants = [f"team-{i:02d}" for i in range(n_tenants)]
+    for i, t in enumerate(tenants):
+        fed.pin(t, f"shard-{i % 2}")
+    install_operator(fed, OperatorConfig(
+        high_water=0.7, low_water=0.15, streak_ticks=3, cooldown_ticks=8,
+        max_shards=6, validate_ticks=2))
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in tenants}
+    # the burst: every tenant wants 2 chips for a while — 2x the fleet
+    jobs = {t: clients[t].submit(JobManifest(
+        name=f"{t}-burst", tenant=t, n_learners=1, chips_per_learner=2,
+        sim_duration=150 if quick else 300)) for t in tenants}
+    counters = {"requests": 0, "failures": 0}
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        fed.tick()
+        _probe(clients, jobs, counters)
+    wall = time.perf_counter() - t0
+    admin = AdminClient.for_platform(fed)
+    shards = admin.list_shards()
+    events = {k: sum(p.events.count(k) for p in fed.shards
+                     if p.backend.alive)
+              for k in ("operator_scale_up", "operator_scale_down")}
+    retired = [s["shard_id"] for s in shards if s["retired"]]
+    active = [s for s in shards if not s["retired"] and not s["cordoned"]]
+    assert counters["failures"] == 0, counters
+    assert events["operator_scale_up"] >= 1, \
+        "the burst never triggered a scale-up"
+    assert events["operator_scale_down"] >= 1 and retired, \
+        "the idle fleet never scaled back down"
+    assert len(active) >= 2, "scaled below the min_shards floor"
+    return {"tenants": n_tenants, "ticks": ticks,
+            "v1_requests": counters["requests"], "v1_failures": 0,
+            "scale_ups": events["operator_scale_up"],
+            "scale_downs": events["operator_scale_down"],
+            "shards_final": len(shards), "shards_retired": len(retired),
+            "decisions": len(admin.operator_status()["decisions"]),
+            "wall_s": round(wall, 3)}
+
+
+def _isolation_drill(quick: bool) -> dict:
+    ticks = 60 if quick else 150
+    fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4)
+    fed.pin("team-hot", "shard-0")
+    fed.pin("team-cold", "shard-0")
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, hot_share=0.6, min_heat=0.5,
+        heat_window=4, isolate_cooldown_ticks=30))
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in ("team-hot", "team-cold")}
+    jobs = {"team-hot": clients["team-hot"].submit(JobManifest(
+                name="burn", tenant="team-hot", n_learners=2,
+                chips_per_learner=2, sim_duration=1e6)),
+            "team-cold": clients["team-cold"].submit(JobManifest(
+                name="idle", tenant="team-cold", sim_duration=5))}
+    counters = {"requests": 0, "failures": 0}
+    isolated_at = None
+    t0 = time.perf_counter()
+    for i in range(ticks):
+        fed.tick()
+        _probe(clients, jobs, counters)
+        if isolated_at is None and fed.shard_of("team-hot") == "shard-1":
+            isolated_at = i + 1
+    wall = time.perf_counter() - t0
+    assert counters["failures"] == 0, counters
+    assert isolated_at is not None, "hot tenant was never isolated"
+    assert fed.shard_of("team-cold") == "shard-0"
+    n_events = sum(p.events.count("operator_isolate_tenant")
+                   for p in fed.shards)
+    assert n_events == 1, f"expected exactly one isolation, saw {n_events}"
+    return {"ticks": ticks, "isolated_at_tick": isolated_at,
+            "v1_requests": counters["requests"], "v1_failures": 0,
+            "wall_s": round(wall, 3)}
+
+
+def _rollout_drill(quick: bool) -> dict:
+    max_ticks = 80 if quick else 200
+    fed = Federation(n_shards=3, n_hosts=2, chips_per_host=2)
+    tenants = ("team-a", "team-b", "team-c")
+    for t, sid in zip(tenants, ("shard-0", "shard-1", "shard-2")):
+        fed.pin(t, sid)
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, validate_ticks=2))
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in tenants}
+    jobs = {t: clients[t].submit(JobManifest(
+        name=f"{t}-ride", tenant=t, sim_duration=1e6)) for t in tenants}
+    admin = AdminClient.for_platform(fed)
+    admin.rollout("v1")
+    counters = {"requests": 0, "failures": 0}
+    done_at = None
+    t0 = time.perf_counter()
+    for i in range(max_ticks):
+        fed.tick()
+        _probe(clients, jobs, counters)
+        if admin.operator_status()["rollout"]["state"] == "done":
+            done_at = i + 1
+            break
+    wall = time.perf_counter() - t0
+    assert counters["failures"] == 0, counters
+    assert done_at is not None, "rollout never completed"
+    versions = {s["shard_id"]: s["version"] for s in admin.list_shards()}
+    assert set(versions.values()) == {"v1"}, versions
+    waves = sum(p.events.count("operator_rollout_wave") for p in fed.shards)
+    assert waves == 3, f"expected 3 waves, saw {waves}"
+    return {"shards": 3, "waves": waves, "done_at_tick": done_at,
+            "v1_requests": counters["requests"], "v1_failures": 0,
+            "wall_s": round(wall, 3)}
+
+
+def run(quick: bool = False) -> dict:
+    out = {"quick": quick}
+
+    print("autoscale: burst -> scale-up -> drain -> retire ...", flush=True)
+    out["autoscale"] = _autoscale_drill(quick)
+    d = out["autoscale"]
+    print(f"  {d['scale_ups']} scale-up(s), {d['scale_downs']} "
+          f"scale-down(s), {d['shards_retired']} retired; "
+          f"{d['v1_requests']} v1 requests, 0 failed")
+
+    print("isolation: hot tenant auto-migrated off a shared shard ...",
+          flush=True)
+    out["isolation"] = _isolation_drill(quick)
+    d = out["isolation"]
+    print(f"  isolated at tick {d['isolated_at_tick']}; "
+          f"{d['v1_requests']} v1 requests, 0 failed")
+
+    print("rollout: 3 shards upgraded in health-gated waves ...",
+          flush=True)
+    out["rollout"] = _rollout_drill(quick)
+    d = out["rollout"]
+    print(f"  {d['waves']} waves, done at tick {d['done_at_tick']}; "
+          f"{d['v1_requests']} v1 requests, 0 failed")
+    return out
+
+
+def main(argv=None):
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    out = run(quick=quick)
+    if not quick:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {OUT_PATH}")
+    print("OPERATOR BENCH OK")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@
   §3.2       → benchmarks.api_tier     (replicated API availability/latency)
   §7         → benchmarks.hotpath      (indexed control-plane hot paths)
   §3.2/§4    → benchmarks.observability (SSE streaming, event replay)
+  §6         → benchmarks.operator     (autonomous operator: autoscale,
+                                        isolation, rolling upgrade)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
 ``hotpath``'s full run additionally writes ``BENCH_hotpath.json`` at the
@@ -40,6 +42,7 @@ def main() -> None:
         gang,
         hotpath,
         observability,
+        operator,
         overhead,
         recovery,
         roofline,
@@ -52,6 +55,7 @@ def main() -> None:
         ("api_tier_s3_2", api_tier.main),
         ("hotpath", hotpath.main),
         ("observability", observability.main),
+        ("operator", operator.main),
         ("overhead_table1_2", overhead.main),
         ("recovery_table3", recovery.main),
         ("spread_pack_fig3", spread_pack.main),

@@ -141,6 +141,7 @@ class AdminPlane:
         self.migrations: Dict[str, Migration] = {}
         self._mig_ctr = itertools.count(1)
         self.ratelimiter = None  # attached by ApiHttpServer when present
+        self.operator = None     # attached by repro.api.ops.install_operator
         # (shard_id, tenant) purges waiting for a dead destination to return
         self._deferred_purges: List[tuple] = []
         # (shard_id, [job_ids]) resumes waiting for a dead SOURCE to return
@@ -316,6 +317,8 @@ class AdminPlane:
                 "shard_id": backend.shard_id,
                 "status": "ok" if backend.alive else "down",
                 "cordoned": backend.cordoned,
+                "version": getattr(backend, "version", "v0"),
+                "retired": getattr(backend, "retired", False),
                 "tenants": [], "jobs": 0, "active_jobs": 0,
                 "chips_total": 0, "chips_used": 0, "queue_depth": 0}
         if not backend.alive:
@@ -360,6 +363,24 @@ class AdminPlane:
     def uncordon(self, shard_id: str) -> dict:
         self._backend(shard_id).uncordon()
         return self.get_shard(shard_id)
+
+    # -- operator resource (repro.obs.operator) ---------------------------
+    def _operator(self):
+        if self.operator is None:
+            raise ApiError(ErrorCode.NOT_FOUND,
+                           "no operator installed on this deployment")
+        return self.operator
+
+    @_serialized
+    def operator_status(self) -> dict:
+        """Status + decision log of the autonomous operator."""
+        return self._operator().status_view()
+
+    @_serialized
+    def start_rollout(self, version: str) -> dict:
+        """Request a GUARD-style rolling upgrade to ``version``; waves
+        start on the next federation tick."""
+        return self._operator().request_rollout(version)
 
     # -- migration resource -----------------------------------------------
     def migration_view(self, m: Migration) -> dict:
@@ -794,6 +815,19 @@ class AdminGateway:
     def drain_shard(self, api_key: str, shard_id: str) -> dict:
         self._require(api_key)
         return self.plane.drain(shard_id)
+
+    # -- operator ---------------------------------------------------------
+    def operator_status(self, api_key: str) -> dict:
+        self._require(api_key)
+        return self.plane.operator_status()
+
+    def start_rollout(self, api_key: str, body: dict) -> dict:
+        self._require(api_key)
+        if not isinstance(body, dict) or not isinstance(
+                body.get("version"), str) or not body["version"]:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "body must carry a non-empty 'version' string")
+        return self.plane.start_rollout(body["version"])
 
     # -- migrations -------------------------------------------------------
     def start_migration(self, api_key: str, body: dict) -> dict:

@@ -109,6 +109,14 @@ class Backend:
         # its resident tenants but accepts no NEW tenant placements and no
         # migration destinations. drain = migrate everyone off, then cordon.
         self.cordoned = False
+        # software version the shard runs; the autonomous operator's rolling
+        # upgrades bump it wave by wave via restart(version=...).
+        self.version = "v0"
+        # retired: fenced out of the fleet by the operator after a
+        # scale-down drain. Stays in router.backends (the hash modulus and
+        # composite cursors must not shift) but the federation stops
+        # ticking it and the operator excludes its capacity.
+        self.retired = False
 
     # -- shard lifecycle (chaos) ------------------------------------------
     def crash(self):
@@ -116,8 +124,10 @@ class Backend:
         UNAVAILABLE until restart. Other shards' tenants are unaffected."""
         self.alive = False
 
-    def restart(self):
+    def restart(self, version: str = None):
         self.alive = True
+        if version is not None:
+            self.version = version
 
     # -- operator lifecycle (v2 admin plane) ------------------------------
     def cordon(self):
@@ -125,6 +135,13 @@ class Backend:
 
     def uncordon(self):
         self.cordoned = False
+
+    def retire(self):
+        """Fence the shard out of the fleet (cordon + stop ticking). The
+        shard object stays addressable so existing composite cursors and
+        the tenant-hash modulus remain valid."""
+        self.cordoned = True
+        self.retired = True
 
     def read_locked(self):
         return self.lock.read_locked()

@@ -19,6 +19,9 @@ the platform, so everything it can do, any HTTP client can do.
     python -m repro.api.cli admin create-tenant team-a --quota 8 --shard shard-0
     python -m repro.api.cli admin migrate team-a shard-1 --wait
     python -m repro.api.cli admin drain shard-0
+    # autonomous operator (requires `serve --operator`):
+    python -m repro.api.cli admin operator
+    python -m repro.api.cli admin rollout v1 --wait
 
 ``serve`` boots a local simulated platform — optionally federated over
 ``--shards`` independent backend shards — prints one API key per
@@ -73,6 +76,11 @@ def cmd_serve(args) -> int:
     from repro.api.federation import Federation
     fed = Federation(n_shards=args.shards, n_hosts=args.hosts,
                      chips_per_host=args.chips_per_host)
+    if getattr(args, "operator", False):
+        from repro.api.ops import install_operator
+        install_operator(fed)
+        print("autonomous operator: ON (autoscaling, hot-tenant isolation, "
+              "rolling upgrades via /v2/admin/operator)")
     rate = None
     if args.rate:
         rate = RateLimitConfig(rate=args.rate, burst=args.burst,
@@ -344,6 +352,41 @@ def cmd_admin_migrate(args) -> int:
     return 0 if m["phase"] != "FAILED" else 1
 
 
+def cmd_admin_operator(args) -> int:
+    st = _admin(args).operator_status()
+    ro = st.get("rollout")
+    ro_line = "-"
+    if ro is not None:
+        ro_line = (f"{ro['version']} [{ro['state']}] wave {ro['wave']}"
+                   + (f" on {ro['shard']}" if ro.get("shard") else ""))
+    print(f"tick {st['tick']}  occupancy {st['occupancy']:.2f}  "
+          f"rollout {ro_line}")
+    for d in st["decisions"][-args.last:]:
+        extra = {k: v for k, v in d.items()
+                 if k not in ("tick", "action", "reason")}
+        detail = " ".join(f"{k}={v}" for k, v in sorted(extra.items()))
+        print(f"  t={d['tick']:<6d} {d['action']:<18s} {detail}")
+        print(f"           {d['reason']}")
+    return 0
+
+
+def cmd_admin_rollout(args) -> int:
+    admin = _admin(args)
+    st = admin.rollout(args.version)
+    if not args.wait:
+        _print_json(st["rollout"])
+        return 0
+    deadline = time.monotonic() + args.timeout
+    while time.monotonic() < deadline:
+        ro = admin.operator_status().get("rollout") or {}
+        if ro.get("state") in ("done", "halted"):
+            _print_json(ro)
+            return 0 if ro["state"] == "done" else 1
+        time.sleep(0.2)
+    print("timed out waiting for rollout", file=sys.stderr)
+    return 1
+
+
 def cmd_admin_migrations(args) -> int:
     for m in _admin(args).list_migrations():
         print(f"{m['migration_id']} {m['tenant']:16s} "
@@ -388,6 +431,9 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument("--max-inflight", type=int, default=64)
     s.add_argument("--tick-period", type=float, default=0.05,
                    help="wall seconds between simulation ticks")
+    s.add_argument("--operator", action="store_true",
+                   help="install the autonomous operator (autoscaling, "
+                        "hot-tenant isolation, rolling upgrades)")
     s.set_defaults(fn=cmd_serve)
 
     s = sub.add_parser("health", help="GET /v1/health")
@@ -532,6 +578,20 @@ def build_parser() -> argparse.ArgumentParser:
                         help="GET /v2/admin/migrations/{id}")
     s.add_argument("migration_id")
     s.set_defaults(fn=cmd_admin_migration)
+
+    s = asub.add_parser("operator",
+                        help="GET /v2/admin/operator (status + decisions)")
+    s.add_argument("--last", type=int, default=20,
+                   help="show only the last N decisions")
+    s.set_defaults(fn=cmd_admin_operator)
+    s = asub.add_parser("rollout",
+                        help="POST /v2/admin/operator/rollout "
+                             "(rolling shard upgrade)")
+    s.add_argument("version")
+    s.add_argument("--wait", action="store_true",
+                   help="poll until done/halted")
+    s.add_argument("--timeout", type=float, default=120.0)
+    s.set_defaults(fn=cmd_admin_rollout)
     return ap
 
 

@@ -283,7 +283,7 @@ class ApiClient:
 class AdminClient:
     """Operator-key convenience client for the v2 admin control plane.
 
-    ``transport`` is anything exposing the thirteen v2 admin verbs with
+    ``transport`` is anything exposing the fifteen v2 admin verbs with
     ``(api_key, ...)`` signatures: the in-process
     :class:`~repro.api.admin.AdminGateway` (``platform.admin_api`` /
     ``federation.admin_api``) or an
@@ -344,3 +344,12 @@ class AdminClient:
 
     def list_migrations(self) -> list:
         return self.transport.list_migrations(self.api_key)["items"]
+
+    # -- autonomous operator ----------------------------------------------
+    def operator_status(self) -> dict:
+        return self.transport.operator_status(self.api_key)
+
+    def rollout(self, version: str) -> dict:
+        """Start a GUARD-style rolling shard upgrade to ``version``."""
+        return self.transport.start_rollout(self.api_key,
+                                            {"version": version})

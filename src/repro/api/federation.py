@@ -55,6 +55,12 @@ class Federation:
                  pins: Optional[Dict[str, str]] = None, **platform_kwargs):
         # lazy import: repro.core.platform itself imports repro.api.*
         from repro.core.platform import FfDLPlatform
+        # Construction recipe kept so the operator can mint identical
+        # shards at scale-up time (add_shard).
+        self._seed = seed
+        self._shared_reads = shared_reads
+        self._platform_kwargs = dict(platform_kwargs)
+        self._next_shard_idx = max(1, n_shards)
         self.shards = [
             FfDLPlatform(shard_id=f"shard-{i}",
                          job_id_base=i * JOB_ID_STRIDE,
@@ -74,6 +80,8 @@ class Federation:
         # v2 admin control plane: one shared plane, admin-scoped gateway
         self.admin = AdminPlane(self.router, self.auth)
         self.admin_api = AdminGateway(self.admin, self.auth)
+        # autonomous operator (repro.api.ops.install_operator attaches one)
+        self.operator = None
 
     # -- routing ----------------------------------------------------------
     def pin(self, tenant: str, shard_id: str):
@@ -89,17 +97,68 @@ class Federation:
         state machine advances one phase per ``tick()``."""
         return self.admin.start_migration(tenant, to_shard)["migration_id"]
 
+    # -- elasticity (driven by repro.obs.operator) -------------------------
+    def add_shard(self) -> str:
+        """Mint a fresh shard with the federation's own construction recipe
+        and join it to the fleet. Returns the new shard id.
+
+        Routing safety: appending a backend changes the tenant-hash
+        modulus, so BEFORE the list grows every tenant with state anywhere
+        (plane spec, pin, or job records) is force-pinned to the shard it
+        currently routes to — its placement cannot jump. Only tenants the
+        platform has never seen re-hash over the larger fleet.
+        """
+        from repro.core.platform import FfDLPlatform
+        with self.admin._mutex:
+            known = set(self.admin.tenants) | set(self.router.pins)
+            for b in self.backends:
+                if b.alive:
+                    with b.read_locked():
+                        known |= {t for t, ids in
+                                  b.platform.meta._by_tenant.items() if ids}
+            for tenant in sorted(known):
+                self.router._force_pin(
+                    tenant, self.router.shard_for(tenant).shard_id)
+            i = self._next_shard_idx
+            self._next_shard_idx += 1
+            p = FfDLPlatform(shard_id=f"shard-{i}",
+                             job_id_base=i * JOB_ID_STRIDE,
+                             shared_reads=self._shared_reads,
+                             n_api_replicas=1,
+                             seed=self._seed + i, **self._platform_kwargs)
+            self.shards.append(p)
+            self.backends.append(p.backend)
+            # The router holds its OWN copy of the backend list — register
+            # with both, or the new shard is invisible to routing.
+            self.router.backends.append(p.backend)
+            self.router._by_id[p.backend.shard_id] = p.backend
+            # Tenant quotas follow the tenant to ANY shard: register every
+            # existing quota with the new shard's admission controller.
+            for spec in self.admin.tenants.values():
+                if spec.quota_chips is not None:
+                    p.admission.register_tenant(
+                        spec.name, spec.quota_chips, tier=spec.tier)
+            return p.backend.shard_id
+
+    def retire_shard(self, shard_id: str):
+        """Fence a drained shard out of the fleet: cordoned + no longer
+        ticked. It stays in the router (hash modulus, composite cursors)."""
+        self.router.backend(shard_id).retire()
+
     # -- engine -----------------------------------------------------------
     def tick(self):
         """One round on every live shard, each under its OWN write lock —
         reads on other shards are never blocked by this shard's tick.
-        Live tenant migrations advance one phase per round afterwards."""
+        Live tenant migrations advance one phase per round afterwards,
+        then the autonomous operator (when installed) reconciles once."""
         for backend in self.backends:
-            if not backend.alive:
+            if not backend.alive or backend.retired:
                 continue
             with backend.write_locked():
                 backend.platform.tick()
         self.admin.advance()
+        if self.operator is not None:
+            self.operator.step()
 
     def run_for(self, sim_seconds: float):
         n = int(sim_seconds / self.shards[0].tick_period)

@@ -176,6 +176,8 @@ ADMIN_ROUTES = (
     ("POST", "/v2/admin/migrations"),
     ("GET", "/v2/admin/migrations"),
     ("GET", "/v2/admin/migrations/{migration_id}"),
+    ("GET", "/v2/admin/operator"),
+    ("POST", "/v2/admin/operator/rollout"),
 )
 
 # The observability plane (docs/api.md is checked against this as well).
@@ -746,6 +748,13 @@ class _Handler(BaseHTTPRequestHandler):
             elif len(tail) == 2 and method == "GET":
                 return self._send_json(
                     200, admin.get_migration(key, tail[1]))
+        elif tail and tail[0] == "operator":
+            if len(tail) == 1 and method == "GET":
+                return self._send_json(200, admin.operator_status(key))
+            if len(tail) == 2 and tail[1] == "rollout" and method == "POST":
+                # 202: waves start on the next federation tick
+                return self._send_json(
+                    202, admin.start_rollout(key, self._json_body()))
         raise ApiError(ErrorCode.NOT_FOUND,
                        f"no route for {method} /v2/admin/{'/'.join(tail)}")
 
@@ -1390,3 +1399,10 @@ class HttpTransport:
 
     def list_migrations(self, api_key) -> dict:
         return self._request("GET", "/v2/admin/migrations", api_key)[1]
+
+    def operator_status(self, api_key) -> dict:
+        return self._request("GET", "/v2/admin/operator", api_key)[1]
+
+    def start_rollout(self, api_key, body: dict) -> dict:
+        return self._request("POST", "/v2/admin/operator/rollout", api_key,
+                             body=body)[1]

@@ -1,5 +1,5 @@
 # The observability plane (FfDL §4): the sensor layer the platform's
-# operators — and the future autonomous operator loop — read. Three parts:
+# operators — human and autonomous — read. Five parts:
 #   * bus:     per-shard, sequence-numbered, retention-bounded event bus
 #              (promoted from core.types.EventLog) with tenant-scoped
 #              visibility, served as GET /v2/events with cursor replay;
@@ -9,7 +9,10 @@
 #              gauges, histograms) behind GET /metrics;
 #   * sse:     Server-Sent-Events framing for the true-streaming transport
 #              behind `ffdl logs --follow` / `status --watch` / `events
-#              --follow` (long-poll remains the fallback contract).
+#              --follow` (long-poll remains the fallback contract);
+#   * operator: the autonomous reconciler (shard autoscaling, hot-tenant
+#              isolation, health-gated rolling upgrades) closing the loop
+#              over the sensors above via the /v2/admin verbs.
 from repro.obs.bus import (
     DEFAULT_RETENTION,
     Event,
@@ -18,6 +21,12 @@ from repro.obs.bus import (
     event_to_wire,
 )
 from repro.obs.meter import USAGE_FIELDS, UsageMeter, install_meter
+from repro.obs.operator import (
+    OPERATOR_EVENT_KINDS,
+    Operator,
+    OperatorConfig,
+    OperatorPolicy,
+)
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
     Histogram,
@@ -39,6 +48,10 @@ __all__ = [
     "EventBus",
     "Histogram",
     "METRIC_NAMES",
+    "OPERATOR_EVENT_KINDS",
+    "Operator",
+    "OperatorConfig",
+    "OperatorPolicy",
     "PLATFORM_EVENT_KINDS",
     "SSE_CONTENT_TYPE",
     "SseMessage",

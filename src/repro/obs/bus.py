@@ -64,6 +64,11 @@ PLATFORM_EVENT_KINDS = (
     "migration_phase", "lb_failover", "replica_crashed", "api_restarted",
     # backpressure (emitted by the rate limiter, no shard lock held)
     "rate_limited",
+    # autonomous operator (repro.obs.operator: every reconciler action is
+    # journaled so the decision log is auditable from /v2/events too)
+    "operator_scale_up", "operator_scale_down", "operator_isolate_tenant",
+    "operator_rollout_wave", "operator_rollout_done",
+    "operator_rollout_halted", "operator_rollback",
 )
 
 

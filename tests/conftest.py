@@ -12,3 +12,12 @@ def rng_key():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    # Per-test wall cap so a parked long-poll/SSE wait can never hang the
+    # suite. Gated on the pytest-timeout plugin actually being installed
+    # (it is in requirements-dev.txt / CI; local runs without it keep
+    # working, just uncapped). An explicit --timeout on the command line
+    # wins over this default.
+    if config.pluginmanager.hasplugin("timeout"):
+        if not getattr(config.option, "timeout", None):
+            config.option.timeout = 120.0
+            config.option.timeout_method = "thread"

@@ -79,7 +79,7 @@ def test_migration_contract_documented_and_real():
                  "patch_tenant", "delete_tenant", "list_shards",
                  "get_shard", "cordon_shard", "uncordon_shard",
                  "drain_shard", "start_migration", "get_migration",
-                 "list_migrations"):
+                 "list_migrations", "operator_status", "start_rollout"):
         assert hasattr(AdminGateway, name)
         assert hasattr(HttpTransport, name)
     for name in ("advance", "drain", "start_migration"):
@@ -180,6 +180,34 @@ def test_observability_plane_in_architecture_md():
                  "obs/metrics.py", "obs/sse.py",
                  "BENCH_observability.json"):
         assert term in arch, f"{term!r} missing from Observability section"
+
+
+def test_operator_contract_documented_and_real():
+    """The autonomous-operator surface (tentpole) must be documented and
+    must name only machinery that exists: routes, rollout states, event
+    kinds, and the architecture section describing the control loops."""
+    from repro.api.ops import install_operator, uninstall_operator
+    from repro.obs import OPERATOR_EVENT_KINDS, Operator, OperatorPolicy
+    assert callable(install_operator) and callable(uninstall_operator)
+    for name in ("step", "status_view", "request_rollout"):
+        assert hasattr(Operator, name)
+    assert hasattr(OperatorPolicy, "decide")
+    doc = _api_md()
+    # rollout state machine vocabulary is wire contract
+    for state in ("starting", "draining", "validating", "done", "halted"):
+        assert f'"{state}"' in doc or f"`{state}`" in doc, \
+            f"rollout state {state!r} missing from docs/api.md"
+    for kind in OPERATOR_EVENT_KINDS:
+        assert kind in doc, f"event kind {kind!r} missing from docs/api.md"
+    # shard views grew the operator-managed fields
+    for field in ("version", "retired"):
+        assert f'"{field}"' in doc, f"shard field {field!r} undocumented"
+    arch = ARCH.read_text()
+    assert "## Autonomous operator" in arch
+    for term in ("obs/operator.py", "api/ops.py", "OperatorPolicy",
+                 "high_water", "low_water", "heat_window", "validate_ticks",
+                 "min_shards", "BENCH_operator.json", "add_shard"):
+        assert term in arch, f"{term!r} missing from operator section"
 
 
 def test_architecture_doc_maps_api_modules():

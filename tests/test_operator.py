@@ -1,0 +1,394 @@
+"""The autonomous operator loop (repro.obs.operator + repro.api.ops):
+shard autoscaling, hot-tenant isolation, GUARD-style rolling upgrades with
+health-gated rollback — including the ROADMAP chaos ask (kill a shard
+mid-wave ⇒ the rollout halts instead of cascading) and the determinism
+property (decisions are a pure function of the observed stats, however
+the observation was enumerated).
+"""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.api import (
+    AdminClient,
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    Federation,
+    HttpTransport,
+)
+from repro.api.ops import install_operator, uninstall_operator
+from repro.core import JobManifest
+from repro.obs.operator import (
+    OPERATOR_EVENT_KINDS,
+    OperatorConfig,
+    OperatorPolicy,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propstrat import given, settings, st
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+def event_count(fed, kind):
+    return sum(p.events.count(kind) for p in fed.shards
+               if p.backend.alive)
+
+
+# ------------------------------------------------------------- autoscaling
+
+
+def test_scale_up_spawns_shard_and_drains_hot_tenant_into_it():
+    """Sustained occupancy over the high-water mark mints a new shard and
+    migrates the hottest tenant of the most-occupied shard into it — with
+    zero failed v1 requests while it happens."""
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=2)  # 8 chips
+    fed.pin("team-a", "shard-0")
+    fed.pin("team-b", "shard-1")
+    install_operator(fed, OperatorConfig(
+        high_water=0.7, low_water=-1.0, streak_ticks=2, cooldown_ticks=4,
+        validate_ticks=2))
+    clients = {}
+    for i, tenant in enumerate(("team-a", "team-b")):
+        c = clients[tenant] = ApiClient(fed.api, fed.auth.issue_key(tenant))
+        c.submit(sim_job(f"fill-{i}", tenant, n_learners=2,
+                         chips_per_learner=2, sim_duration=1e6))
+    for _ in range(30):
+        fed.tick()
+        for c in clients.values():       # availability during autoscale
+            assert len(c.list_jobs(limit=10).items) == 1
+    admin = AdminClient.for_platform(fed)
+    shards = {s["shard_id"]: s for s in admin.list_shards()}
+    assert "shard-2" in shards, "no shard was added"
+    assert event_count(fed, "operator_scale_up") == 1
+    actions = [d["action"] for d in admin.operator_status()["decisions"]]
+    assert "scale_up" in actions
+    # the hot tenant actually landed on the fresh shard and is running
+    moved = [t for s in shards.values() if s["shard_id"] == "shard-2"
+             for t in s["tenants"]]
+    assert moved, "no tenant was drained into the new shard"
+    # every tenant still answers on v1 and every record is intact
+    for tenant, c in clients.items():
+        assert len(c.list_jobs(limit=10).items) == 1
+
+
+def test_scale_down_drains_and_retires_emptiest_shard():
+    fed = Federation(n_shards=3, n_hosts=2, chips_per_host=2)
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=0.2, streak_ticks=3, cooldown_ticks=5))
+    client = ApiClient(fed.api, fed.auth.issue_key("team-a"))
+    jid = client.submit(sim_job("little", sim_duration=30))
+    for _ in range(30):
+        fed.tick()
+    admin = AdminClient.for_platform(fed)
+    retired = [s for s in admin.list_shards() if s["retired"]]
+    assert len(retired) == 1
+    assert retired[0]["cordoned"] and not retired[0]["tenants"]
+    assert event_count(fed, "operator_scale_down") == 1
+    # min_shards floor: never drains below two active shards
+    active = [s for s in admin.list_shards()
+              if not s["retired"] and not s["cordoned"]]
+    assert len(active) >= 2
+    # the tenant's history survived whatever moves happened
+    assert client.view(jid).job_id == jid
+
+
+def test_hot_tenant_isolated_to_quietest_shard():
+    """One tenant dominating a shard's windowed heat gets auto-migrated to
+    the quietest shard; the cold co-tenant stays put."""
+    fed = Federation(n_shards=2, n_hosts=4, chips_per_host=4)
+    fed.pin("team-hot", "shard-0")
+    fed.pin("team-cold", "shard-0")
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, hot_share=0.6, min_heat=0.5,
+        heat_window=4, isolate_cooldown_ticks=10))
+    hot = ApiClient(fed.api, fed.auth.issue_key("team-hot"))
+    cold = ApiClient(fed.api, fed.auth.issue_key("team-cold"))
+    hot.submit(sim_job("burn", "team-hot", n_learners=2,
+                       chips_per_learner=2, sim_duration=1e6))
+    cold.submit(sim_job("idle", "team-cold", sim_duration=5))
+    moved_at = None
+    for t in range(40):
+        fed.tick()
+        assert len(hot.list_jobs(limit=10).items) == 1    # availability
+        if fed.shard_of("team-hot") == "shard-1" and moved_at is None:
+            moved_at = t
+    assert moved_at is not None, "hot tenant was never isolated"
+    assert fed.shard_of("team-cold") == "shard-0"
+    assert event_count(fed, "operator_isolate_tenant") == 1
+    d = [d for d in fed.operator.policy.decisions
+         if d["action"] == "isolate_tenant"]
+    assert d and d[0]["tenant"] == "team-hot" \
+        and d[0]["to_shard"] == "shard-1"
+
+
+# -------------------------------------------------------- rolling upgrades
+
+
+def test_rollout_upgrades_every_shard_in_waves():
+    fed = Federation(n_shards=3, n_hosts=2, chips_per_host=2)
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, validate_ticks=2))
+    fed.pin("team-a", "shard-0")
+    client = ApiClient(fed.api, fed.auth.issue_key("team-a"))
+    jid = client.submit(sim_job("ride-along", sim_duration=1e6))
+    admin = AdminClient.for_platform(fed)
+    st_ = admin.rollout("v1")
+    assert st_["rollout"]["state"] == "starting"
+    for _ in range(60):
+        fed.tick()
+        ro = admin.operator_status()["rollout"]
+        if ro["state"] == "done":
+            break
+    assert ro["state"] == "done"
+    assert ro["upgraded"] == ["shard-0", "shard-1", "shard-2"]
+    versions = {s["shard_id"]: s["version"] for s in admin.list_shards()}
+    assert set(versions.values()) == {"v1"}
+    assert event_count(fed, "operator_rollout_wave") == 3
+    assert event_count(fed, "operator_rollout_done") == 1
+    # the resident tenant survived its shard's wave (drain moved it, the
+    # records came along) and its job is still addressable
+    assert client.view(jid).job_id == jid
+    # a second rollout to the same version is a no-op done-in-zero-waves
+    admin.rollout("v1")
+    fed.tick()
+    ro = admin.operator_status()["rollout"]
+    assert ro["state"] == "done" and ro["upgraded"] == []
+
+
+def test_rollout_conflict_and_not_installed_errors():
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=2)
+    admin = AdminClient.for_platform(fed)
+    with pytest.raises(ApiError) as ei:
+        admin.operator_status()
+    assert ei.value.code == ErrorCode.NOT_FOUND
+    with pytest.raises(ApiError) as ei:
+        admin.rollout("v1")
+    assert ei.value.code == ErrorCode.NOT_FOUND
+    install_operator(fed, OperatorConfig(high_water=9.9, low_water=-1.0))
+    admin.rollout("v1")
+    with pytest.raises(ApiError) as ei:
+        admin.rollout("v2")        # one rollout at a time
+    assert ei.value.code == ErrorCode.CONFLICT
+    with pytest.raises(ApiError) as ei:
+        admin.rollout("")          # version must be a non-empty string
+    assert ei.value.code == ErrorCode.INVALID_ARGUMENT
+    uninstall_operator(fed)
+    with pytest.raises(ApiError):
+        admin.operator_status()
+
+
+# ------------------------------------------------------------------ chaos
+
+
+def test_shard_killed_mid_wave_halts_rollout_with_full_availability():
+    """The ROADMAP chaos ask: a shard dying mid-upgrade-wave must HALT the
+    rollout (no further waves), emit operator_rollout_halted, roll the
+    current wave back, and cost surviving tenants zero v1 requests."""
+    fed = Federation(n_shards=3, n_hosts=2, chips_per_host=2)
+    for tenant, shard in (("team-a", "shard-0"), ("team-b", "shard-1"),
+                          ("team-c", "shard-2")):
+        fed.pin(tenant, shard)
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, validate_ticks=3))
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in ("team-a", "team-b", "team-c")}
+    jobs = {t: clients[t].submit(sim_job(f"{t}-job", t, sim_duration=1e6))
+            for t in clients}
+    admin = AdminClient.for_platform(fed)
+    admin.rollout("v1")
+    # tick until wave 1 is mid-drain on shard-0 ...
+    for _ in range(20):
+        fed.tick()
+        ro = admin.operator_status()["rollout"]
+        if ro["state"] == "draining" and ro["shard"] == "shard-0":
+            break
+    assert ro["state"] == "draining" and ro["shard"] == "shard-0"
+    wave_at_kill = ro["wave"]
+    # ... then kill an uninvolved shard mid-wave
+    fed.backends[2].crash()
+    for _ in range(20):    # plenty of ticks: prove no wave 2 ever starts
+        fed.tick()
+        for t in ("team-a", "team-b"):   # survivors: 100% availability
+            assert clients[t].view(jobs[t]).job_id == jobs[t]
+    ro = admin.operator_status()["rollout"]
+    assert ro["state"] == "halted"
+    assert ro["wave"] == wave_at_kill, "a further wave started after halt"
+    assert "shard-2" in ro["error"]
+    assert event_count(fed, "operator_rollout_halted") == 1
+    assert event_count(fed, "operator_rollout_wave") == 1
+    actions = [d["action"] for d in admin.operator_status()["decisions"]]
+    assert "rollback" in actions
+    # rollback uncordoned the wave shard; nothing was upgraded
+    assert not admin.get_shard("shard-0")["cordoned"]
+    assert admin.get_shard("shard-0")["version"] == "v0"
+    # the dead shard's own tenant answers UNAVAILABLE (isolated, not lost)
+    with pytest.raises(ApiError) as ei:
+        clients["team-c"].view(jobs["team-c"])
+    assert ei.value.code == ErrorCode.UNAVAILABLE
+
+
+def test_post_restart_failure_regression_halts_and_rolls_back():
+    """A health regression during post-restart validation (new job_failed
+    events on the wave shard) halts the rollout and rolls back."""
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=2)
+    install_operator(fed, OperatorConfig(
+        high_water=9.9, low_water=-1.0, validate_ticks=4,
+        allowed_failures=0))
+    admin = AdminClient.for_platform(fed)
+    admin.rollout("v1")
+    for _ in range(20):
+        fed.tick()
+        ro = admin.operator_status()["rollout"]
+        if ro["state"] == "validating":
+            break
+    assert ro["state"] == "validating" and ro["shard"] == "shard-0"
+    # inject a failure regression on the freshly-restarted wave shard
+    fed.shards[0].events.emit("guardian", "job_failed", job_id="job-xxx")
+    fed.tick()
+    ro = admin.operator_status()["rollout"]
+    assert ro["state"] == "halted"
+    assert "regression" in ro["error"]
+    assert event_count(fed, "operator_rollout_halted") == 1
+
+
+# ------------------------------------------------------------- determinism
+
+
+def _scripted_trace():
+    """A synthetic observation trace covering every decision family:
+    occupancy ramps up (scale_up), a tenant runs hot (isolate), load
+    vanishes (scale_down), and a mid-trace rollout request raises waves.
+    Content is CANONICAL — enumeration order is what the property
+    shuffles."""
+    trace = []
+    for tick in range(1, 31):
+        occ_hot = tick < 12
+        shards = [
+            {"shard_id": "shard-0", "alive": True, "cordoned": False,
+             "retired": False, "version": "v0",
+             "chips_total": 8, "chips_used": 8 if occ_hot else 0,
+             "jobs": 3, "active_jobs": 2 if occ_hot else 0,
+             "queue_depth": 1, "tenants": ["team-a", "team-b"],
+             "failed_total": 0},
+            {"shard_id": "shard-1", "alive": True, "cordoned": False,
+             "retired": False, "version": "v0",
+             "chips_total": 8, "chips_used": 7 if occ_hot else 0,
+             "jobs": 1, "active_jobs": 1 if occ_hot else 0,
+             "queue_depth": 0, "tenants": ["team-c"],
+             "failed_total": 0},
+        ]
+        heat = {"team-a": 9.0 if occ_hot else 0.0, "team-b": 1.0,
+                "team-c": 2.0}
+        trace.append({"tick": tick, "shards": shards,
+                      "live_migrations": 1 if tick in (13, 14) else 0,
+                      "tenant_heat": heat,
+                      "next_shard_id": "shard-2"})
+    return trace
+
+
+def _replay(seed: int):
+    cfg = OperatorConfig(high_water=0.8, low_water=0.2, streak_ticks=2,
+                         cooldown_ticks=3, hot_share=0.6, min_heat=0.5,
+                         heat_window=4, validate_ticks=2)
+    policy = OperatorPolicy(cfg)
+    rng = random.Random(seed)
+    for i, obs in enumerate(_scripted_trace()):
+        if i == 17:
+            policy.request_rollout("v9")
+        # shuffle every enumeration the policy consumes: shard order,
+        # resident order, heat-dict insertion order
+        shards = [dict(s) for s in obs["shards"]]
+        rng.shuffle(shards)
+        for s in shards:
+            s["tenants"] = list(s["tenants"])
+            rng.shuffle(s["tenants"])
+        heat_items = list(obs["tenant_heat"].items())
+        rng.shuffle(heat_items)
+        policy.decide({**obs, "shards": shards,
+                       "tenant_heat": dict(heat_items)})
+    return list(policy.decisions)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_operator_decisions_are_order_independent(seed):
+    """Same observed stats ⇒ same decision log, regardless of seed-driven
+    shuffles of shard/tenant enumeration order (decisions are a pure
+    function of the observation, not of iteration order)."""
+    reference = _replay(0)
+    assert reference, "trace produced no decisions — property is vacuous"
+    kinds = {d["action"] for d in reference}
+    assert {"scale_up", "rollout_wave"} <= kinds
+    assert _replay(seed) == reference
+
+
+def test_policy_never_mutates_the_observation():
+    obs = _scripted_trace()[0]
+    import copy
+    frozen = copy.deepcopy(obs)
+    OperatorPolicy(OperatorConfig()).decide(obs)
+    assert obs == frozen
+
+
+# ------------------------------------------------------------------- wire
+
+
+def test_operator_surface_over_http():
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=2)
+    install_operator(fed, OperatorConfig(high_water=9.9, low_water=-1.0,
+                                         validate_ticks=1))
+    server = ApiHttpServer(fed)
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            fed.tick()
+            time.sleep(0.002)
+
+    t = threading.Thread(target=ticker, daemon=True)
+    with server:
+        transport = HttpTransport(server.base_url)
+        admin = AdminClient(transport, fed.auth.issue_admin_key())
+        st_ = admin.operator_status()
+        assert st_["api_version"] == "v2" and st_["enabled"]
+        assert "config" in st_ and "decisions" in st_
+        # tenant keys are FORBIDDEN on the operator resource
+        with pytest.raises(ApiError) as ei:
+            AdminClient(transport, fed.auth.issue_key("team-a")) \
+                .operator_status()
+        assert ei.value.code == ErrorCode.FORBIDDEN
+        t.start()
+        try:
+            resp = admin.rollout("v1")        # 202: waves start on a tick
+            assert resp["rollout"]["version"] == "v1"
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                ro = admin.operator_status()["rollout"]
+                if ro["state"] == "done":
+                    break
+                time.sleep(0.01)
+            assert ro["state"] == "done"
+        finally:
+            stop.set()
+            t.join()
+    assert {s["version"] for s in
+            AdminClient.for_platform(fed).list_shards()} == {"v1"}
+
+
+def test_operator_events_are_pinned_platform_kinds():
+    from repro.obs import PLATFORM_EVENT_KINDS
+    for kind in OPERATOR_EVENT_KINDS:
+        assert kind in PLATFORM_EVENT_KINDS

@@ -1,5 +1,15 @@
 """Logical-axis sharding rules + ZeRO-1 spec derivation + sharded-vs-single
-numerical equivalence on a small in-process mesh."""
+numerical equivalence on a small in-process mesh.
+
+Device triage: the spec-derivation tests (`logical_to_spec` /
+`zero1_spec`) consume only the mesh's axis *sizes*, so at < 4 devices the
+``env`` fixture builds the same (2 data x 2 model) topology as an
+``AbstractMesh`` and they run for real. The two end-to-end training tests
+genuinely need 4 concrete devices (``device_put``/``jit`` on real arrays)
+— below that they are ``xfail(strict=True)``, not skipped, so they cannot
+rot silently; the multi-device path is exercised by the
+``tests/test_multidevice.py`` subprocess (XLA_FLAGS 8-CPU) run.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -17,13 +27,23 @@ from repro.parallel.sharding import (
 )
 from repro.parallel.zero import zero1_spec
 
-pytestmark = pytest.mark.skipif(
-    jax.device_count() < 4, reason="needs >=4 devices (set via XLA_FLAGS)")
+_HAVE_DEVICES = jax.device_count() >= 4
+
+needs_real_mesh = pytest.mark.xfail(
+    not _HAVE_DEVICES, strict=True,
+    reason="needs >=4 real devices (set via XLA_FLAGS); the abstract-mesh "
+           "env cannot back device_put/jit — covered by the "
+           "tests/test_multidevice.py subprocess run")
 
 
 @pytest.fixture(scope="module")
 def env():
-    mesh = compat_make_mesh((2, 2), ("data", "model"))
+    if _HAVE_DEVICES:
+        mesh = compat_make_mesh((2, 2), ("data", "model"))
+    else:
+        # same topology, no devices: enough for every spec-derivation
+        # path (they only read mesh.shape / axis sizes)
+        mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     return make_env(mesh)
 
 
@@ -59,6 +79,7 @@ def test_zero1_insertion(env):
     assert out in (P(None, "data"), P())
 
 
+@needs_real_mesh
 def test_sharded_train_matches_single_device(env):
     """2x2-mesh training == single-device training (dense arch)."""
     from repro.configs import get_tiny_config
@@ -107,6 +128,7 @@ def test_sharded_train_matches_single_device(env):
                                rtol=4e-3)  # bf16 accumulation order differs
 
 
+@needs_real_mesh
 def test_elastic_restore_onto_different_mesh(env):
     """Elastic recovery beyond the paper: a checkpoint written from a
     (2 data x 2 model) mesh restores onto a (4 data x 1 model) mesh with
