@@ -26,6 +26,7 @@ bench-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/hotpath.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/observability.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/operator.py --quick
+	PYTHONPATH=src:. $(PY) benchmarks/serving.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/recovery.py
 
 # the full API-tier drill, including the timing-sensitive p99 assertions

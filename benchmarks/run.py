@@ -13,6 +13,8 @@
   §3.2/§4    → benchmarks.observability (SSE streaming, event replay)
   §6         → benchmarks.operator     (autonomous operator: autoscale,
                                         isolation, rolling upgrade)
+  §3/§4      → benchmarks.serving      (declarative pipelines + serving
+                                        tier QoS under flood)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
 ``hotpath``'s full run additionally writes ``BENCH_hotpath.json`` at the
@@ -47,6 +49,7 @@ def main() -> None:
         recovery,
         roofline,
         scale,
+        serving,
         sizing,
         spread_pack,
     )
@@ -62,6 +65,7 @@ def main() -> None:
         ("gang_fig4", gang.main),
         ("sizing_tables4_6", sizing.main),
         ("scale_s5_5", scale.main),
+        ("serving", serving.main),
         ("failures_s5_6", failures.main),
         ("roofline", roofline.main),
     ]

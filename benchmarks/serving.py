@@ -1,0 +1,240 @@
+"""Declarative-workloads drill: pipeline convergence with a chaos-killed
+stage, and per-tenant serving QoS over the real HTTP tier.
+
+The reconciler (repro.workloads) must converge a declared train→eval→serve
+pipeline to a RUNNING inference Service unattended, re-converge when a
+mid-pipeline stage is killed out from under it, and the reaction must be
+free for tenants: **zero failed v1 requests** while stages submit, retry,
+and the serving tier scales. Two drills:
+
+  * ``pipeline`` — apply a three-stage Pipeline manifest; every tick each
+    tenant lists its jobs and reads its workload status (any ApiError is
+    a failure — asserted 0). Mid-run the eval stage's job is killed; the
+    per-spec retry must resubmit it and the pipeline must still land
+    SUCCEEDED with the child Service RUNNING and answering invokes.
+  * ``qos`` — a real ApiHttpServer with per-tenant token buckets; a prod
+    tenant and a flooding tenant each run a one-replica Service. The
+    flood's invokes saturate its own bucket (429s, counted); the prod
+    tenant's invokes must never fail — the serving tier's multi-tenant
+    QoS rides the existing rate limiter, not new machinery.
+
+Emits machine-readable ``BENCH_serving.json`` at the repo root (full
+mode). ``--quick`` shrinks tick counts and invoke rounds; every
+zero-failure and convergence assertion still holds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+
+from repro.api import (
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    Federation,
+    HttpTransport,
+    WorkloadClient,
+)
+from repro.api.http import RateLimitConfig
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+
+PIPELINE = """\
+kind: Pipeline
+name: lm-pipe
+tenant: team-a
+stages:
+  - name: train
+    job:
+      n_learners: 1
+      chips_per_learner: 1
+      sim_duration: 5
+      train:
+        tiny: true
+        steps: 2
+  - name: eval
+    after: [train]
+    retries: 1
+    job:
+      n_learners: 1
+      chips_per_learner: 1
+      sim_duration: 5
+  - name: serve
+    after: [eval]
+    service:
+      replicas: 2
+      chips_per_replica: 1
+"""
+
+
+def _pipeline_drill(quick: bool) -> dict:
+    max_ticks = 120 if quick else 300
+    # tick_period=5 sim-s/tick: stage jobs clear the fixed 30 s data
+    # stage in a handful of ticks, so the whole DAG fits the window
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=4,
+                     tick_period=5.0)
+    tenants = ("team-a", "team-b")
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in tenants}
+    admin = ApiClient(fed.api, fed.auth.issue_admin_key())
+    wl = WorkloadClient(fed.workloads_api, fed.auth.issue_key("team-a"))
+    wl.apply(PIPELINE)
+    counters = {"requests": 0, "failures": 0}
+    killed_at = None
+    done_at = None
+    t0 = time.perf_counter()
+    for i in range(max_ticks):
+        fed.tick()
+        # availability probe: the v1 plane answers while the reconciler
+        # submits/retries stages and materializes the serving tier
+        for t, c in clients.items():
+            counters["requests"] += 1
+            try:
+                c.list_jobs(limit=5)
+            except ApiError as e:
+                counters["failures"] += 1
+                counters.setdefault("failure_kinds", []).append(
+                    f"{t}: {e.code.value}")
+        view = wl.get("lm-pipe")
+        eval_st = view["status"]["stages"]["eval"]
+        if killed_at is None and eval_st["state"] == "RUNNING" and \
+                eval_st["job"] is not None:
+            # chaos: kill the mid-pipeline stage once it is admitted
+            meta = fed.router.shard_for("team-a").platform.meta
+            if meta.get(eval_st["job"]).status.value != "PENDING":
+                admin.cancel(eval_st["job"])
+                killed_at = i + 1
+        if view["status"]["phase"] == "SUCCEEDED":
+            done_at = i + 1
+            break
+    wall = time.perf_counter() - t0
+    assert counters["failures"] == 0, counters
+    assert killed_at is not None, "the chaos kill never fired"
+    assert done_at is not None, "pipeline never converged"
+    view = wl.get("lm-pipe")
+    assert view["status"]["stages"]["eval"]["attempts"] == 2, \
+        "the killed stage was not retried per spec"
+    child = wl.get("lm-pipe-serve")
+    assert child["status"]["phase"] == "RUNNING", child["status"]
+    replicas = [wl.invoke("lm-pipe-serve")["replica"] for _ in range(4)]
+    assert sorted(set(replicas)) == ["0", "1"], \
+        f"invokes not spread round-robin: {replicas}"
+    events = {k: sum(p.events.count(k) for p in fed.shards
+                     if p.backend.alive)
+              for k in ("workload_stage_submitted", "workload_pipeline_done",
+                        "workload_service_ready")}
+    return {"ticks": done_at, "killed_at_tick": killed_at,
+            "eval_attempts": 2, "v1_requests": counters["requests"],
+            "v1_failures": 0, "stage_submits":
+                events["workload_stage_submitted"],
+            "pipeline_done_events": events["workload_pipeline_done"],
+            "service_ready_events": events["workload_service_ready"],
+            "wall_s": round(wall, 3)}
+
+
+def _qos_drill(quick: bool) -> dict:
+    rounds = 30 if quick else 120
+    fed = Federation(n_shards=2, n_hosts=2, chips_per_host=4,
+                     tick_period=5.0,
+                     pins={"prod": "shard-0", "flood": "shard-1"})
+    server = ApiHttpServer(
+        fed, rate_limit=RateLimitConfig(rate=2000.0, burst=4000),
+        per_tenant={"flood": RateLimitConfig(rate=5.0, burst=5)})
+    out = {"rounds": rounds}
+    with server:
+        transport = HttpTransport(server.base_url)
+        prod = WorkloadClient(transport, fed.auth.issue_key("prod"))
+        flood = WorkloadClient(transport, fed.auth.issue_key("flood"))
+        for c, tenant in ((prod, "prod"), (flood, "flood")):
+            c.apply(f"kind: Service\nname: infer\ntenant: {tenant}\n"
+                    f"replicas: 1\n")
+        stop = threading.Event()
+
+        def ticker():
+            while not stop.is_set():
+                fed.tick()
+
+        t = threading.Thread(target=ticker, daemon=True)
+        t.start()
+        try:
+            deadline = time.monotonic() + 60
+            while time.monotonic() < deadline:
+                if prod.get("infer")["status"]["phase"] == "RUNNING" and \
+                        flood.get("infer")["status"]["phase"] == "RUNNING":
+                    break
+                time.sleep(0.02)
+            else:
+                raise AssertionError("services never converged over HTTP")
+            counters = {"prod_ok": 0, "prod_failures": 0,
+                        "flood_ok": 0, "flood_429": 0}
+            lat = []
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                r0 = time.perf_counter()
+                prod.invoke("infer")          # any raise = drill failure
+                lat.append(time.perf_counter() - r0)
+                counters["prod_ok"] += 1
+                for _ in range(4):            # the flood outruns its bucket
+                    try:
+                        flood.invoke("infer")
+                        counters["flood_ok"] += 1
+                    except ApiError as e:
+                        assert e.code == ErrorCode.RATE_LIMITED, e
+                        counters["flood_429"] += 1
+            wall = time.perf_counter() - t0
+        finally:
+            stop.set()
+            t.join(timeout=10)
+    assert counters["prod_failures"] == 0
+    assert counters["prod_ok"] == rounds
+    assert counters["flood_429"] > 0, "the flood was never throttled"
+    lat.sort()
+    out.update(counters)
+    out.update({
+        "prod_invoke_p50_ms": round(lat[len(lat) // 2] * 1e3, 3),
+        "prod_invoke_p99_ms": round(lat[int(len(lat) * 0.99)] * 1e3, 3),
+        "wall_s": round(wall, 3)})
+    return out
+
+
+def run(quick: bool = False) -> dict:
+    out = {"quick": quick}
+
+    print("pipeline: train→eval→serve with a chaos-killed stage ...",
+          flush=True)
+    out["pipeline"] = _pipeline_drill(quick)
+    d = out["pipeline"]
+    print(f"  converged at tick {d['ticks']} (stage killed at "
+          f"{d['killed_at_tick']}, retried); {d['v1_requests']} v1 "
+          f"requests, 0 failed")
+
+    print("qos: flooding tenant throttled, prod invokes clean ...",
+          flush=True)
+    out["qos"] = _qos_drill(quick)
+    d = out["qos"]
+    print(f"  {d['prod_ok']} prod invokes ok (p50 "
+          f"{d['prod_invoke_p50_ms']} ms), flood saw {d['flood_429']} "
+          f"429s")
+    return out
+
+
+def main(argv=None):
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    out = run(quick=quick)
+    if not quick:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {OUT_PATH}")
+    print("SERVING BENCH OK")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ from repro.api.auth import (
     WRITE,
 )
 from repro.api.backend import AllShardsLock, Backend, RWLock
-from repro.api.client import AdminClient, ApiClient
+from repro.api.client import AdminClient, ApiClient, WorkloadClient
 from repro.api.gateway import ApiGateway
 from repro.api.http import (
     ADMIN_ROUTES,
@@ -25,6 +25,7 @@ from repro.api.http import (
     OBS_ROUTES,
     ROUTES,
     STATUS_OF,
+    WORKLOAD_ROUTES,
 )
 from repro.api.lb import LoadBalancer
 from repro.api.ratelimit import RateLimitConfig, RateLimitedApi, TokenBucket
@@ -79,5 +80,7 @@ __all__ = [
     "SubmitResponse",
     "TenantRouter",
     "TokenBucket",
+    "WORKLOAD_ROUTES",
     "WRITE",
+    "WorkloadClient",
 ]

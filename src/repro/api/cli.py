@@ -400,6 +400,60 @@ def cmd_admin_migration(args) -> int:
     return 0
 
 
+def _workloads(args):
+    from repro.api.client import WorkloadClient
+    return WorkloadClient(_transport(args), _key(args))
+
+
+def cmd_apply(args) -> int:
+    text = (sys.stdin.read() if args.file == "-"
+            else open(args.file, encoding="utf-8").read())
+    view = _workloads(args).apply(text)
+    verb = "created" if view.get("created") else "configured"
+    print(f"{view['kind'].lower()}/{view['name']} {verb} "
+          f"(generation {view['generation']})")
+    return 0
+
+
+def _workload_row(v) -> str:
+    st = v["status"]
+    detail = ""
+    if v["kind"] == "Pipeline":
+        done = sum(1 for s in st["stages"].values() if s["state"] == "DONE")
+        detail = f"stages={done}/{len(st['stages'])}"
+    elif v["kind"] == "RecurringJob":
+        detail = f"runs={st['runs']} skipped={st['skipped']}"
+    else:
+        detail = (f"ready={len(st['ready_slots'])}/"
+                  f"{v['spec']['replicas']}")
+    return (f"{v['kind']:13s} {v['tenant']:12s} {v['name']:20s} "
+            f"{st['phase']:10s} gen={v['generation']:<3d} {detail}")
+
+
+def cmd_workloads_list(args) -> int:
+    for v in _workloads(args).list(tenant=args.tenant):
+        print(_workload_row(v))
+    return 0
+
+
+def cmd_workloads_get(args) -> int:
+    _print_json(_workloads(args).get(args.name, tenant=args.tenant))
+    return 0
+
+
+def cmd_workloads_delete(args) -> int:
+    view = _workloads(args).delete(args.name, tenant=args.tenant)
+    print(f"{view['kind'].lower()}/{view['name']} deleted")
+    return 0
+
+
+def cmd_workloads_invoke(args) -> int:
+    payload = json.loads(args.payload) if args.payload else None
+    _print_json(_workloads(args).invoke(args.name, payload=payload,
+                                        tenant=args.tenant))
+    return 0
+
+
 # --------------------------------------------------------------------------
 # Parser
 # --------------------------------------------------------------------------
@@ -592,6 +646,37 @@ def build_parser() -> argparse.ArgumentParser:
                    help="poll until done/halted")
     s.add_argument("--timeout", type=float, default=120.0)
     s.set_defaults(fn=cmd_admin_rollout)
+
+    # v2 workloads plane (tenant- or admin-keyed)
+    s = sub.add_parser("apply",
+                       help="POST /v2/workloads (apply a Pipeline / "
+                            "RecurringJob / Service manifest)")
+    s.add_argument("-f", "--file", required=True,
+                   help="manifest file (JSON or YAML subset); '-' = stdin")
+    s.set_defaults(fn=cmd_apply)
+
+    wl = sub.add_parser("workloads", help="v2 workloads plane resources")
+    wsub = wl.add_subparsers(dest="workloads_cmd", required=True)
+    s = wsub.add_parser("list", help="GET /v2/workloads")
+    s.add_argument("--tenant", help="admin keys: which tenant "
+                                    "(omit for all)")
+    s.set_defaults(fn=cmd_workloads_list)
+    s = wsub.add_parser("get", help="GET /v2/workloads/{name}")
+    s.add_argument("name")
+    s.add_argument("--tenant", help="admin keys must pass this")
+    s.set_defaults(fn=cmd_workloads_get)
+    s = wsub.add_parser("delete", help="DELETE /v2/workloads/{name} "
+                                       "(cascades + cancels)")
+    s.add_argument("name")
+    s.add_argument("--tenant", help="admin keys must pass this")
+    s.set_defaults(fn=cmd_workloads_delete)
+    s = wsub.add_parser("invoke",
+                        help="POST /v2/workloads/{name}/invoke (one "
+                             "inference request against a Service)")
+    s.add_argument("name")
+    s.add_argument("--payload", help="JSON request payload")
+    s.add_argument("--tenant", help="admin keys must pass this")
+    s.set_defaults(fn=cmd_workloads_invoke)
     return ap
 
 

@@ -353,3 +353,53 @@ class AdminClient:
         """Start a GUARD-style rolling shard upgrade to ``version``."""
         return self.transport.start_rollout(self.api_key,
                                             {"version": version})
+
+
+class WorkloadClient:
+    """Convenience client for the v2 workloads plane (tenant- or
+    admin-keyed).
+
+    ``transport`` is anything exposing the five workload verbs with
+    ``(api_key, ...)`` signatures: the in-process
+    :class:`~repro.workloads.plane.WorkloadGateway`
+    (``platform.workloads_api`` / ``federation.workloads_api``) or an
+    :class:`~repro.api.http.HttpTransport`. Verbs return the wire dicts
+    verbatim (``"api_version": "v2"`` envelopes).
+    """
+
+    def __init__(self, transport, api_key: str):
+        self.transport = transport
+        self.api_key = api_key
+
+    @classmethod
+    def for_platform(cls, platform, tenant: Optional[str] = None
+                     ) -> "WorkloadClient":
+        """Bind to the platform's (or federation's) in-process workloads
+        gateway: a tenant key when ``tenant`` is given, else an admin
+        key."""
+        key = (platform.auth.issue_key(tenant) if tenant is not None
+               else platform.auth.issue_admin_key())
+        return cls(platform.workloads_api, key)
+
+    def apply(self, manifest) -> dict:
+        """Apply one manifest: a dict, or JSON / YAML-subset text."""
+        return self.transport.apply(self.api_key, manifest)
+
+    def get(self, name: str, tenant: Optional[str] = None) -> dict:
+        return self.transport.get_workload(self.api_key, name,
+                                           tenant=tenant)
+
+    def list(self, tenant: Optional[str] = None) -> list:
+        return self.transport.list_workloads(self.api_key,
+                                             tenant=tenant)["items"]
+
+    def delete(self, name: str, tenant: Optional[str] = None) -> dict:
+        return self.transport.delete_workload(self.api_key, name,
+                                              tenant=tenant)
+
+    def invoke(self, name: str, payload=None,
+               tenant: Optional[str] = None) -> dict:
+        """One inference request against a RUNNING Service."""
+        return self.transport.invoke_workload(self.api_key, name,
+                                              payload=payload,
+                                              tenant=tenant)

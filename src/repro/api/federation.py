@@ -82,6 +82,13 @@ class Federation:
         self.admin_api = AdminGateway(self.admin, self.auth)
         # autonomous operator (repro.api.ops.install_operator attaches one)
         self.operator = None
+        # v2 workloads plane: declarative manifests + the reconciler that
+        # converges them once per tick (after admin.advance/operator.step)
+        from repro.workloads import (WorkloadGateway, WorkloadPlane,
+                                     WorkloadReconciler)
+        self.workloads = WorkloadPlane(self.router, self.auth)
+        self.workloads_api = WorkloadGateway(self.workloads, self.auth)
+        self.reconciler = WorkloadReconciler(self, self.workloads)
 
     # -- routing ----------------------------------------------------------
     def pin(self, tenant: str, shard_id: str):
@@ -150,7 +157,8 @@ class Federation:
         """One round on every live shard, each under its OWN write lock —
         reads on other shards are never blocked by this shard's tick.
         Live tenant migrations advance one phase per round afterwards,
-        then the autonomous operator (when installed) reconciles once."""
+        then the autonomous operator (when installed) reconciles once,
+        then the workloads reconciler converges applied manifests."""
         for backend in self.backends:
             if not backend.alive or backend.retired:
                 continue
@@ -159,6 +167,7 @@ class Federation:
         self.admin.advance()
         if self.operator is not None:
             self.operator.step()
+        self.reconciler.step()
 
     def run_for(self, sim_seconds: float):
         n = int(sim_seconds / self.shards[0].tick_period)

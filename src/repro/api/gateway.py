@@ -57,7 +57,13 @@ from repro.api.types import (
     SubmitResponse,
     check_version,
 )
-from repro.core.types import JobStatus, TERMINAL, gang_chips
+from repro.core.types import (
+    TRAIN_SPEC_FIELDS,
+    JobStatus,
+    TERMINAL,
+    gang_chips,
+    unknown_spec_fields,
+)
 from repro.obs import UsageMeter, event_to_wire
 
 DEFAULT_PAGE = 20
@@ -294,6 +300,14 @@ class ApiGateway:
                            f"submit as {m.tenant!r}")
         if m.n_learners < 1 or m.chips_per_learner < 0:
             raise ApiError(ErrorCode.INVALID_ARGUMENT, "invalid manifest")
+        # Spec hygiene: an unknown train key would be silently ignored by
+        # the learner runtime — reject it here (both transports funnel
+        # through this verb) so manifest typos can't mask themselves.
+        bad = unknown_spec_fields(m)
+        if bad:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"unknown train spec fields: {bad} "
+                           f"(known: {list(TRAIN_SPEC_FIELDS)})")
         # about to create records: if the tenant's hash shard is cordoned,
         # make the reroute sticky so an uncordon can't orphan the records
         self.router.pin_for_write(m.tenant)

@@ -180,6 +180,17 @@ ADMIN_ROUTES = (
     ("POST", "/v2/admin/operator/rollout"),
 )
 
+# The v2 workloads plane (docs/api.md is checked against this too).
+# Tenant-scoped, unlike /v2/admin: a tenant key addresses its own
+# workloads, an admin key anyone's (with ?tenant=).
+WORKLOAD_ROUTES = (
+    ("POST", "/v2/workloads"),
+    ("GET", "/v2/workloads"),
+    ("GET", "/v2/workloads/{name}"),
+    ("DELETE", "/v2/workloads/{name}"),
+    ("POST", "/v2/workloads/{name}/invoke"),
+)
+
 # The observability plane (docs/api.md is checked against this as well).
 OBS_ROUTES = (
     ("GET", "/metrics"),
@@ -335,12 +346,14 @@ class _Handler(BaseHTTPRequestHandler):
     # -- routing ----------------------------------------------------------
     @staticmethod
     def _match_route(method: str, parts: list) -> Optional[str]:
-        """ROUTES/ADMIN_ROUTES/OBS_ROUTES are the authoritative tables:
-        anything they don't name is a 404 *before* auth, so probing the
-        route space needs no credential and a typo'd URL isn't misreported
-        as an auth failure. Returns the matched ``"METHOD /template"`` —
-        the label request metrics aggregate under — or None."""
-        for m, template in ROUTES + ADMIN_ROUTES + OBS_ROUTES:
+        """ROUTES/ADMIN_ROUTES/WORKLOAD_ROUTES/OBS_ROUTES are the
+        authoritative tables: anything they don't name is a 404 *before*
+        auth, so probing the route space needs no credential and a typo'd
+        URL isn't misreported as an auth failure. Returns the matched
+        ``"METHOD /template"`` — the label request metrics aggregate
+        under — or None."""
+        for m, template in ROUTES + ADMIN_ROUTES + WORKLOAD_ROUTES \
+                + OBS_ROUTES:
             t_parts = [p for p in template.split("/") if p]
             if m == method and len(t_parts) == len(parts) and all(
                     tp.startswith("{") or tp == pp
@@ -369,6 +382,8 @@ class _Handler(BaseHTTPRequestHandler):
 
         if parts[:2] == ["v2", "admin"]:
             return self._admin_route(method, parts[2:], key)
+        if parts[:2] == ["v2", "workloads"]:
+            return self._workload_route(method, parts[2:], key, qs)
         if method == "GET" and parts == ["v1", "usage"]:
             out = api.usage(key, tenant=qs.get("tenant", [None])[0])
             return self._send_json(200, {"api_version": API_VERSION, **out})
@@ -758,6 +773,51 @@ class _Handler(BaseHTTPRequestHandler):
         raise ApiError(ErrorCode.NOT_FOUND,
                        f"no route for {method} /v2/admin/{'/'.join(tail)}")
 
+    def _workload_route(self, method: str, tail: list, key: str, qs: dict):
+        """The v2 workloads plane: declarative manifests as resources
+        over the shared WorkloadGateway (``platform.workloads_api``).
+        This is *tenant* traffic — including the serving tier's data
+        path (``…/invoke``) — so it rides the same per-tenant token
+        buckets as v1: a flooding tenant 429s here while other tenants'
+        requests (and admin keys) are untouched. That is the serving
+        tier's per-tenant QoS."""
+        if self.ctx.ratelimiter is not None:
+            self.ctx.ratelimiter.throttle_non_admin(key)
+        wl = self.ctx.platform.workloads_api
+        tenant = qs.get("tenant", [None])[0]
+        if not tail:
+            if method == "POST":
+                body = self._json_body()
+                manifest = body.get("manifest_text", body.get("manifest"))
+                if manifest is None:
+                    raise ApiError(
+                        ErrorCode.INVALID_ARGUMENT,
+                        "body must carry 'manifest' (object) or "
+                        "'manifest_text' (JSON/YAML-subset string)")
+                view = wl.apply(key, manifest)
+                return self._send_json(201 if view["created"] else 200,
+                                       view)
+            if method == "GET":
+                return self._send_json(
+                    200, wl.list_workloads(key, tenant=tenant))
+        elif len(tail) == 1:
+            name = tail[0]
+            if method == "GET":
+                return self._send_json(
+                    200, wl.get_workload(key, name, tenant=tenant))
+            if method == "DELETE":
+                return self._send_json(
+                    200, wl.delete_workload(key, name, tenant=tenant))
+        elif len(tail) == 2 and tail[1] == "invoke" and method == "POST":
+            body = self._json_body()
+            return self._send_json(
+                200, wl.invoke_workload(key, tail[0],
+                                        payload=body.get("payload"),
+                                        tenant=tenant))
+        raise ApiError(
+            ErrorCode.NOT_FOUND,
+            f"no route for {method} /v2/workloads/{'/'.join(tail)}")
+
     def _submit(self, api, key: str):
         body = self._json_body()
         if "manifest" not in body:
@@ -1025,6 +1085,11 @@ class ApiHttpServer:
             ("ffdl_tenant_log_bytes_total", "counter",
              "Log bytes indexed per tenant",
              [({"tenant": t}, row["log_bytes"])
+              for t, row in sorted(usage.items())]),
+            ("ffdl_tenant_serving_replica_seconds_total", "counter",
+             "Ready inference-replica seconds per tenant (workloads "
+             "serving tier)",
+             [({"tenant": t}, row["serving_replica_seconds"])
               for t, row in sorted(usage.items())]),
         ]
 
@@ -1406,3 +1471,30 @@ class HttpTransport:
     def start_rollout(self, api_key, body: dict) -> dict:
         return self._request("POST", "/v2/admin/operator/rollout", api_key,
                              body=body)[1]
+
+    # -- v2 workloads plane -----------------------------------------------
+    # Same method names/signatures as the in-process WorkloadGateway, so
+    # WorkloadClient (repro.api.client) works over either transport.
+    def apply(self, api_key, manifest) -> dict:
+        body = ({"manifest_text": manifest} if isinstance(manifest, str)
+                else {"manifest": manifest})
+        return self._request("POST", "/v2/workloads", api_key,
+                             body=body)[1]
+
+    def get_workload(self, api_key, name: str, tenant=None) -> dict:
+        return self._request("GET", f"/v2/workloads/{name}", api_key,
+                             query={"tenant": tenant})[1]
+
+    def list_workloads(self, api_key, tenant=None) -> dict:
+        return self._request("GET", "/v2/workloads", api_key,
+                             query={"tenant": tenant})[1]
+
+    def delete_workload(self, api_key, name: str, tenant=None) -> dict:
+        return self._request("DELETE", f"/v2/workloads/{name}", api_key,
+                             query={"tenant": tenant})[1]
+
+    def invoke_workload(self, api_key, name: str, payload=None,
+                        tenant=None) -> dict:
+        return self._request("POST", f"/v2/workloads/{name}/invoke",
+                             api_key, query={"tenant": tenant},
+                             body={"payload": payload})[1]

@@ -6,6 +6,7 @@
 # it eagerly here would close that loop into a cycle.
 from repro.core.chaos import ChaosConfig, ChaosMonkey
 from repro.core.types import (
+    TRAIN_SPEC_FIELDS,
     EventLog,
     JobManifest,
     JobRecord,
@@ -14,6 +15,7 @@ from repro.core.types import (
     PodPhase,
     SimClock,
     WallClock,
+    unknown_spec_fields,
 )
 
 __all__ = [
@@ -27,7 +29,9 @@ __all__ = [
     "Pod",
     "PodPhase",
     "SimClock",
+    "TRAIN_SPEC_FIELDS",
     "WallClock",
+    "unknown_spec_fields",
 ]
 
 

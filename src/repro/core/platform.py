@@ -141,6 +141,13 @@ class FfDLPlatform:
         from repro.api.admin import AdminGateway, AdminPlane
         self.admin = AdminPlane(self.router, self.auth)
         self.admin_api = AdminGateway(self.admin, self.auth)
+        # v2 workloads plane (repro.workloads): manifests are storable and
+        # wire-addressable on a standalone platform, but convergence is a
+        # Federation concern — Federation.tick steps the reconciler, like
+        # migrations only advance under a Federation.
+        from repro.workloads import WorkloadGateway, WorkloadPlane
+        self.workloads = WorkloadPlane(self.router, self.auth)
+        self.workloads_api = WorkloadGateway(self.workloads, self.auth)
 
     # ------------------------------------------------- API tier lifecycle
     @property

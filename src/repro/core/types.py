@@ -103,6 +103,23 @@ class PodPhase(str, Enum):
     DELETED = "Deleted"
 
 
+# The pinned ``train:`` sub-spec vocabulary — exactly the keys the learner
+# runtime consumes (core/executor.py). The v1 submit path rejects anything
+# else with INVALID_ARGUMENT instead of silently ignoring it, so a typo in
+# a manifest-derived spec ("step" for "steps") surfaces at submit time
+# rather than as a job that trains with defaults. Pinned in docs/api.md.
+TRAIN_SPEC_FIELDS = ("tiny", "overrides", "steps", "lr", "warmup",
+                     "seq", "batch", "seed")
+
+
+def unknown_spec_fields(m: "JobManifest") -> list:
+    """Typo'd keys in the manifest's ``train`` sub-spec (sorted), or a
+    one-element sentinel when ``train`` is not a mapping at all."""
+    if not isinstance(m.train, dict):
+        return ["train (must be a mapping)"]
+    return sorted(set(m.train) - set(TRAIN_SPEC_FIELDS))
+
+
 @dataclass
 class JobManifest:
     """What the user submits — FfDL's 'natural language job description':

@@ -69,6 +69,14 @@ PLATFORM_EVENT_KINDS = (
     "operator_scale_up", "operator_scale_down", "operator_isolate_tenant",
     "operator_rollout_wave", "operator_rollout_done",
     "operator_rollout_halted", "operator_rollback",
+    # declarative workloads (repro.workloads: plane apply/delete plus
+    # every reconciler act — pipelines, recurring jobs, serving tier)
+    "workload_applied", "workload_deleted",
+    "workload_stage_submitted", "workload_stage_failed",
+    "workload_pipeline_done", "workload_pipeline_degraded",
+    "workload_recurring_run", "workload_recurring_skipped",
+    "workload_service_scaled", "workload_service_ready",
+    "workload_service_degraded",
 )
 
 

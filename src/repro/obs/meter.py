@@ -27,8 +27,12 @@ import threading
 from typing import Dict, Iterable, Optional
 
 # The pinned usage-resource field vocabulary (docs/api.md).
+# serving_replica_seconds: ready inference replicas × tick_period,
+# accrued by the workloads reconciler at the same cadence chip_seconds
+# accrue (a replica that is up but not yet ready bills chips, not this).
 USAGE_FIELDS = ("chip_seconds", "jobs_submitted", "jobs_completed",
-                "jobs_failed", "log_bytes", "throttled_429s")
+                "jobs_failed", "log_bytes", "throttled_429s",
+                "serving_replica_seconds")
 
 # event kind → usage field, for the bus tap
 _KIND_FIELD = {

@@ -46,6 +46,7 @@ METRIC_NAMES = (
     "ffdl_tenant_chip_seconds_total",
     "ffdl_tenant_jobs_total",
     "ffdl_tenant_log_bytes_total",
+    "ffdl_tenant_serving_replica_seconds_total",
 )
 
 

@@ -6,7 +6,14 @@ code→HTTP-status table must match `repro.api.http`.
 import pathlib
 import re
 
-from repro.api import ADMIN_ROUTES, ErrorCode, OBS_ROUTES, ROUTES, STATUS_OF
+from repro.api import (
+    ADMIN_ROUTES,
+    ErrorCode,
+    OBS_ROUTES,
+    ROUTES,
+    STATUS_OF,
+    WORKLOAD_ROUTES,
+)
 
 DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
 ARCH = DOCS.parent / "architecture.md"
@@ -47,7 +54,8 @@ def test_no_phantom_routes_documented():
     doc = _api_md()
     advertised = set(re.findall(
         r"`(GET|POST|PUT|PATCH|DELETE) (/v[12]/[^` ]*)`", doc))
-    known = set(ROUTES) | set(ADMIN_ROUTES) | set(OBS_ROUTES)
+    known = set(ROUTES) | set(ADMIN_ROUTES) | set(OBS_ROUTES) | \
+        set(WORKLOAD_ROUTES)
     assert advertised <= known, advertised - known
 
 
@@ -208,6 +216,67 @@ def test_operator_contract_documented_and_real():
                  "high_water", "low_water", "heat_window", "validate_ticks",
                  "min_shards", "BENCH_operator.json", "add_shard"):
         assert term in arch, f"{term!r} missing from operator section"
+
+
+def test_workloads_contract_documented_and_real():
+    """The declarative-workloads surface (tentpole) must be documented
+    and must name only machinery that exists: every /v2/workloads route,
+    the manifest kinds and their state machines, the workload event
+    kinds, the strict train-spec vocabulary, and the architecture
+    section describing the reconciler."""
+    from repro.api import HttpTransport, WorkloadClient
+    from repro.core.types import TRAIN_SPEC_FIELDS
+    from repro.launch.serve import ServeEngine
+    from repro.workloads import (
+        OVERLAP_POLICIES,
+        STAGE_TERMINAL,
+        WORKLOAD_EVENT_KINDS,
+        WORKLOAD_KINDS,
+        ReconcilerPolicy,
+        WorkloadGateway,
+        WorkloadPlane,
+        WorkloadReconciler,
+    )
+    doc = _api_md()
+    for method, path in WORKLOAD_ROUTES:
+        assert re.search(rf"`{method} {re.escape(path)}`", doc), \
+            f"route {method} {path} missing from docs/api.md"
+    for kind in WORKLOAD_KINDS:
+        assert f"`{kind}`" in doc, f"kind {kind!r} missing from docs/api.md"
+    for kind in WORKLOAD_EVENT_KINDS:
+        assert kind in doc, f"event kind {kind!r} missing from docs/api.md"
+    # stage / overlap vocabularies are wire contract (status blocks)
+    for state in STAGE_TERMINAL:
+        assert f"`{state}`" in doc, f"stage state {state!r} undocumented"
+    for policy in OVERLAP_POLICIES:
+        assert f"`{policy}`" in doc, f"overlap {policy!r} undocumented"
+    # the strict train-spec vocabulary (wire-hygiene satellite) is pinned
+    # by name: the docs list TRAIN_SPEC_FIELDS and every field in it
+    assert "TRAIN_SPEC_FIELDS" in doc
+    for field in TRAIN_SPEC_FIELDS:
+        assert f"`{field}`" in doc, f"train field {field!r} undocumented"
+    # ... and the named surfaces actually exist
+    for name in ("apply", "get_workload", "list_workloads",
+                 "delete_workload", "invoke_workload"):
+        assert hasattr(WorkloadGateway, name)
+        assert hasattr(HttpTransport, name)
+    for name in ("apply", "get", "list", "delete", "invoke"):
+        assert hasattr(WorkloadClient, name)
+    for name in ("apply", "delete", "invoke", "attach_engine"):
+        assert hasattr(WorkloadPlane, name)
+    for name in ("step", "journal", "status_view"):
+        assert hasattr(WorkloadReconciler, name)
+    assert hasattr(ReconcilerPolicy, "decide")
+    for name in ("generate", "infer"):
+        assert hasattr(ServeEngine, name)
+    arch = ARCH.read_text()
+    assert "## Declarative workloads" in arch
+    for term in ("workloads/manifest.py", "workloads/plane.py",
+                 "workloads/reconciler.py", "launch/serve.py",
+                 "ReconcilerPolicy", "replica_sim_duration",
+                 "serving_replica_seconds", "ServeEngine",
+                 "BENCH_serving.json", "ffdl apply"):
+        assert term in arch, f"{term!r} missing from workloads section"
 
 
 def test_architecture_doc_maps_api_modules():

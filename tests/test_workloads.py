@@ -1,0 +1,775 @@
+"""Declarative workloads (repro.workloads): manifest parsing/validation,
+the /v2/workloads plane + gateway auth scoping, and the reconciler —
+pipeline DAG convergence with chaos-kill retries, recurring schedules with
+overlap policies, the multi-tenant serving tier (scale, heal, meter,
+invoke), plus the determinism/idempotence properties the reconciler pins
+(same harness as tests/test_operator.py).
+"""
+
+import copy
+import json
+import random
+import threading
+
+import pytest
+
+from repro.api import (
+    ApiClient,
+    ApiError,
+    ApiHttpServer,
+    ErrorCode,
+    Federation,
+    HttpTransport,
+)
+from repro.api.client import WorkloadClient
+from repro.api.http import RateLimitConfig
+from repro.core import JobManifest
+from repro.obs.bus import PLATFORM_EVENT_KINDS
+from repro.obs.meter import USAGE_FIELDS
+from repro.workloads import (
+    WORKLOAD_EVENT_KINDS,
+    ReconcilerConfig,
+    ReconcilerPolicy,
+    parse_manifest_text,
+    parse_yaml,
+    validate_workload,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _propstrat import given, settings, st
+
+
+# --------------------------------------------------------------- helpers
+
+def job_spec(**kw):
+    """An embedded v1 job spec (dict form, tenant inherited)."""
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 5)
+    return kw
+
+
+def fast_fed(**kw):
+    """tick_period=5.0 federation: replicas pass the fixed 30 s data
+    stage in ~6 ticks instead of ~30, so convergence tests stay quick."""
+    kw.setdefault("n_shards", 2)
+    kw.setdefault("n_hosts", 2)
+    kw.setdefault("chips_per_host", 4)
+    kw.setdefault("tick_period", 5.0)
+    return Federation(**kw)
+
+
+def converge(fed, pred, max_ticks=120):
+    for _ in range(max_ticks):
+        fed.tick()
+        if pred():
+            return True
+    return False
+
+
+def event_count(fed, kind):
+    return sum(p.events.count(kind) for p in fed.shards
+               if p.backend.alive)
+
+
+PIPELINE_YAML = """\
+kind: Pipeline
+name: lm-pipe
+tenant: team-a
+stages:
+  - name: train          # comments are stripped
+    job:
+      n_learners: 1
+      chips_per_learner: 1
+      sim_duration: 5
+      train:
+        tiny: true
+        steps: 2
+  - name: eval
+    after: [train]
+    retries: 1
+    job:
+      n_learners: 1
+      chips_per_learner: 1
+      sim_duration: 5
+  - name: serve
+    after: [eval]
+    service:
+      replicas: 1
+      chips_per_replica: 1
+      arch: smollm-360m
+"""
+
+
+# ------------------------------------------------- YAML subset + parsing
+
+def test_yaml_subset_parses_nested_manifest():
+    d = parse_yaml(PIPELINE_YAML)
+    assert d["kind"] == "Pipeline" and d["tenant"] == "team-a"
+    assert [s["name"] for s in d["stages"]] == ["train", "eval", "serve"]
+    assert d["stages"][1]["after"] == ["train"]          # flow list
+    assert d["stages"][0]["job"]["sim_duration"] == 5    # int inference
+    assert d["stages"][0]["job"]["train"]["tiny"] is True
+
+
+def test_yaml_scalar_inference():
+    d = parse_yaml("a: 3\nb: 2.5\nc: true\nd: null\ne: 'quoted'\n"
+                   'f: "two words"\ng: plain\nh: []\n')
+    assert d == {"a": 3, "b": 2.5, "c": True, "d": None, "e": "quoted",
+                 "f": "two words", "g": "plain", "h": []}
+
+
+@pytest.mark.parametrize("text,fragment", [
+    ("a:\tb", "tabs"),
+    ("a: 1\n  b: 2", "indent"),
+    ("just a scalar line", "key: value"),
+    ("a: [1, [2]]", "nested flow"),
+    ("a: 1\na: 2", "duplicate key"),
+    ("", "empty manifest"),
+])
+def test_yaml_subset_refuses_instead_of_guessing(text, fragment):
+    with pytest.raises(ApiError) as e:
+        parse_yaml(text) if text else parse_manifest_text(text)
+    assert e.value.code == ErrorCode.INVALID_ARGUMENT
+    assert fragment in str(e.value)
+
+
+def test_manifest_text_accepts_json_too():
+    d = parse_manifest_text(json.dumps(
+        {"kind": "Service", "name": "s", "tenant": "t", "replicas": 2}))
+    assert d["replicas"] == 2
+    with pytest.raises(ApiError):
+        parse_manifest_text("{not json")
+
+
+# ------------------------------------------------------------ validation
+
+@pytest.mark.parametrize("manifest,fragment", [
+    ({"kind": "Deployment", "name": "x", "tenant": "t"}, "kind"),
+    ({"kind": "Service", "name": "x", "tenant": "t", "replica": 1},
+     "unknown Service fields"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t", "stages": []},
+     "non-empty"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t",
+      "stages": [{"name": "a", "job": job_spec()},
+                 {"name": "a", "job": job_spec()}]}, "duplicate stage"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t",
+      "stages": [{"name": "a", "after": ["ghost"], "job": job_spec()}]},
+     "unknown stages"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t",
+      "stages": [{"name": "a", "after": ["b"], "job": job_spec()},
+                 {"name": "b", "after": ["a"], "job": job_spec()}]},
+     "cycle"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t",
+      "stages": [{"name": "a"}]}, "exactly one of"),
+    ({"kind": "Pipeline", "name": "x", "tenant": "t",
+      "stages": [{"name": "a", "job": job_spec(), "service": {}}]},
+     "exactly one of"),
+    ({"kind": "RecurringJob", "name": "x", "tenant": "t",
+      "job": job_spec()}, "every_ticks"),
+    ({"kind": "RecurringJob", "name": "x", "tenant": "t",
+      "job": job_spec(), "every_ticks": 2, "overlap": "queue"},
+     "overlap"),
+    ({"kind": "Service", "name": "x", "tenant": "t", "engine": "gpu"},
+     "engine"),
+])
+def test_validation_rejects_with_invalid_argument(manifest, fragment):
+    with pytest.raises(ApiError) as e:
+        validate_workload(manifest)
+    assert e.value.code == ErrorCode.INVALID_ARGUMENT
+    assert fragment in str(e.value)
+
+
+def test_embedded_job_specs_are_strict_like_v1_submit():
+    """Unknown JobManifest fields and unknown train: keys fail the whole
+    apply before anything runs (the wire-hygiene satellite, applied at
+    the manifest layer)."""
+    bad_job = {"kind": "RecurringJob", "name": "x", "tenant": "t",
+               "every_ticks": 2, "job": job_spec(sim_durration=9)}
+    with pytest.raises(ApiError) as e:
+        validate_workload(bad_job)
+    assert "sim_durration" in str(e.value)
+    bad_train = {"kind": "RecurringJob", "name": "x", "tenant": "t",
+                 "every_ticks": 2,
+                 "job": job_spec(train={"step": 10})}
+    with pytest.raises(ApiError) as e:
+        validate_workload(bad_train)
+    assert "step" in str(e.value) and "tiny" in str(e.value)
+
+
+def test_v1_submit_rejects_unknown_train_fields():
+    """The same hygiene on the v1 door itself: a typo'd train spec is
+    INVALID_ARGUMENT at submit, not silently ignored (docs/api.md pins
+    TRAIN_SPEC_FIELDS as the vocabulary)."""
+    fed = Federation(n_shards=1)
+    client = ApiClient(fed.api, fed.auth.issue_key("team-a"))
+    with pytest.raises(ApiError) as e:
+        client.submit(JobManifest(name="typo", tenant="team-a",
+                                  n_learners=1, chips_per_learner=1,
+                                  train={"learning_rate": 1e-3}))
+    assert e.value.code == ErrorCode.INVALID_ARGUMENT
+    assert "learning_rate" in str(e.value)
+    # the legal vocabulary still passes
+    client.submit(JobManifest(name="ok", tenant="team-a", n_learners=1,
+                              chips_per_learner=1,
+                              train={"tiny": True, "steps": 2}))
+
+
+# ------------------------------------------------- plane + gateway auth
+
+def test_tenant_scoping_on_the_workloads_gateway():
+    fed = Federation(n_shards=1)
+    wl = fed.workloads_api
+    a_key = fed.auth.issue_key("team-a")
+    b_key = fed.auth.issue_key("team-b")
+    admin = fed.auth.issue_admin_key()
+    svc = {"kind": "Service", "name": "svc", "tenant": "team-a",
+           "replicas": 1}
+    # a tenant key cannot apply for another tenant
+    with pytest.raises(ApiError) as e:
+        wl.apply(b_key, svc)
+    assert e.value.code == ErrorCode.FORBIDDEN
+    view = wl.apply(a_key, svc)
+    assert view["created"] and view["generation"] == 1
+    # reads: own tenant implied; someone else's is FORBIDDEN
+    assert wl.get_workload(a_key, "svc")["kind"] == "Service"
+    with pytest.raises(ApiError) as e:
+        wl.get_workload(b_key, "svc", tenant="team-a")
+    assert e.value.code == ErrorCode.FORBIDDEN
+    # admin keys must say which tenant (except list: None = all)
+    with pytest.raises(ApiError) as e:
+        wl.get_workload(admin, "svc")
+    assert e.value.code == ErrorCode.INVALID_ARGUMENT
+    assert wl.get_workload(admin, "svc", tenant="team-a")["name"] == "svc"
+    assert len(wl.list_workloads(admin)["items"]) == 1
+    assert wl.list_workloads(b_key)["items"] == []
+    # unknown resource is NOT_FOUND, kind flips are CONFLICT
+    with pytest.raises(ApiError) as e:
+        wl.get_workload(a_key, "ghost")
+    assert e.value.code == ErrorCode.NOT_FOUND
+    with pytest.raises(ApiError) as e:
+        wl.apply(a_key, {"kind": "RecurringJob", "name": "svc",
+                         "tenant": "team-a", "every_ticks": 2,
+                         "job": job_spec()})
+    assert e.value.code == ErrorCode.CONFLICT
+
+
+def test_apply_is_idempotent_and_generation_tracks_changes():
+    fed = Federation(n_shards=1)
+    key = fed.auth.issue_key("team-a")
+    svc = {"kind": "Service", "name": "svc", "tenant": "team-a",
+           "replicas": 2}
+    v1 = fed.workloads_api.apply(key, svc)
+    applied_events = event_count(fed, "workload_applied")
+    v2 = fed.workloads_api.apply(key, dict(svc))
+    assert v1["created"] and not v2["created"]
+    assert v2["generation"] == 1
+    # an equal re-apply emits nothing; a changed spec bumps + emits
+    assert event_count(fed, "workload_applied") == applied_events
+    v3 = fed.workloads_api.apply(key, {**svc, "replicas": 3})
+    assert v3["generation"] == 2
+    assert event_count(fed, "workload_applied") == applied_events + 1
+
+
+# ---------------------------------------------------- serving tier
+
+def test_service_converges_heals_scales_and_meters():
+    """Apply replicas:2 → RUNNING; chaos-kill one replica job → the
+    reconciler replaces it and re-converges; scale down by re-applying
+    replicas:1; ready replicas accrue serving_replica_seconds."""
+    fed = fast_fed(pins={"team-a": "shard-0"})
+    key = fed.auth.issue_key("team-a")
+    admin = fed.auth.issue_admin_key()
+    wl = fed.workloads_api
+    wl.apply(key, {"kind": "Service", "name": "svc", "tenant": "team-a",
+                   "replicas": 2})
+
+    def phase():
+        return wl.get_workload(key, "svc")["status"]["phase"]
+
+    assert converge(fed, lambda: phase() == "RUNNING"), phase()
+    view = wl.get_workload(key, "svc")
+    assert view["status"]["ready_slots"] == ["0", "1"]
+    assert event_count(fed, "workload_service_ready") == 1
+    # steady state: the policy decides nothing at all
+    assert fed.reconciler.step() == []
+
+    # round-robin invoke alternates ready replicas
+    slots = [wl.invoke_workload(key, "svc")["replica"] for _ in range(4)]
+    assert slots == ["0", "1", "0", "1"]
+
+    # chaos: kill slot 0's replica job out from under the service
+    victim = view["status"]["replicas"]["0"]
+    ApiClient(fed.api, admin).cancel(victim)
+    assert converge(fed, lambda: phase() == "DEGRADED", max_ticks=3)
+    assert converge(fed, lambda: phase() == "RUNNING")
+    healed = wl.get_workload(key, "svc")
+    assert healed["status"]["replicas"]["0"] != victim
+    assert event_count(fed, "workload_service_degraded") >= 1
+
+    # metering: ready replicas billed per tick on the tenant's shard
+    meter = fed.router.shard_for("team-a").platform.meter
+    assert "serving_replica_seconds" in USAGE_FIELDS
+    assert meter.snapshot()["team-a"]["serving_replica_seconds"] > 0
+
+    # scale down via re-apply: slot 1 stopped, its job cancelled
+    doomed = healed["status"]["replicas"]["1"]
+    wl.apply(key, {"kind": "Service", "name": "svc", "tenant": "team-a",
+                   "replicas": 1})
+    assert converge(fed, lambda: wl.get_workload(key, "svc")["status"]
+                    ["ready_slots"] == ["0"])
+    assert "1" not in wl.get_workload(key, "svc")["status"]["replicas"]
+    rec = fed.router.shard_for("team-a").platform.meta.get(doomed)
+    assert rec.status.value == "FAILED"  # cancelled, chips released
+
+    # invoking a Pipeline (or a not-ready service) is FAILED_PRECONDITION
+    wl.apply(key, {"kind": "Service", "name": "cold", "tenant": "team-a",
+                   "replicas": 1})
+    with pytest.raises(ApiError) as e:
+        wl.invoke_workload(key, "cold")
+    assert e.value.code == ErrorCode.FAILED_PRECONDITION
+
+
+# ---------------------------------------------------- pipelines
+
+def test_pipeline_dag_converges_to_running_service():
+    """The acceptance drill: apply the YAML train→eval→serve manifest,
+    tick unattended, end with a SUCCEEDED pipeline whose materialized
+    child Service is RUNNING and invokable."""
+    fed = fast_fed()
+    key = fed.auth.issue_key("team-a")
+    wl = fed.workloads_api
+    view = wl.apply(key, PIPELINE_YAML)
+    assert view["created"] and view["kind"] == "Pipeline"
+
+    def pipe():
+        return wl.get_workload(key, "lm-pipe")
+
+    assert converge(fed, lambda: pipe()["status"]["phase"] == "SUCCEEDED",
+                    max_ticks=200), pipe()["status"]
+    st = pipe()["status"]
+    assert all(s["state"] == "DONE" for s in st["stages"].values())
+    # stages ran sequentially through the v1 gateway
+    assert st["stages"]["train"]["job"] and st["stages"]["eval"]["job"]
+    child = wl.get_workload(key, "lm-pipe-serve")
+    assert child["owner"] == "team-a/lm-pipe"
+    assert child["status"]["phase"] == "RUNNING"
+    out = wl.invoke_workload(key, "lm-pipe-serve", payload={"q": 1})
+    assert out["output"]["echo"] == {"q": 1} and out["replica"] == "0"
+    assert event_count(fed, "workload_pipeline_done") == 1
+    assert event_count(fed, "workload_stage_submitted") == 2
+
+    # delete cascades: child service removed, replica jobs cancelled
+    replica = child["status"]["replicas"]["0"]
+    wl.delete_workload(key, "lm-pipe")
+    assert wl.list_workloads(key)["items"] == []
+    rec = fed.router.shard_for("team-a").platform.meta.get(replica)
+    assert rec.status.value == "FAILED"
+
+
+def test_chaos_killed_stage_retries_then_degrades():
+    """Kill eval's job once → per-spec retry resubmits it. Kill every
+    attempt → the stage FAILs, its descendants SKIP, the pipeline is
+    DEGRADED (retries: 1 ⇒ exactly 2 attempts)."""
+    fed = fast_fed()
+    key = fed.auth.issue_key("team-a")
+    admin_client = ApiClient(fed.api, fed.auth.issue_admin_key())
+    wl = fed.workloads_api
+    wl.apply(key, PIPELINE_YAML)
+
+    def stage(name):
+        return wl.get_workload(key, "lm-pipe")["status"]["stages"][name]
+
+    def admitted(name):
+        """The stage's job has left PENDING (cancel needs a guardian)."""
+        job = stage(name)["job"]
+        if job is None:
+            return False
+        meta = fed.router.shard_for("team-a").platform.meta
+        return meta.get(job).status.value not in ("PENDING",)
+
+    assert converge(fed, lambda: stage("eval")["state"] == "RUNNING" and
+                    admitted("eval"), max_ticks=100)
+    first = stage("eval")["job"]
+    admin_client.cancel(first)
+    # retry: a new attempt with a fresh job id
+    assert converge(fed, lambda: stage("eval")["attempts"] == 2 and
+                    stage("eval")["job"] != first, max_ticks=10)
+    assert converge(fed, lambda: admitted("eval"), max_ticks=10)
+    admin_client.cancel(stage("eval")["job"])
+    assert converge(fed, lambda: wl.get_workload(key, "lm-pipe")
+                    ["status"]["phase"] == "DEGRADED", max_ticks=10)
+    st = wl.get_workload(key, "lm-pipe")["status"]["stages"]
+    assert st["eval"]["state"] == "FAILED"
+    assert st["serve"]["state"] == "SKIPPED"      # never materialized
+    assert st["train"]["state"] == "DONE"
+    with pytest.raises(ApiError) as e:
+        wl.get_workload(key, "lm-pipe-serve")
+    assert e.value.code == ErrorCode.NOT_FOUND
+    assert event_count(fed, "workload_pipeline_degraded") == 1
+    assert event_count(fed, "workload_stage_failed") == 1
+
+
+# ---------------------------------------------------- recurring jobs
+
+def test_recurring_skip_policy_and_max_runs():
+    """overlap: skip never stacks runs while one is live; max_runs
+    retires the resource to DONE once the last run drains."""
+    fed = fast_fed(n_shards=1)
+    key = fed.auth.issue_key("team-a")
+    wl = fed.workloads_api
+    wl.apply(key, {"kind": "RecurringJob", "name": "cron",
+                   "tenant": "team-a", "every_ticks": 2, "overlap": "skip",
+                   "max_runs": 2, "job": job_spec(sim_duration=5)})
+
+    def status():
+        return wl.get_workload(key, "cron")["status"]
+
+    assert converge(fed, lambda: status()["phase"] == "DONE",
+                    max_ticks=100), status()
+    st = status()
+    assert st["runs"] == 2
+    assert st["skipped"] >= 1            # due ticks while a run was live
+    assert len(st["jobs"]) <= 2
+    assert event_count(fed, "workload_recurring_run") == 2
+    assert event_count(fed, "workload_recurring_skipped") == st["skipped"]
+
+
+def test_recurring_replace_policy_cancels_the_previous_run():
+    fed = fast_fed(n_shards=1)
+    key = fed.auth.issue_key("team-a")
+    wl = fed.workloads_api
+    # runs effectively forever: every due tick must replace, not stack
+    wl.apply(key, {"kind": "RecurringJob", "name": "loop",
+                   "tenant": "team-a", "every_ticks": 3,
+                   "overlap": "replace", "job": job_spec(sim_duration=1e6)})
+    for _ in range(10):
+        fed.tick()
+    st = wl.get_workload(key, "loop")["status"]
+    assert st["runs"] >= 2
+    assert len(st["jobs"]) == 1          # only the replacement is tracked
+    client = ApiClient(fed.api, key)
+    live = [j for j in client.list_jobs(limit=50).items
+            if j.status not in ("COMPLETED", "FAILED")]
+    assert len(live) == 1                # replaced runs were cancelled
+
+
+# ---------------------------------------------------- HTTP + QoS
+
+def test_workloads_over_http_with_qos_isolation():
+    """The wire tier end-to-end: apply YAML text through WorkloadClient,
+    converge under a background ticker, invoke — while a flooding
+    tenant's invokes hit per-tenant 429s and the prod tenant stays
+    clean (the serving tier's QoS rides the existing rate limiter)."""
+    fed = fast_fed(pins={"prod": "shard-0", "flood": "shard-1"})
+    server = ApiHttpServer(
+        fed, rate_limit=RateLimitConfig(rate=1000.0, burst=2000),
+        per_tenant={"flood": RateLimitConfig(rate=1.0, burst=2)})
+    with server:
+        transport = HttpTransport(server.base_url)
+        prod = WorkloadClient(transport, fed.auth.issue_key("prod"))
+        flood = WorkloadClient(transport, fed.auth.issue_key("flood"))
+        for c, tenant in ((prod, "prod"), (flood, "flood")):
+            c.apply("kind: Service\nname: infer\n"
+                    f"tenant: {tenant}\nreplicas: 1\n")
+        stop = threading.Event()
+
+        def ticker():
+            while not stop.is_set():
+                fed.tick()
+
+        t = threading.Thread(target=ticker, daemon=True)
+        t.start()
+        try:
+            deadline = threading.Event()
+            for _ in range(600):
+                if prod.get("infer")["status"]["phase"] == "RUNNING":
+                    break
+                deadline.wait(0.02)
+            else:
+                pytest.fail("service never converged over HTTP")
+            # prod's QoS budget is untouched by the flooding tenant
+            flood_429 = 0
+            for _ in range(20):
+                assert prod.invoke("infer")["service"] == "infer"
+                try:
+                    flood.invoke("infer")
+                except ApiError as e:
+                    assert e.code == ErrorCode.RATE_LIMITED
+                    flood_429 += 1
+            assert flood_429 >= 10
+            assert [w["name"] for w in prod.list()] == ["infer"]
+            prod.delete("infer")
+            with pytest.raises(ApiError) as e:
+                prod.get("infer")
+            assert e.value.code == ErrorCode.NOT_FOUND
+        finally:
+            stop.set()
+            t.join(timeout=5)
+
+
+def test_http_rejects_cross_tenant_and_unknown_workload_routes():
+    fed = Federation(n_shards=1)
+    server = ApiHttpServer(fed)
+    with server:
+        transport = HttpTransport(server.base_url)
+        a = WorkloadClient(transport, fed.auth.issue_key("team-a"))
+        b = WorkloadClient(transport, fed.auth.issue_key("team-b"))
+        a.apply({"kind": "Service", "name": "svc", "tenant": "team-a"})
+        with pytest.raises(ApiError) as e:
+            b.apply({"kind": "Service", "name": "x", "tenant": "team-a"})
+        assert e.value.code == ErrorCode.FORBIDDEN
+        assert e.value.details["http_status"] == 403
+        with pytest.raises(ApiError) as e:
+            transport.get_workload(fed.auth.issue_key("team-b"),
+                                   "svc", tenant="team-a")
+        assert e.value.code == ErrorCode.FORBIDDEN
+        # malformed manifest over the wire is a 400
+        with pytest.raises(ApiError) as e:
+            a.apply("kind: Service\nname: x\ntenant: team-a\nbogus: 1\n")
+        assert e.value.code == ErrorCode.INVALID_ARGUMENT
+        assert e.value.details["http_status"] == 400
+
+
+# ---------------------------------------------------- event contract
+
+def test_workload_event_kinds_are_platform_event_kinds():
+    assert set(WORKLOAD_EVENT_KINDS) <= set(PLATFORM_EVENT_KINDS)
+    assert len(set(WORKLOAD_EVENT_KINDS)) == len(WORKLOAD_EVENT_KINDS)
+
+
+# ------------------------------------------------------- properties
+#
+# Same harness as tests/test_operator.py: a scripted observation trace
+# replayed under shuffled enumeration orders must journal identical
+# decisions — the reconciler's determinism contract.
+
+def _manifest(kind, name, tenant, spec_extra, status):
+    spec = {"kind": kind, "name": name, "tenant": tenant, **spec_extra}
+    return {"kind": kind, "name": name, "tenant": tenant,
+            "generation": 1, "spec": spec, "status": status}
+
+
+def _stage(name, after=(), retries=0, service=None):
+    s = {"name": name, "after": sorted(after), "retries": retries}
+    if service is not None:
+        s["service"] = service
+    else:
+        s["job"] = job_spec()
+    return s
+
+
+def _scripted_trace():
+    """Five observations exercising every decision family: stage submit /
+    retry / skip / done, pipeline done+degraded, recurring run / skip /
+    replace, replica start / stop / heal, service phase transitions."""
+    stages = [_stage("train", retries=1), _stage("eval", after=["train"]),
+              _stage("serve", after=["eval"],
+                     service={"replicas": 1, "chips_per_replica": 1,
+                              "engine": "sim", "tier": "paid"})]
+    pipe = lambda status: _manifest(
+        "Pipeline", "pipe", "team-a", {"stages": stages}, status)
+    svc = lambda status: _manifest(
+        "Service", "svc", "team-b",
+        {"replicas": 2, "chips_per_replica": 1, "engine": "sim",
+         "tier": "paid"}, status)
+    cron = lambda status: _manifest(
+        "RecurringJob", "cron", "team-a",
+        {"job": job_spec(), "every_ticks": 2, "overlap": "skip",
+         "max_runs": None}, status)
+    loop = lambda status: _manifest(
+        "RecurringJob", "loop", "team-c",
+        {"job": job_spec(), "every_ticks": 2, "overlap": "replace",
+         "max_runs": None}, status)
+
+    def pst(phase, **over):
+        sts = {n: {"state": "PENDING", "job": None, "attempts": 0,
+                   "service": None} for n in ("train", "eval", "serve")}
+        for n, (state, job, attempts) in over.items():
+            sts[n] = {"state": state, "job": job, "attempts": attempts,
+                      "service": None}
+        return {"phase": phase, "stages": sts}
+
+    return [
+        # t1: everything fresh — submits, first runs, replica starts
+        {"tick": 1, "jobs": {}, "completed": [], "failed": [],
+         "manifests": [
+             pipe(pst("PENDING")),
+             svc({"phase": "PENDING", "replicas": {}, "ready_slots": [],
+                  "round_robin": 0, "invocations": 0}),
+             cron({"phase": "ACTIVE", "runs": 0, "skipped": 0,
+                   "jobs": [], "last_run_tick": None}),
+             loop({"phase": "ACTIVE", "runs": 0, "skipped": 0,
+                   "jobs": [], "last_run_tick": None})]},
+        # t4: train live; one replica ready; due recurrings skip/replace
+        {"tick": 4,
+         "jobs": {"j-t": "PROCESSING", "r0": "PROCESSING",
+                  "r1": "PENDING", "c0": "PROCESSING",
+                  "l0": "PROCESSING"},
+         "completed": [], "failed": [],
+         "manifests": [
+             pipe(pst("RUNNING", train=("RUNNING", "j-t", 1))),
+             svc({"phase": "PENDING", "replicas": {"0": "r0", "1": "r1"},
+                  "ready_slots": [], "round_robin": 0, "invocations": 0}),
+             cron({"phase": "ACTIVE", "runs": 1, "skipped": 0,
+                   "jobs": ["c0"], "last_run_tick": 1}),
+             loop({"phase": "ACTIVE", "runs": 1, "skipped": 0,
+                   "jobs": ["l0"], "last_run_tick": 1})]},
+        # t7: train failed once → retry; both replicas ready → RUNNING
+        {"tick": 7,
+         "jobs": {"j-t": "FAILED", "r0": "PROCESSING",
+                  "r1": "PROCESSING", "c0": "PROCESSING",
+                  "l1": "PROCESSING"},
+         "completed": [], "failed": ["j-t"],
+         "manifests": [
+             pipe(pst("RUNNING", train=("RUNNING", "j-t", 1))),
+             svc({"phase": "PENDING", "replicas": {"0": "r0", "1": "r1"},
+                  "ready_slots": [], "round_robin": 0, "invocations": 0}),
+             cron({"phase": "ACTIVE", "runs": 1, "skipped": 1,
+                   "jobs": ["c0"], "last_run_tick": 4}),
+             loop({"phase": "ACTIVE", "runs": 2, "skipped": 0,
+                   "jobs": ["l1"], "last_run_tick": 4})]},
+        # t10: retry done → eval submits; replica 0 died → heal + degrade
+        {"tick": 10,
+         "jobs": {"j-t2": "COMPLETED", "r1": "PROCESSING",
+                  "c1": "PROCESSING", "l2": "PROCESSING"},
+         "completed": ["j-t2"], "failed": ["j-t", "r0"],
+         "manifests": [
+             pipe(pst("RUNNING", train=("RUNNING", "j-t2", 2))),
+             svc({"phase": "RUNNING", "replicas": {"0": "r0", "1": "r1"},
+                  "ready_slots": ["0", "1"], "round_robin": 3,
+                  "invocations": 3}),
+             cron({"phase": "ACTIVE", "runs": 2, "skipped": 1,
+                   "jobs": ["c1"], "last_run_tick": 9}),
+             loop({"phase": "ACTIVE", "runs": 3, "skipped": 0,
+                   "jobs": ["l2"], "last_run_tick": 9})]},
+        # t13: eval exhausted retries → FAILED, serve skipped, pipeline
+        # degraded; service scaled down to 2 with an extra slot to stop
+        {"tick": 13,
+         "jobs": {"j-e": "FAILED", "r1": "PROCESSING",
+                  "r2": "PROCESSING", "r3": "PROCESSING",
+                  "c1": "PROCESSING", "l2": "PROCESSING"},
+         "completed": ["j-t2"], "failed": ["j-e"],
+         "manifests": [
+             pipe(pst("RUNNING", train=("DONE", "j-t2", 2),
+                      eval=("RUNNING", "j-e", 1))),
+             svc({"phase": "DEGRADED",
+                  "replicas": {"0": "r2", "1": "r1", "2": "r3"},
+                  "ready_slots": ["1"], "round_robin": 3,
+                  "invocations": 3}),
+             cron({"phase": "ACTIVE", "runs": 2, "skipped": 1,
+                   "jobs": ["c1"], "last_run_tick": 12}),
+             loop({"phase": "ACTIVE", "runs": 3, "skipped": 0,
+                   "jobs": ["l2"], "last_run_tick": 12})]},
+        # t16: eval FAILED ⇒ serve (downstream) is skipped; everything
+        # else is steady (not due, replicas healthy) and decides nothing
+        {"tick": 16,
+         "jobs": {"r1": "PROCESSING", "r2": "PROCESSING",
+                  "c1": "PROCESSING", "l2": "PROCESSING"},
+         "completed": ["j-t2"], "failed": ["j-e"],
+         "manifests": [
+             pipe(pst("RUNNING", train=("DONE", "j-t2", 2),
+                      eval=("FAILED", "j-e", 1))),
+             svc({"phase": "RUNNING", "replicas": {"0": "r2", "1": "r1"},
+                  "ready_slots": ["0", "1"], "round_robin": 3,
+                  "invocations": 3}),
+             cron({"phase": "ACTIVE", "runs": 3, "skipped": 1,
+                   "jobs": ["c1"], "last_run_tick": 15}),
+             loop({"phase": "ACTIVE", "runs": 4, "skipped": 0,
+                   "jobs": ["l2"], "last_run_tick": 15})]},
+        # t19: every stage terminal, one FAILED ⇒ pipeline degraded
+        {"tick": 19,
+         "jobs": {"r1": "PROCESSING", "r2": "PROCESSING",
+                  "c1": "PROCESSING", "l2": "PROCESSING"},
+         "completed": ["j-t2"], "failed": ["j-e"],
+         "manifests": [
+             pipe(pst("RUNNING", train=("DONE", "j-t2", 2),
+                      eval=("FAILED", "j-e", 1),
+                      serve=("SKIPPED", None, 0))),
+             svc({"phase": "RUNNING", "replicas": {"0": "r2", "1": "r1"},
+                  "ready_slots": ["0", "1"], "round_robin": 3,
+                  "invocations": 3}),
+             cron({"phase": "ACTIVE", "runs": 3, "skipped": 1,
+                   "jobs": ["c1"], "last_run_tick": 18}),
+             loop({"phase": "ACTIVE", "runs": 4, "skipped": 0,
+                   "jobs": ["l2"], "last_run_tick": 18})]},
+    ]
+
+
+def _replay(seed):
+    """Run the scripted trace through a fresh policy with every
+    enumeration order shuffled by ``seed``; return the journal."""
+    rng = random.Random(seed)
+    policy = ReconcilerPolicy(ReconcilerConfig())
+    for obs in copy.deepcopy(_scripted_trace()):
+        rng.shuffle(obs["manifests"])
+        rng.shuffle(obs["completed"])
+        rng.shuffle(obs["failed"])
+        items = list(obs["jobs"].items())
+        rng.shuffle(items)
+        obs["jobs"] = dict(items)
+        for m in obs["manifests"]:
+            if m["kind"] == "Service":
+                reps = list(m["status"]["replicas"].items())
+                rng.shuffle(reps)
+                m["status"]["replicas"] = dict(reps)
+        policy.decide(obs)
+    return list(policy.decisions)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_reconciler_decisions_are_order_independent(seed):
+    canonical = _replay(0)
+    # non-vacuous: the trace exercises every decision family
+    kinds = {d["action"] for d in canonical}
+    assert {"stage_submit", "stage_retry", "stage_done", "stage_skip",
+            "stage_failed", "pipeline_degraded", "recurring_run",
+            "recurring_skip", "recurring_replace", "replica_start",
+            "replica_stop", "service_status"} <= kinds
+    assert _replay(seed) == canonical
+
+
+def test_policy_never_mutates_the_observation():
+    policy = ReconcilerPolicy(ReconcilerConfig())
+    for obs in _scripted_trace():
+        snapshot = copy.deepcopy(obs)
+        policy.decide(obs)
+        assert obs == snapshot
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_apply_twice_is_a_noop_for_any_valid_manifest(seed):
+    """Property: for a randomly shaped valid manifest, a second apply of
+    the same spec changes nothing — no generation bump, no event, and
+    the steady-state reconciler pass decides nothing new about it."""
+    rng = random.Random(seed)
+    kind = rng.choice(("Pipeline", "RecurringJob", "Service"))
+    if kind == "Service":
+        m = {"kind": kind, "name": "w", "tenant": "team-a",
+             "replicas": rng.randint(0, 3),
+             "chips_per_replica": rng.randint(1, 2),
+             "tier": rng.choice(("paid", "free"))}
+    elif kind == "RecurringJob":
+        m = {"kind": kind, "name": "w", "tenant": "team-a",
+             "every_ticks": rng.randint(1, 9),
+             "overlap": rng.choice(("skip", "allow", "replace")),
+             "job": job_spec(sim_duration=rng.randint(1, 60))}
+    else:
+        names = [f"s{i}" for i in range(rng.randint(1, 4))]
+        m = {"kind": kind, "name": "w", "tenant": "team-a",
+             "stages": [{"name": n, "after": rng.sample(names[:i], k=min(
+                 i, rng.randint(0, 2))), "retries": rng.randint(0, 2),
+                 "job": job_spec()} for i, n in enumerate(names)]}
+    fed = Federation(n_shards=1)
+    key = fed.auth.issue_key("team-a")
+    v1 = fed.workloads_api.apply(key, m)
+    events = event_count(fed, "workload_applied")
+    v2 = fed.workloads_api.apply(key, copy.deepcopy(m))
+    assert v1["created"] and not v2["created"]
+    assert v2["generation"] == v1["generation"] == 1
+    assert v2["spec"] == v1["spec"]
+    assert event_count(fed, "workload_applied") == events
