@@ -27,6 +27,7 @@ bench-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/observability.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/operator.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/serving.py --quick
+	PYTHONPATH=src:. $(PY) benchmarks/faults.py --quick
 	PYTHONPATH=src:. $(PY) benchmarks/recovery.py
 
 # the full API-tier drill, including the timing-sensitive p99 assertions

@@ -1,0 +1,279 @@
+"""Gray-failure resilience drill: the unified fault-injection plane
+versus the deadline/retry/breaker defenses (FfDL §5.6's hardest rows —
+components that are slow or wedged, not dead).
+
+Three scenarios over a small two-shard federation with deliberately
+tight budgets (``verb_budget_s``/``tick_budget_s``), all driven through
+the same ``/v2/admin/faults`` surface an operator would use:
+
+  * ``baseline`` — no faults; establishes the clean-fleet latency floor
+    every other scenario's tail is compared against.
+  * ``gray_campaign`` — shard-0 is gray-failed three ways at once (hung
+    ``shard.tick``, slow ``wal.append``, flaky ``objstore.*``). The
+    drill asserts the full defense chain: the fleet keeps ticking, the
+    breaker opens, **healthy-shard tenants see 100% availability with a
+    bounded p99**, wedged-shard tenants fast-fail (no request ever
+    outlives its deadline budget), and after the faults clear the
+    breaker recovers through half-open without a restart.
+  * ``client_retry`` — one API replica drops 25% of ``list_jobs``
+    dispatches; a client armed with the seeded ``RetryPolicy`` (capped
+    exponential backoff, full jitter) must serve every read anyway.
+
+Emits machine-readable ``BENCH_faults.json`` at the repo root (full
+mode). ``--quick`` shrinks round counts; every availability, budget,
+and breaker assertion still holds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.api import AdminClient, ApiClient, ApiError, ErrorCode, Federation
+from repro.api.client import RetryPolicy
+from repro.core import JobManifest
+from repro.core.faults import BreakerConfig, ShardBreaker
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_faults.json")
+
+# Tight budgets so a wedge is visible in benchmark wall-time, with
+# enough headroom over the clean-fleet floor that no healthy verb ever
+# brushes the deadline.
+VERB_BUDGET_S = 0.5
+TICK_BUDGET_S = 0.2
+# Every timed request — success or fast-fail — must land under this.
+MAX_REQUEST_S = VERB_BUDGET_S + 0.3
+
+
+def _fed(seed: int) -> Federation:
+    fed = Federation(n_shards=2, n_api_replicas=2, seed=seed,
+                     tick_budget_s=TICK_BUDGET_S)
+    for r in fed.api_replicas:
+        r.verb_budget_s = VERB_BUDGET_S
+    return fed
+
+
+def _tenants_on(fed: Federation, shard: str, n: int) -> list:
+    out = []
+    for i in range(256):
+        t = f"tenant-{i}"
+        if fed.shard_of(t) == shard:
+            out.append(t)
+            if len(out) == n:
+                return out
+    raise RuntimeError(f"could not find {n} tenants on {shard}")
+
+
+def _job(tenant: str) -> JobManifest:
+    return JobManifest(name=f"drill-{tenant}", tenant=tenant,
+                       n_learners=1, chips_per_learner=1, sim_duration=600)
+
+
+def _pctl(xs: list, q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _probe(cli, jid, lat: list) -> None:
+    """One timed availability probe: a list and an indexed read."""
+    t0 = time.monotonic()
+    cli.list_jobs(limit=5)
+    cli.status(jid)
+    lat.append(time.monotonic() - t0)
+
+
+def _baseline(quick: bool) -> dict:
+    rounds = 30 if quick else 120
+    fed = _fed(seed=11)
+    tenants = _tenants_on(fed, "shard-0", 2) + _tenants_on(fed, "shard-1", 2)
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t)) for t in tenants}
+    jobs = {t: clients[t].submit(_job(t)) for t in tenants}
+    lat: list = []
+    for _ in range(rounds):
+        fed.tick()
+        for t, c in clients.items():
+            _probe(c, jobs[t], lat)
+    p99 = _pctl(lat, 0.99)
+    assert p99 < VERB_BUDGET_S, f"clean-fleet p99 {p99:.3f}s at budget"
+    return {"rounds": rounds, "requests": 2 * len(lat), "failures": 0,
+            "p50_ms": round(_pctl(lat, 0.50) * 1e3, 3),
+            "p99_ms": round(p99 * 1e3, 3)}
+
+
+def _gray_campaign(quick: bool) -> dict:
+    quarantine_rounds = 8 if quick else 15
+    fed = _fed(seed=23)
+    # Bench-speed breaker: same state machine, cooldown shrunk so the
+    # half-open recovery leg fits a drill instead of a 5 s wait.
+    fed.backends[0].breaker = ShardBreaker(
+        BreakerConfig(failure_threshold=3, cooldown_s=0.2))
+    adm = AdminClient.for_platform(fed)
+    wedged = _tenants_on(fed, "shard-0", 2)
+    healthy = _tenants_on(fed, "shard-1", 2)
+    clients = {t: ApiClient(fed.api, fed.auth.issue_key(t))
+               for t in wedged + healthy}
+    jobs = {t: clients[t].submit(_job(t)) for t in wedged + healthy}
+
+    # shard-0 goes gray three ways at once; shard-1 is untouched.
+    adm.install_fault("shard.tick", key="shard-0", hang=True)
+    adm.install_fault("wal.append", key="shard-0", latency_s=0.05)
+    adm.install_fault("objstore.*", key="shard-0",
+                      error="injected objstore flake", probability=0.5)
+
+    healthy_lat: list = []
+    fail_lat: list = []
+    healthy_failures = 0
+    fast_fails = 0
+    slow_fails = 0
+    t_wall = time.monotonic()
+    # Wedge: each tick burns shard-0's full tick budget; the fleet keeps
+    # ticking and the breaker opens at the failure threshold.
+    for _ in range(3):
+        fed.tick()
+        for t in healthy:
+            _probe(clients[t], jobs[t], healthy_lat)
+    breaker_opened = adm.get_shard("shard-0")["breaker"] == "open"
+
+    # Quarantine: healthy tenants get full service; wedged tenants
+    # fast-fail on the open breaker instead of eating a deadline each.
+    for _ in range(quarantine_rounds):
+        fed.tick()
+        for t in healthy:
+            try:
+                _probe(clients[t], jobs[t], healthy_lat)
+            except ApiError:
+                healthy_failures += 1
+        for t in wedged:
+            t0 = time.monotonic()
+            try:
+                clients[t].list_jobs(limit=5)
+            except ApiError as e:
+                dt = time.monotonic() - t0
+                fail_lat.append(dt)
+                if (e.code is ErrorCode.UNAVAILABLE
+                        and e.details.get("breaker_open")):
+                    fast_fails += 1
+                else:
+                    slow_fails += 1  # deadline burns before the breaker trips
+
+    # Recovery: clear the plans (wakes the hung tick waiter), let the
+    # cooldown lapse, and the next request is the half-open probe.
+    adm.clear_faults()
+    time.sleep(0.3)
+    clients[wedged[0]].list_jobs(limit=5)
+    recovered = adm.get_shard("shard-0")["breaker"] == "closed"
+    wall = time.monotonic() - t_wall
+
+    worst = max(healthy_lat + fail_lat)
+    deadline_events = fed.shards[0].events.count("shard_tick_deadline")
+    assert breaker_opened, "hung ticks must open shard-0's breaker"
+    assert healthy_failures == 0, \
+        f"{healthy_failures} healthy-shard failures during the campaign"
+    assert _pctl(healthy_lat, 0.99) < VERB_BUDGET_S, \
+        "healthy-shard p99 must stay inside the verb budget"
+    assert worst < MAX_REQUEST_S, \
+        f"a request took {worst:.3f}s — outlived its deadline budget"
+    assert fast_fails > 0, "open breaker never fast-failed a tenant"
+    assert recovered, "breaker must close through the half-open probe"
+    return {
+        "quarantine_rounds": quarantine_rounds,
+        "healthy_requests": 2 * len(healthy_lat),
+        "healthy_failures": 0,
+        "healthy_p99_ms": round(_pctl(healthy_lat, 0.99) * 1e3, 3),
+        "wedged_fast_fails": fast_fails,
+        "wedged_slow_fails": slow_fails,
+        "fast_fail_p99_ms": round(_pctl(fail_lat, 0.99) * 1e3, 3),
+        "worst_request_ms": round(worst * 1e3, 3),
+        "shard_tick_deadline_events": deadline_events,
+        "breaker_opened": breaker_opened,
+        "breaker_recovered_half_open": recovered,
+        "wall_s": round(wall, 3),
+    }
+
+
+def _client_retry(quick: bool) -> dict:
+    reads = 40 if quick else 150
+    fed = _fed(seed=37)
+    adm = AdminClient.for_platform(fed)
+    tenant = _tenants_on(fed, "shard-0", 1)[0]
+    # One replica, no balancer failover: every flake lands on THIS
+    # client, so the only thing standing between it and an error is the
+    # RetryPolicy's jittered backoff.
+    gw = fed.api_replicas[0]
+    cli = ApiClient(gw, fed.auth.issue_key(tenant),
+                    retry=RetryPolicy(seed=5, base_s=0.005, cap_s=0.05))
+    cli.submit(_job(tenant))
+    adm.install_fault("gateway.dispatch", key="list_jobs",
+                      error="flaky front", probability=0.25)
+    served = 0
+    exhausted = 0
+    t0 = time.monotonic()
+    for _ in range(reads):
+        for _ in range(3):  # belt over the policy's own 4 attempts
+            try:
+                cli.list_jobs(limit=1)
+                served += 1
+                break
+            except ApiError:
+                exhausted += 1
+        else:
+            raise AssertionError("a read failed through 12 total attempts")
+    wall = time.monotonic() - t0
+    injected = adm.list_faults()["triggered"].get("gateway.dispatch", 0)
+    adm.clear_faults()
+    assert served == reads, f"only {served}/{reads} reads served"
+    assert injected > 0, "the flaky front never actually fired"
+    return {"reads": reads, "served": served, "faults_injected": injected,
+            "policies_exhausted": exhausted, "wall_s": round(wall, 3)}
+
+
+def run(quick: bool = False) -> dict:
+    out = {"quick": quick,
+           "verb_budget_s": VERB_BUDGET_S, "tick_budget_s": TICK_BUDGET_S}
+
+    print("baseline: clean fleet latency floor ...", flush=True)
+    out["baseline"] = _baseline(quick)
+    d = out["baseline"]
+    print(f"  {d['requests']} requests, 0 failed; "
+          f"p50 {d['p50_ms']}ms p99 {d['p99_ms']}ms")
+
+    print("gray_campaign: hung tick + slow WAL + flaky objstore on "
+          "shard-0 ...", flush=True)
+    out["gray_campaign"] = _gray_campaign(quick)
+    d = out["gray_campaign"]
+    print(f"  breaker opened, {d['shard_tick_deadline_events']} tick "
+          f"deadlines; healthy tenants {d['healthy_requests']} requests "
+          f"0 failed (p99 {d['healthy_p99_ms']}ms); "
+          f"{d['wedged_fast_fails']} fast-fails "
+          f"(p99 {d['fast_fail_p99_ms']}ms); worst request "
+          f"{d['worst_request_ms']}ms; recovered via half-open")
+
+    print("client_retry: 25%-flaky front vs seeded RetryPolicy ...",
+          flush=True)
+    out["client_retry"] = _client_retry(quick)
+    d = out["client_retry"]
+    print(f"  {d['served']}/{d['reads']} reads served through "
+          f"{d['faults_injected']} injected faults "
+          f"({d['policies_exhausted']} retries-exhausted rescues)")
+    return out
+
+
+def main(argv=None):
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    out = run(quick=quick)
+    if not quick:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {OUT_PATH}")
+    print("FAULTS BENCH OK")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,8 @@
                                         isolation, rolling upgrade)
   §3/§4      → benchmarks.serving      (declarative pipelines + serving
                                         tier QoS under flood)
+  §5.6       → benchmarks.faults       (gray-failure resilience: fault
+                                        plane vs deadlines/breakers/retry)
 
 Per-benchmark summary lines are CSV-ish: name,us_per_call,derived.
 ``hotpath``'s full run additionally writes ``BENCH_hotpath.json`` at the
@@ -41,6 +43,7 @@ def main() -> None:
     from benchmarks import (
         api_tier,
         failures,
+        faults,
         gang,
         hotpath,
         observability,
@@ -67,6 +70,7 @@ def main() -> None:
         ("scale_s5_5", scale.main),
         ("serving", serving.main),
         ("failures_s5_6", failures.main),
+        ("faults", faults.main),
         ("roofline", roofline.main),
     ]
     only = set(args.only.split(",")) if args.only else None

@@ -142,6 +142,7 @@ class AdminPlane:
         self._mig_ctr = itertools.count(1)
         self.ratelimiter = None  # attached by ApiHttpServer when present
         self.operator = None     # attached by repro.api.ops.install_operator
+        self.faults = None       # attached by the platform/federation ctor
         # (shard_id, tenant) purges waiting for a dead destination to return
         self._deferred_purges: List[tuple] = []
         # (shard_id, [job_ids]) resumes waiting for a dead SOURCE to return
@@ -319,6 +320,9 @@ class AdminPlane:
                 "cordoned": backend.cordoned,
                 "version": getattr(backend, "version", "v0"),
                 "retired": getattr(backend, "retired", False),
+                "breaker": (backend.breaker.state
+                            if getattr(backend, "breaker", None) is not None
+                            else "closed"),
                 "tenants": [], "jobs": 0, "active_jobs": 0,
                 "chips_total": 0, "chips_used": 0, "queue_depth": 0}
         if not backend.alive:
@@ -381,6 +385,56 @@ class AdminPlane:
         """Request a GUARD-style rolling upgrade to ``version``; waves
         start on the next federation tick."""
         return self._operator().request_rollout(version)
+
+    # -- fault resource (repro.core.faults) --------------------------------
+    def _fault_plane(self):
+        if self.faults is None:
+            raise ApiError(ErrorCode.FAILED_PRECONDITION,
+                           "no fault plane attached to this deployment")
+        return self.faults
+
+    @_serialized
+    def install_fault(self, body: dict) -> dict:
+        """Install a fault plan on a named interposition point. ``body``
+        carries ``point`` plus any of ``key``/``latency_s``/``error``/
+        ``hang``/``mode``/``probability`` (see ``repro.core.faults``)."""
+        plane = self._fault_plane()
+        if not isinstance(body, dict) or "point" not in body:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "body must carry a fault 'point'")
+        unknown = sorted(set(body) - {"point", "key", "latency_s", "error",
+                                      "hang", "mode", "probability"})
+        if unknown:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           f"unknown fault fields: {unknown}")
+        try:
+            plan = plane.install(
+                body["point"], key=body.get("key"),
+                latency_s=body.get("latency_s", 0.0),
+                error=body.get("error"),
+                hang=bool(body.get("hang", False)),
+                mode=body.get("mode", "persistent"),
+                probability=body.get("probability", 1.0))
+        except (ValueError, TypeError) as e:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT, str(e))
+        return {"api_version": ADMIN_API_VERSION, **plan}
+
+    @_serialized
+    def list_faults(self) -> dict:
+        plane = self._fault_plane()
+        return {"api_version": ADMIN_API_VERSION, "items": plane.list(),
+                "triggered": dict(plane.triggered)}
+
+    @_serialized
+    def clear_faults(self, fault_id: Optional[str] = None) -> dict:
+        """Clear one plan (waking any hung waiter on it) or, with no id,
+        every installed plan."""
+        plane = self._fault_plane()
+        cleared = plane.clear(fault_id)
+        if fault_id is not None and cleared == 0:
+            raise ApiError(ErrorCode.NOT_FOUND,
+                           f"no such fault: {fault_id}", fault_id=fault_id)
+        return {"api_version": ADMIN_API_VERSION, "cleared": cleared}
 
     # -- migration resource -----------------------------------------------
     def migration_view(self, m: Migration) -> dict:
@@ -828,6 +882,23 @@ class AdminGateway:
             raise ApiError(ErrorCode.INVALID_ARGUMENT,
                            "body must carry a non-empty 'version' string")
         return self.plane.start_rollout(body["version"])
+
+    # -- faults -----------------------------------------------------------
+    def install_fault(self, api_key: str, body: dict) -> dict:
+        self._require(api_key)
+        if not isinstance(body, dict):
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "body must be a JSON object")
+        return self.plane.install_fault(body)
+
+    def list_faults(self, api_key: str) -> dict:
+        self._require(api_key)
+        return self.plane.list_faults()
+
+    def clear_faults(self, api_key: str,
+                     fault_id: Optional[str] = None) -> dict:
+        self._require(api_key)
+        return self.plane.clear_faults(fault_id)
 
     # -- migrations -------------------------------------------------------
     def start_migration(self, api_key: str, body: dict) -> dict:

@@ -30,6 +30,8 @@ from __future__ import annotations
 import threading
 from contextlib import ExitStack, contextmanager
 
+from repro.core.faults import DeadlineExceeded, ShardBreaker, remaining
+
 
 class RWLock:
     """Writer-preferring readers-writer lock.
@@ -37,6 +39,14 @@ class RWLock:
     Readers share; a writer excludes everyone. Writer preference (readers
     queue behind a *waiting* writer) keeps submits from starving under the
     read-heavy traffic this lock exists to scale.
+
+    Acquisition waits are **deadline-bounded**: when the calling thread
+    carries an ambient deadline (the gateway wraps every v1 verb in a
+    :func:`repro.core.faults.deadline_scope`), a wait that outlives the
+    budget raises :class:`DeadlineExceeded` instead of blocking forever.
+    This is the defense that matters against a *gray* shard: a hung tick
+    holds the write lock, and without the bound every verb on the shard
+    would stall indefinitely at lock acquisition.
 
     ``shared_reads=False`` degrades reads to exclusive acquisitions — the
     pre-federation single-lock behaviour, kept so ``benchmarks/api_tier.py``
@@ -52,6 +62,16 @@ class RWLock:
         # benchmark introspection: proves reads actually overlapped
         self.stats = {"reads": 0, "writes": 0, "max_concurrent_readers": 0}
 
+    def _wait(self):
+        """One condition wait, bounded by the thread's ambient deadline."""
+        rem = remaining()
+        if rem is None:
+            self._cond.wait()
+        elif rem <= 0:
+            raise DeadlineExceeded("lock wait exceeded the deadline budget")
+        else:
+            self._cond.wait(rem)
+
     @contextmanager
     def read_locked(self):
         if not self.shared_reads:
@@ -60,7 +80,7 @@ class RWLock:
             return
         with self._cond:
             while self._writer_active or self._writers_waiting:
-                self._cond.wait()
+                self._wait()
             self._readers += 1
             self.stats["reads"] += 1
             if self._readers > self.stats["max_concurrent_readers"]:
@@ -79,7 +99,12 @@ class RWLock:
             self._writers_waiting += 1
             try:
                 while self._writer_active or self._readers:
-                    self._cond.wait()
+                    self._wait()
+            except BaseException:
+                # readers queued behind this (now aborted) writer would
+                # otherwise sleep until the next unrelated notify
+                self._cond.notify_all()
+                raise
             finally:
                 self._writers_waiting -= 1
             self._writer_active = True
@@ -117,6 +142,12 @@ class Backend:
         # composite cursors must not shift) but the federation stops
         # ticking it and the operator excludes its capacity.
         self.retired = False
+        # gray-failure quarantine: per-shard circuit breaker. The gateway
+        # records one outcome per v1 verb and checks allow() at shard
+        # selection; an open breaker answers fast UNAVAILABLE exactly like
+        # a dead shard (shard_down details), so a wedged-but-alive shard
+        # cannot stall its tenants.
+        self.breaker = ShardBreaker()
 
     # -- shard lifecycle (chaos) ------------------------------------------
     def crash(self):
@@ -128,6 +159,9 @@ class Backend:
         self.alive = True
         if version is not None:
             self.version = version
+        # a restart clears the gray-failure presumption; if the shard is
+        # still wedged the breaker re-opens within failure_threshold calls
+        self.breaker.reset()
 
     # -- operator lifecycle (v2 admin plane) ------------------------------
     def cordon(self):

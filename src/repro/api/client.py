@@ -16,14 +16,28 @@ Streaming: when the transport exposes SSE (``stream_logs`` /
 in-process transports don't), ``follow_logs``/``watch_status``/
 ``follow_events`` ride ONE server-sent-events connection with heartbeats
 instead of a long-poll request train. A dropped stream reconnects from its
-``Last-Event-ID`` (exact resume, no replay and no gap); a server without
-SSE (``sse_unsupported``) demotes the client to long-poll permanently.
+``Last-Event-ID`` (exact resume, no replay and no gap) after a *jittered
+exponential backoff* — a fleet of followers dropped by one API restart
+must not stampede back in lockstep. A server without SSE
+(``sse_unsupported``) demotes the client to long-poll permanently.
 ``prefer_sse=False`` forces long-poll (the ``--long-poll`` CLI flag).
+
+Retries: an optional :class:`RetryPolicy` makes the *idempotent read
+verbs* (status/history/list/logs/search/usage/events) retry transient
+failures (``UNAVAILABLE``, ``DEADLINE_EXCEEDED``) with capped
+exponential backoff and full jitter, honouring a server-supplied
+``retry_after`` hint as the floor. Mutating verbs are never retried by
+the policy — ``submit`` dedup rides idempotency keys, and re-issuing
+``halt``/``cancel`` is the caller's decision. Default is ``None``: no
+behaviour change for existing callers.
 """
 
 from __future__ import annotations
 
 import json
+import random
+import time
+from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.api.auth import ALL_TENANTS, READ, WRITE
@@ -34,6 +48,41 @@ from repro.core.types import TERMINAL, JobManifest, JobStatus
 # consecutive UNAVAILABLE stream (re)opens before giving up — a live
 # server that keeps resetting streams is as unreachable as a dead one
 _MAX_STREAM_FAILURES = 3
+
+# reconnect backoff for dropped SSE streams (always on; first retry is
+# near-immediate so a one-off drop costs ~nothing)
+_STREAM_BACKOFF_BASE_S = 0.05
+_STREAM_BACKOFF_CAP_S = 2.0
+
+
+def _backoff_s(attempt: int, retry_after, rng: random.Random,
+               base_s: float, cap_s: float) -> float:
+    """Capped exponential backoff with **full jitter** (uniform over
+    [0, min(cap, base·2^attempt)]), floored at the server's
+    ``Retry-After`` hint when one was sent — the server knows its own
+    recovery horizon better than the client's doubling schedule."""
+    ceiling = min(cap_s, base_s * (2 ** attempt))
+    delay = rng.uniform(0.0, ceiling)
+    if retry_after is not None:
+        try:
+            delay = max(delay, float(retry_after))
+        except (TypeError, ValueError):
+            pass
+    return delay
+
+
+@dataclass
+class RetryPolicy:
+    """Client-side retry budget for idempotent reads (opt-in)."""
+    max_attempts: int = 4
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    seed: int = 0
+    codes: tuple = (ErrorCode.UNAVAILABLE, ErrorCode.DEADLINE_EXCEEDED)
+    rng: random.Random = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.rng = random.Random(self.seed)
 
 
 def _frame_error(data) -> ApiError:
@@ -51,13 +100,44 @@ def _frame_error(data) -> ApiError:
 
 
 class ApiClient:
-    def __init__(self, transport, api_key: str, prefer_sse: bool = True):
+    def __init__(self, transport, api_key: str, prefer_sse: bool = True,
+                 retry: Optional[RetryPolicy] = None):
         self.transport = transport
         self.api_key = api_key
         self.prefer_sse = prefer_sse
+        self.retry = retry
+        self._stream_rng = random.Random(0xF501)
 
     def _sse(self, verb: str) -> bool:
         return self.prefer_sse and hasattr(self.transport, verb)
+
+    def _read(self, fn, *args, **kwargs):
+        """Run an idempotent read verb under the retry policy (when one
+        is configured): transient codes are retried with jittered
+        exponential backoff, anything else propagates immediately."""
+        pol = self.retry
+        if pol is None:
+            return fn(*args, **kwargs)
+        attempt = 0
+        while True:
+            try:
+                return fn(*args, **kwargs)
+            except ApiError as e:
+                attempt += 1
+                if e.code not in pol.codes or attempt >= pol.max_attempts:
+                    raise
+                time.sleep(_backoff_s(attempt - 1,
+                                      e.details.get("retry_after"),
+                                      pol.rng, pol.base_s, pol.cap_s))
+
+    def _stream_backoff(self, failures: int, err: ApiError):
+        """Pause before reopening a dropped SSE stream (jittered, capped,
+        Retry-After-aware) so reconnecting followers don't stampede."""
+        time.sleep(_backoff_s(max(0, failures - 1),
+                              err.details.get("retry_after"),
+                              self._stream_rng,
+                              _STREAM_BACKOFF_BASE_S,
+                              _STREAM_BACKOFF_CAP_S))
 
     @classmethod
     def for_platform(cls, platform, tenant: str = ALL_TENANTS,
@@ -83,14 +163,17 @@ class ApiClient:
 
     # -- reads ------------------------------------------------------------
     def status(self, job_id: str) -> JobStatus:
-        return JobStatus(self.transport.status(self.api_key, job_id).status)
+        return JobStatus(
+            self._read(self.transport.status,
+                       self.api_key, job_id).status)
 
     def view(self, job_id: str):
         """The full tenant-visible ``JobView`` projection."""
-        return self.transport.status(self.api_key, job_id)
+        return self._read(self.transport.status, self.api_key, job_id)
 
     def status_history(self, job_id: str) -> list:
-        return self.transport.status_history(self.api_key, job_id)
+        return self._read(self.transport.status_history,
+                          self.api_key, job_id)
 
     def watch_status(self, job_id: str, wait_ms: int = 8000):
         """Yield the job's ``JobView`` once now and again on every status
@@ -124,13 +207,14 @@ class ApiClient:
                     if e.code is not ErrorCode.UNAVAILABLE \
                             or failures >= _MAX_STREAM_FAILURES:
                         raise
+                    self._stream_backoff(failures, e)
                 else:
                     if ended:
                         return
                     # clean close (stream budget spent): resume from last
         while True:
-            view = self.transport.status(self.api_key, job_id,
-                                         wait_ms=wait_ms, last_status=last)
+            view = self._read(self.transport.status, self.api_key, job_id,
+                              wait_ms=wait_ms, last_status=last)
             if view.status != last:
                 yield view
             last = view.status
@@ -138,17 +222,18 @@ class ApiClient:
                 return
 
     def list_jobs(self, **kwargs) -> Page:
-        return self.transport.list_jobs(self.api_key, **kwargs)
+        return self._read(self.transport.list_jobs, self.api_key, **kwargs)
 
     def logs(self, job_id: str, cursor: Optional[str] = None,
              limit: Optional[int] = None) -> list:
         """All log lines (auto-paginates when the transport pages)."""
         if limit is not None:
-            return self.transport.logs(self.api_key, job_id, cursor=cursor,
-                                       limit=limit).items
+            return self._read(self.transport.logs, self.api_key, job_id,
+                              cursor=cursor, limit=limit).items
         out, cur = [], cursor
         while True:
-            page = self.transport.logs(self.api_key, job_id, cursor=cur)
+            page = self._read(self.transport.logs, self.api_key, job_id,
+                              cursor=cur)
             out += page.items
             cur = page.next_cursor
             if cur is None:
@@ -186,12 +271,13 @@ class ApiClient:
                     if e.code is not ErrorCode.UNAVAILABLE \
                             or failures >= _MAX_STREAM_FAILURES:
                         raise
+                    self._stream_backoff(failures, e)
                 else:
                     if ended:
                         return
         while True:
-            page = self.transport.logs(self.api_key, job_id, cursor=cursor,
-                                       wait_ms=wait_ms)
+            page = self._read(self.transport.logs, self.api_key, job_id,
+                              cursor=cursor, wait_ms=wait_ms)
             yield from page.items
             cursor = page.next_cursor
             if cursor is None:
@@ -203,13 +289,13 @@ class ApiClient:
         """All matches (auto-paginates, like :meth:`logs`); with ``limit``
         set, exactly one page of at most that many records."""
         if limit is not None:
-            return self.transport.search_logs(
+            return self._read(self.transport.search_logs,
                 self.api_key, query, job_id=job_id, cursor=cursor,
                 limit=limit).items
         out, cur = [], cursor
         while True:
-            page = self.transport.search_logs(self.api_key, query,
-                                              job_id=job_id, cursor=cur)
+            page = self._read(self.transport.search_logs, self.api_key,
+                              query, job_id=job_id, cursor=cur)
             out += page.items
             cur = page.next_cursor
             if cur is None:
@@ -230,7 +316,8 @@ class ApiClient:
         """Per-tenant usage rows (chip-seconds, job counts, log bytes,
         429s). A tenant key reads its own row; an admin key reads all
         tenants (or one, with ``tenant=``)."""
-        return self.transport.usage(self.api_key, tenant=tenant)["items"]
+        return self._read(self.transport.usage, self.api_key,
+                          tenant=tenant)["items"]
 
     def events(self, cursor: Optional[str] = None,
                limit: Optional[int] = None, kind: Optional[str] = None,
@@ -239,9 +326,9 @@ class ApiClient:
         ``{"items", "next_cursor", "missed"}``. The cursor chain serves
         every retained event exactly once; ``missed`` counts events that
         aged out of retention before this page read them."""
-        return self.transport.events(self.api_key, cursor=cursor,
-                                     limit=limit, kind=kind,
-                                     wait_ms=wait_ms)
+        return self._read(self.transport.events, self.api_key,
+                          cursor=cursor, limit=limit, kind=kind,
+                          wait_ms=wait_ms)
 
     def follow_events(self, cursor: Optional[str] = None,
                       kind: Optional[str] = None, wait_ms: int = 8000):
@@ -272,10 +359,11 @@ class ApiClient:
                     if e.code is not ErrorCode.UNAVAILABLE \
                             or failures >= _MAX_STREAM_FAILURES:
                         raise
+                    self._stream_backoff(failures, e)
                 # clean close: reconnect from the last delivered id
         while True:
-            out = self.transport.events(self.api_key, cursor=cursor,
-                                        kind=kind, wait_ms=wait_ms)
+            out = self._read(self.transport.events, self.api_key,
+                             cursor=cursor, kind=kind, wait_ms=wait_ms)
             yield from out["items"]
             cursor = out["next_cursor"]
 
@@ -344,6 +432,19 @@ class AdminClient:
 
     def list_migrations(self) -> list:
         return self.transport.list_migrations(self.api_key)["items"]
+
+    # -- fault injection ---------------------------------------------------
+    def install_fault(self, point: str, **fields) -> dict:
+        """Install a fault plan on a named interposition point (e.g.
+        ``install_fault("wal.flush", latency_s=2.0)``)."""
+        return self.transport.install_fault(self.api_key,
+                                            {"point": point, **fields})
+
+    def list_faults(self) -> dict:
+        return self.transport.list_faults(self.api_key)
+
+    def clear_faults(self, fault_id: Optional[str] = None) -> dict:
+        return self.transport.clear_faults(self.api_key, fault_id)
 
     # -- autonomous operator ----------------------------------------------
     def operator_status(self) -> dict:

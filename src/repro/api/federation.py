@@ -43,16 +43,25 @@ from repro.api.auth import AuthService
 from repro.api.gateway import ApiGateway
 from repro.api.lb import LoadBalancer
 from repro.api.router import TenantRouter
+from repro.core.faults import DeadlineExceeded, FaultPlane, deadline_scope
 
 # Shard i mints job ids from i*STRIDE + 1: globally unique, still matching
 # the wire's ``job-\d+`` shape, and ordered within every shard.
 JOB_ID_STRIDE = 1_000_000
 
+# Per-shard tick budget (seconds, wall clock). A gray-failed shard whose
+# tick hangs would otherwise wedge the federation's whole ticker thread;
+# instead the tick raises DeadlineExceeded at the budget, the shard's
+# breaker records the overrun, and the fleet keeps ticking.
+DEFAULT_TICK_BUDGET_S = 5.0
+
 
 class Federation:
     def __init__(self, n_shards: int = 2, n_api_replicas: int = 3,
                  seed: int = 0, shared_reads: bool = True,
-                 pins: Optional[Dict[str, str]] = None, **platform_kwargs):
+                 pins: Optional[Dict[str, str]] = None,
+                 tick_budget_s: float = DEFAULT_TICK_BUDGET_S,
+                 **platform_kwargs):
         # lazy import: repro.core.platform itself imports repro.api.*
         from repro.core.platform import FfDLPlatform
         # Construction recipe kept so the operator can mint identical
@@ -61,12 +70,18 @@ class Federation:
         self._shared_reads = shared_reads
         self._platform_kwargs = dict(platform_kwargs)
         self._next_shard_idx = max(1, n_shards)
+        self.tick_budget_s = tick_budget_s
+        # ONE fault plane for the whole fleet: every shard's interposition
+        # points draw from this seeded registry, and one /v2/admin/faults
+        # surface controls it all.
+        self.faults = FaultPlane(seed=seed)
         self.shards = [
             FfDLPlatform(shard_id=f"shard-{i}",
                          job_id_base=i * JOB_ID_STRIDE,
                          shared_reads=shared_reads,
                          n_api_replicas=1,  # shards' own tiers are unused
-                         seed=seed + i, **platform_kwargs)
+                         seed=seed + i, fault_plane=self.faults,
+                         **platform_kwargs)
             for i in range(max(1, n_shards))]
         # Reuse each platform's OWN Backend: one lock per shard, shared by
         # every front (the shard's vestigial tier and this federation).
@@ -79,6 +94,7 @@ class Federation:
         self.api = LoadBalancer(self.api_replicas)
         # v2 admin control plane: one shared plane, admin-scoped gateway
         self.admin = AdminPlane(self.router, self.auth)
+        self.admin.faults = self.faults
         self.admin_api = AdminGateway(self.admin, self.auth)
         # autonomous operator (repro.api.ops.install_operator attaches one)
         self.operator = None
@@ -132,7 +148,8 @@ class Federation:
                              job_id_base=i * JOB_ID_STRIDE,
                              shared_reads=self._shared_reads,
                              n_api_replicas=1,
-                             seed=self._seed + i, **self._platform_kwargs)
+                             seed=self._seed + i, fault_plane=self.faults,
+                             **self._platform_kwargs)
             self.shards.append(p)
             self.backends.append(p.backend)
             # The router holds its OWN copy of the backend list — register
@@ -158,12 +175,27 @@ class Federation:
         reads on other shards are never blocked by this shard's tick.
         Live tenant migrations advance one phase per round afterwards,
         then the autonomous operator (when installed) reconciles once,
-        then the workloads reconciler converges applied manifests."""
+        then the workloads reconciler converges applied manifests.
+
+        Each shard tick runs under a wall-clock deadline budget
+        (``tick_budget_s``): a shard whose tick hangs or runs long (gray
+        failure) raises out of its scope instead of wedging the ticker
+        thread, its breaker records the overrun (feeding the quarantine
+        the gateway enforces), and the remaining shards still tick."""
         for backend in self.backends:
             if not backend.alive or backend.retired:
                 continue
-            with backend.write_locked():
-                backend.platform.tick()
+            try:
+                with backend.write_locked(), \
+                        deadline_scope(self.tick_budget_s):
+                    backend.platform.tick()
+            except DeadlineExceeded:
+                backend.breaker.record_failure(deadline=True)
+                if backend.platform.events is not None:
+                    backend.platform.events.emit(
+                        "federation", "shard_tick_deadline",
+                        shard=backend.shard_id,
+                        budget_s=self.tick_budget_s)
         self.admin.advance()
         if self.operator is not None:
             self.operator.step()

@@ -34,7 +34,10 @@ park until the status changes), behind ``ffdl status --watch``.
 
 from __future__ import annotations
 
+import functools
+import inspect
 import re
+import threading
 import time
 from contextlib import contextmanager
 from dataclasses import asdict
@@ -57,6 +60,7 @@ from repro.api.types import (
     SubmitResponse,
     check_version,
 )
+from repro.core.faults import DeadlineExceeded, deadline_scope
 from repro.core.types import (
     TRAIN_SPEC_FIELDS,
     JobStatus,
@@ -77,6 +81,68 @@ MAX_PAGE = 1000
 # how often a parked call re-checks the (lock-free-released) shard.
 MAX_WAIT_MS = 10_000
 _POLL_S = 0.02
+# Per-verb deadline budget (seconds). Every v1 verb runs inside a
+# repro.core.faults.deadline_scope of this much (plus the caller's
+# wait_ms for long-poll verbs): lock waits, injected latency, and
+# injected hangs all observe it, so no request can block past its
+# budget — a wedged shard answers DEADLINE_EXCEEDED instead of
+# stalling the caller. Generous by default (normal verbs finish in
+# microseconds-to-milliseconds); gray-failure drills tighten it.
+DEFAULT_VERB_BUDGET_S = 10.0
+
+# Which backend this thread's in-flight verb touched, for breaker
+# outcome attribution when the deadline fires mid-verb.
+_VERB_TLS = threading.local()
+
+
+def _deadlined(fn):
+    """Wrap a public v1 verb in a deadline scope + breaker accounting.
+
+    On :class:`DeadlineExceeded` the touched shard's breaker records a
+    failure and the caller gets the stable ``DEADLINE_EXCEEDED`` code
+    (HTTP 504). NOT LB-retryable: every replica fronts the same shard,
+    so failing over would just burn another full budget. A normal
+    return records a breaker success; other ApiErrors are neutral (the
+    shard answered — promptly — even if the answer was an error)."""
+    sig = inspect.signature(fn)
+    has_wait = "wait_ms" in sig.parameters
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        wait_s = 0.0
+        if has_wait:
+            try:
+                bound = sig.bind(self, *args, **kwargs)
+                w = bound.arguments.get("wait_ms")
+                if isinstance(w, int) and not isinstance(w, bool) and w > 0:
+                    wait_s = min(w, MAX_WAIT_MS) / 1000.0
+            except TypeError:
+                pass  # let fn raise its own signature error
+        budget = self.verb_budget_s + wait_s
+        _VERB_TLS.backend = None
+        try:
+            with deadline_scope(budget):
+                plane = self._fault_plane()
+                if plane is not None:
+                    plane.on("gateway.dispatch", key=name,
+                             exc=lambda m: ApiError(ErrorCode.UNAVAILABLE,
+                                                    m, injected=True))
+                out = fn(self, *args, **kwargs)
+        except DeadlineExceeded:
+            backend = getattr(_VERB_TLS, "backend", None)
+            details = {"verb": name, "budget_s": round(budget, 3)}
+            if backend is not None:
+                backend.breaker.record_failure(deadline=True)
+                details["shard"] = backend.shard_id
+            raise ApiError(ErrorCode.DEADLINE_EXCEEDED,
+                           f"{name} exceeded its {budget:.2f}s deadline "
+                           f"budget", **details)
+        backend = getattr(_VERB_TLS, "backend", None)
+        if backend is not None:
+            backend.breaker.record_success()
+        return out
+    return wrapper
 
 
 def _parse_limit(limit):
@@ -161,7 +227,23 @@ def _shard_down(backend) -> ApiError:
                     shard=backend.shard_id, shard_down=True)
 
 
+def _breaker_open(backend) -> ApiError:
+    """A gray-failed (wedged-but-alive) shard is quarantined exactly like
+    a dead one: fast UNAVAILABLE with ``shard_down`` so the LB does not
+    burn failovers, plus ``breaker_open`` so clients/operators can tell
+    quarantine from crash. ``retry_after`` hints the half-open probe
+    cadence."""
+    return ApiError(ErrorCode.UNAVAILABLE,
+                    f"shard {backend.shard_id} is quarantined "
+                    f"(circuit breaker open)",
+                    shard=backend.shard_id, shard_down=True,
+                    breaker_open=True, retry_after=1.0)
+
+
 class ApiGateway:
+    # per-verb deadline budget; instances may tighten it (drills do)
+    verb_budget_s = DEFAULT_VERB_BUDGET_S
+
     def __init__(self, router: TenantRouter, auth: AuthService,
                  replica_id: str = "api-0", events=None):
         self.router = router
@@ -169,6 +251,14 @@ class ApiGateway:
         self.replica_id = replica_id
         self.event_log = events  # the owning shard's bus (verb `events` differs)
         self.alive = True
+
+    def _fault_plane(self):
+        """The fleet-wide FaultPlane (every shard of a federation shares
+        one; a standalone platform owns its own)."""
+        backends = self.router.backends
+        if not backends:
+            return None
+        return getattr(backends[0].platform, "faults", None)
 
     # -- replica lifecycle (chaos) --------------------------------------
     def crash(self):
@@ -191,17 +281,21 @@ class ApiGateway:
         return self.auth.require(api_key, scope)
 
     # -- shard resolution -------------------------------------------------
-    def _shard_for(self, tenant: str):
-        backend = self.router.shard_for(tenant)
+    def _check_backend(self, backend):
+        """Liveness + breaker gate, plus deadline-attribution note: every
+        path that is about to touch a shard funnels through here."""
         if not backend.alive:
             raise _shard_down(backend)
+        if not backend.breaker.allow():
+            raise _breaker_open(backend)
+        _VERB_TLS.backend = backend
         return backend
 
+    def _shard_for(self, tenant: str):
+        return self._check_backend(self.router.shard_for(tenant))
+
     def _sole_shard(self):
-        backend = self.router.backends[0]
-        if not backend.alive:
-            raise _shard_down(backend)
-        return backend
+        return self._check_backend(self.router.backends[0])
 
     def _locate(self, principal: Principal, job_id: str):
         """The shard that owns ``job_id`` for this caller.
@@ -220,9 +314,12 @@ class ApiGateway:
         dead = None
         unrouted_tenant = None
         for backend in self.router.backends:
-            if not backend.alive:
+            # a breaker-quarantined shard is skipped exactly like a dead
+            # one: scanning it would wedge the whole admin walk
+            if not backend.alive or not backend.breaker.allow():
                 dead = backend
                 continue
+            _VERB_TLS.backend = backend
             with backend.read_locked(), _meta_guard():
                 rec = backend.platform.meta.get(job_id)
             if rec is not None:
@@ -234,7 +331,8 @@ class ApiGateway:
             # unreachable — never serve the stale import
             raise _shard_down(self.router.shard_for(unrouted_tenant))
         if dead is not None:
-            raise _shard_down(dead)
+            raise (_shard_down(dead) if not dead.alive
+                   else _breaker_open(dead))
         raise ApiError(ErrorCode.NOT_FOUND, f"no such job: {job_id}",
                        job_id=job_id)
 
@@ -290,6 +388,7 @@ class ApiGateway:
             attempt += 1
 
     # -- submit ----------------------------------------------------------
+    @_deadlined
     def submit(self, api_key: str, req: SubmitRequest) -> SubmitResponse:
         principal = self._require(api_key, WRITE)
         check_version(req.api_version)
@@ -355,6 +454,7 @@ class ApiGateway:
         return SubmitResponse(job_id=job_id)
 
     # -- reads -----------------------------------------------------------
+    @_deadlined
     def status(self, api_key: str, job_id: str,
                wait_ms: Optional[int] = None,
                last_status: Optional[str] = None) -> JobView:
@@ -379,11 +479,13 @@ class ApiGateway:
             # ticker (writer) or other readers while it waits.
             time.sleep(_POLL_S)
 
+    @_deadlined
     def status_history(self, api_key: str, job_id: str) -> list:
         principal = self._require(api_key, READ)
         with self._job_locked(principal, job_id) as (_backend, rec):
             return list(rec.status_history)
 
+    @_deadlined
     def list_jobs(self, api_key: str, tenant: Optional[str] = None,
                   status: Optional[JobStatus] = None,
                   cursor: Optional[str] = None,
@@ -444,10 +546,9 @@ class ApiGateway:
         cur = cursors.get(owner.shard_id)
         best: dict = {}  # job_id -> (is_routed_copy, JobView)
         for backend in self.router.backends:
-            if not backend.alive:
-                # a partial admin listing would silently hide a shard's
-                # tenants; fail honestly instead
-                raise _shard_down(backend)
+            # a partial admin listing would silently hide a shard's
+            # tenants; fail honestly instead (dead OR quarantined)
+            self._check_backend(backend)
             with backend.read_locked(), _meta_guard():
                 for r in backend.platform.meta.jobs_span(
                         lo=lo, hi=hi, status=status, cursor=cur,
@@ -500,6 +601,7 @@ class ApiGateway:
                        if len(items) == limit else None)
         return Page(items=items, next_cursor=next_cursor)
 
+    @_deadlined
     def logs(self, api_key: str, job_id: str, cursor: Optional[str] = None,
              limit: Optional[int] = None,
              wait_ms: Optional[int] = None) -> "Page[str]":
@@ -532,6 +634,7 @@ class ApiGateway:
         return Page(items=lines,
                     next_cursor=None if next_off is None else str(next_off))
 
+    @_deadlined
     def search_logs(self, api_key: str, query: str,
                     job_id: Optional[str] = None,
                     cursor: Optional[str] = None,
@@ -609,8 +712,7 @@ class ApiGateway:
                 continue
             if len(items) >= limit:
                 break
-            if not backend.alive:
-                raise _shard_down(backend)
+            self._check_backend(backend)
             need = limit - len(items)
             with backend.read_locked():
                 recs, next_off = backend.platform.log_index.search_page(
@@ -630,6 +732,7 @@ class ApiGateway:
         return Page(items=items, next_cursor=next_cursor)
 
     # -- lifecycle writes -------------------------------------------------
+    @_deadlined
     def halt(self, api_key: str, job_id: str, requeue: bool = False):
         principal = self._require(api_key, WRITE)
         with self._job_locked(principal, job_id, write=True) \
@@ -642,6 +745,7 @@ class ApiGateway:
             with _meta_guard():
                 backend.platform._halt_internal(job_id, requeue=requeue)
 
+    @_deadlined
     def resume(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
         with self._job_locked(principal, job_id, write=True) \
@@ -652,6 +756,7 @@ class ApiGateway:
             with _meta_guard():
                 backend.platform._resume_internal(job_id)
 
+    @_deadlined
     def cancel(self, api_key: str, job_id: str):
         principal = self._require(api_key, WRITE)
         with self._job_locked(principal, job_id, write=True) \
@@ -663,6 +768,7 @@ class ApiGateway:
                 backend.platform._cancel_internal(job_id)
 
     # -- observability plane (repro.obs) ----------------------------------
+    @_deadlined
     def usage(self, api_key: str, tenant: Optional[str] = None) -> dict:
         """GET /v1/usage: per-tenant usage rows summed across every shard
         (a migrated tenant's history lives on both its shards' meters).
@@ -677,8 +783,7 @@ class ApiGateway:
                            f"cannot read usage of tenant {tenant!r}")
         snaps = []
         for backend in self.router.backends:
-            if not backend.alive:
-                raise _shard_down(backend)
+            self._check_backend(backend)
             with backend.read_locked():
                 snaps.append(backend.platform.meter.snapshot())
         merged = UsageMeter.merge(snaps, tenant=tenant)
@@ -697,6 +802,7 @@ class ApiGateway:
                            f"kind must be a non-empty string, got {kind!r}")
         return kind
 
+    @_deadlined
     def events(self, api_key: str, cursor: Optional[str] = None,
                limit: Optional[int] = None, kind: Optional[str] = None,
                wait_ms: Optional[int] = None) -> dict:
@@ -758,10 +864,9 @@ class ApiGateway:
             sid = backend.shard_id
             if len(items) >= limit:
                 break
-            if not backend.alive:
-                # a partial admin stream would silently lose a shard's
-                # events for this page; fail honestly, cursor unchanged
-                raise _shard_down(backend)
+            # a partial admin stream would silently lose a shard's
+            # events for this page; fail honestly, cursor unchanged
+            self._check_backend(backend)
             need = limit - len(items)
             with backend.read_locked():
                 evs, nxt, m = backend.platform.events.read_since(

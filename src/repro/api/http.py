@@ -116,6 +116,7 @@ from repro.api.types import (
     SubmitRequest,
     SubmitResponse,
 )
+from repro.core.faults import BREAKER_STATE_VALUE
 from repro.core.helpers import LogRecord
 from repro.core.types import JobManifest, JobStatus, TERMINAL
 from repro.obs import (
@@ -145,6 +146,7 @@ STATUS_OF = {
     ErrorCode.UNAVAILABLE: 503,
     ErrorCode.UNSUPPORTED_VERSION: 400,
     ErrorCode.RATE_LIMITED: 429,
+    ErrorCode.DEADLINE_EXCEEDED: 504,
 }
 
 # Canonical route table (docs/api.md is checked against this).
@@ -178,6 +180,10 @@ ADMIN_ROUTES = (
     ("GET", "/v2/admin/migrations/{migration_id}"),
     ("GET", "/v2/admin/operator"),
     ("POST", "/v2/admin/operator/rollout"),
+    ("POST", "/v2/admin/faults"),
+    ("GET", "/v2/admin/faults"),
+    ("DELETE", "/v2/admin/faults"),
+    ("DELETE", "/v2/admin/faults/{fault_id}"),
 )
 
 # The v2 workloads plane (docs/api.md is checked against this too).
@@ -485,6 +491,11 @@ class _Handler(BaseHTTPRequestHandler):
                          "shards": [{"shard_id": b.shard_id,
                                      "status": "ok" if b.alive else "down",
                                      "cordoned": b.cordoned,
+                                     # circuit-breaker verdict on the
+                                     # shard: closed/half_open/open (open
+                                     # = quarantined for gray failure
+                                     # even though alive)
+                                     "breaker": b.breaker.state,
                                      "uptime_ticks": getattr(
                                          b.platform, "ticks", 0),
                                      "events_seq": b.platform.events.seq}
@@ -770,6 +781,18 @@ class _Handler(BaseHTTPRequestHandler):
                 # 202: waves start on the next federation tick
                 return self._send_json(
                     202, admin.start_rollout(key, self._json_body()))
+        elif tail and tail[0] == "faults":
+            if len(tail) == 1:
+                if method == "POST":
+                    return self._send_json(
+                        201, admin.install_fault(key, self._json_body()))
+                if method == "GET":
+                    return self._send_json(200, admin.list_faults(key))
+                if method == "DELETE":
+                    return self._send_json(200, admin.clear_faults(key))
+            elif len(tail) == 2 and method == "DELETE":
+                return self._send_json(
+                    200, admin.clear_faults(key, tail[1]))
         raise ApiError(ErrorCode.NOT_FOUND,
                        f"no route for {method} /v2/admin/{'/'.join(tail)}")
 
@@ -1009,11 +1032,14 @@ class ApiHttpServer:
         backends = self.platform.router.backends
         shard_up, chips, occ, qdepth = [], [], [], []
         wal, ev_seq, ev_drop, uptime = [], [], [], []
+        brk, ddl = [], []
         snaps = []
         for b in backends:
             lbl = {"shard": b.shard_id}
             p = b.platform
             shard_up.append((lbl, 1 if b.alive else 0))
+            brk.append((lbl, BREAKER_STATE_VALUE[b.breaker.state]))
+            ddl.append((lbl, b.breaker.deadline_exceeded_total))
             chips.append((lbl, p.cluster.total_chips))
             occ.append((lbl, p.cluster.used_chips))
             qdepth.append((lbl, len(getattr(p.scheduler, "queue", ()))))
@@ -1051,6 +1077,12 @@ class ApiHttpServer:
              "Gangs waiting for placement", qdepth),
             ("ffdl_wal_flushes_total", "counter",
              "Metastore WAL flushes (group commit)", wal),
+            ("ffdl_breaker_state", "gauge",
+             "Per-shard circuit breaker (0=closed 1=half_open 2=open)",
+             brk),
+            ("ffdl_deadline_exceeded_total", "counter",
+             "Verb/tick deadline overruns recorded against the shard",
+             ddl),
             ("ffdl_events_seq", "gauge",
              "Event-bus high-water sequence number", ev_seq),
             ("ffdl_events_dropped_total", "counter",
@@ -1175,6 +1207,12 @@ class HttpTransport:
         self._port = split.port or 80
         self.timeout = timeout
         self._local = threading.local()
+        # optional fault-plane attachment: tests/benchmarks point this at
+        # a FaultPlane to exercise the wire path's own interposition
+        # points (``http.send`` / ``http.recv``) — e.g. a flaky or slow
+        # network between client and API tier
+        self.faults = None
+        self.fault_key: Optional[str] = None
         # transport telemetry (benchmarks/observability.py compares these:
         # one SSE stream replaces a whole long-poll request train)
         self._counters_lock = threading.Lock()
@@ -1236,6 +1274,9 @@ class HttpTransport:
                 conn.sock.settimeout(timeout_floor)
                 raised_timeout = True
             try:
+                if self.faults is not None:
+                    self.faults.on("http.send", key=self.fault_key,
+                                   exc=lambda m: OSError(m))
                 conn.request(method, path, body=data, headers=hdrs)
             except (http.client.HTTPException, OSError) as e:
                 self._drop_conn()
@@ -1244,11 +1285,26 @@ class HttpTransport:
                 raise ApiError(ErrorCode.UNAVAILABLE,
                                f"cannot reach API server: {e}") from None
             try:
+                if self.faults is not None:
+                    self.faults.on("http.recv", key=self.fault_key,
+                                   exc=lambda m: OSError(m))
                 resp = conn.getresponse()
                 status, payload = resp.status, resp.read()
                 if raised_timeout:  # keep-alive socket back to the default
                     conn.sock.settimeout(self.timeout)
                 break
+            except TimeoutError:
+                # socket read timeout: the server (or an injected hang) is
+                # holding the response past the transport's budget — the
+                # client-side deadline. NOT retried here: the request may
+                # be executing server-side; idempotent-verb retry is the
+                # ApiClient RetryPolicy's call.
+                self._drop_conn()
+                budget = timeout_floor if raised_timeout else self.timeout
+                raise ApiError(
+                    ErrorCode.DEADLINE_EXCEEDED,
+                    f"no response within the transport deadline "
+                    f"({budget:.1f}s)") from None
             except (http.client.HTTPException, OSError) as e:
                 self._drop_conn()
                 if reused and attempt == 0 and method == "GET":
@@ -1471,6 +1527,18 @@ class HttpTransport:
     def start_rollout(self, api_key, body: dict) -> dict:
         return self._request("POST", "/v2/admin/operator/rollout", api_key,
                              body=body)[1]
+
+    def install_fault(self, api_key, body: dict) -> dict:
+        return self._request("POST", "/v2/admin/faults", api_key,
+                             body=body)[1]
+
+    def list_faults(self, api_key) -> dict:
+        return self._request("GET", "/v2/admin/faults", api_key)[1]
+
+    def clear_faults(self, api_key, fault_id: Optional[str] = None) -> dict:
+        path = ("/v2/admin/faults" if fault_id is None
+                else f"/v2/admin/faults/{fault_id}")
+        return self._request("DELETE", path, api_key)[1]
 
     # -- v2 workloads plane -----------------------------------------------
     # Same method names/signatures as the in-process WorkloadGateway, so

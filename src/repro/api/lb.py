@@ -19,6 +19,16 @@ replica routes the same tenant to the same shard, so failing over would
 burn every replica to learn nothing. The balancer propagates it
 immediately (and counts it in ``stats["shard_down"]``); tenants on other
 shards are unaffected, and replica crash-masking still composes on top.
+
+Gray failures compose the same way: ``DEADLINE_EXCEEDED`` (the verb
+outlived its budget against a wedged-but-alive shard) is deliberately
+NOT retryable — every replica fronts the same shard, so a failover
+would burn another full deadline budget per replica to learn nothing.
+It propagates immediately and is counted in
+``stats["deadline_exceeded"]``; the per-shard circuit breaker (see
+``repro.core.faults``) then quarantines the shard so subsequent calls
+get fast ``UNAVAILABLE`` (``shard_down`` + ``breaker_open`` details)
+instead of each eating a budget.
 """
 
 from __future__ import annotations
@@ -43,7 +53,7 @@ class LoadBalancer:
         # report would undercount under exactly the loads they measure
         self._stats_lock = threading.Lock()
         self.stats = {"calls": 0, "failovers": 0, "exhausted": 0,
-                      "shard_down": 0}
+                      "shard_down": 0, "deadline_exceeded": 0}
 
     def _bump(self, key: str):
         with self._stats_lock:
@@ -64,6 +74,8 @@ class LoadBalancer:
             try:
                 return getattr(replica, method)(*args, **kwargs)
             except ApiError as e:
+                if e.code is ErrorCode.DEADLINE_EXCEEDED:
+                    self._bump("deadline_exceeded")
                 if not e.retryable:
                     raise
                 if e.details.get("shard_down"):

@@ -62,6 +62,15 @@ class ErrorCode(str, Enum):
     UNSUPPORTED_VERSION = "UNSUPPORTED_VERSION"
     RATE_LIMITED = "RATE_LIMITED"              # per-tenant backpressure (429);
     #                                            details carry ``retry_after``
+    DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"    # request outlived its per-verb
+    #                                            deadline budget (504). NOT
+    #                                            LB-retryable: every replica
+    #                                            fronts the same shard, so a
+    #                                            wedged shard would just eat
+    #                                            another full budget per
+    #                                            replica. Idempotent verbs may
+    #                                            be retried client-side with
+    #                                            backoff (see ApiClient).
 
 
 # Codes the load balancer may transparently retry on another replica.

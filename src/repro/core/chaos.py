@@ -7,6 +7,16 @@ helper/controller crashes, etcd/metastore blips, object-store faults, and
 volume-provisioning failures, at configurable rates. Benchmarks/failures.py
 drives a long campaign and aggregates the event log into the paper's
 Table 8 / Fig 7-8 analysis.
+
+``ChaosConfig`` remains the compat shim for the probabilistic kill/fault
+rates, but the *point-failure* paths (volume provisioning, object-store
+faults) now ride the unified fault-injection registry
+(:class:`repro.core.faults.FaultPlane`): an admin-installed plan on
+``volume.provision`` or ``objstore.*`` composes with the probability
+draws below. The monkey's own RNG stream is untouched — draw order and
+count are identical with or without a plane attached — so seeded
+campaigns reproduce bit-for-bit (``benchmarks/failures.py`` output is
+unchanged).
 """
 
 from __future__ import annotations
@@ -38,11 +48,21 @@ class ChaosMonkey:
         self._downed_hosts: dict[str, float] = {}
 
     def should_fail(self, kind: str, _key: str) -> bool:
-        """Point-failure queries (e.g. volume provisioning in the Guardian)."""
+        """Point-failure queries (e.g. volume provisioning in the Guardian).
+
+        The probability draw stays on the monkey's own RNG stream (same
+        draw order/count as before the fault plane existed), then the
+        shared registry gets a say: an installed ``volume.provision``
+        plan can force the failure deterministically.
+        """
         if not self.enabled:
             return False
         if kind == "volume_provision":
-            return bool(self.rng.random() < self.cfg.p_volume_fail)
+            hit = bool(self.rng.random() < self.cfg.p_volume_fail)
+            plane = getattr(self.p, "faults", None)
+            if not hit and plane is not None:
+                hit = plane.should_fail("volume.provision", key=_key)
+            return hit
         return False
 
     def tick(self):
@@ -91,6 +111,15 @@ class ChaosMonkey:
                     g.controller.crash()
                     p.events.emit("chaos", "controller_killed", job=g.job_id)
                     p.clock.call_later(3.5, g.controller.restart)
-        # object-store faults
+        # object-store faults: the draw stays on the monkey's stream; the
+        # injection itself rides the unified registry (one-shot plan on
+        # the next objstore op) when a plane is attached, falling back to
+        # the legacy fail_next counter otherwise
         if cfg.p_objstore_fail > 0 and rng.random() < cfg.p_objstore_fail:
-            p.objstore.fail_next = 1
+            plane = getattr(p, "faults", None)
+            if plane is not None:
+                plane.install("objstore.*", key=p.objstore.fault_key,
+                              error="chaos object-store fault",
+                              mode="one_shot")
+            else:
+                p.objstore.fail_next = 1

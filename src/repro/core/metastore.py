@@ -91,6 +91,10 @@ class MetaStore:
         self.journal_path = journal_path
         self._fh = open(journal_path, "a") if journal_path else None
         self.available = True
+        # gray-failure interposition (wal.append / wal.flush): wired by the
+        # owning platform to the shared FaultPlane; key scopes per shard
+        self.faults = None
+        self.fault_key: Optional[str] = None
 
     # -- chaos -----------------------------------------------------------
     def _check(self):
@@ -105,6 +109,11 @@ class MetaStore:
 
     # -- WAL --------------------------------------------------------------
     def _append(self, op: dict):
+        if self.faults is not None:
+            # a slow/hung/failed WAL append surfaces as the same
+            # ConnectionError the availability flag raises -> UNAVAILABLE
+            self.faults.on("wal.append", key=self.fault_key,
+                           exc=ConnectionError)
         self._journal.append(op)
         if self._fh:
             self._pending.append(op)
@@ -113,7 +122,12 @@ class MetaStore:
         """Group commit: everything buffered since the last commit goes out
         in one write+flush. No-op inside a ``batch()`` scope — the batch
         exit issues the single flush for the whole group."""
-        if self._batch_depth > 0 or not self._pending:
+        if self._batch_depth > 0:
+            return
+        if self.faults is not None:
+            self.faults.on("wal.flush", key=self.fault_key,
+                           exc=ConnectionError)
+        if not self._pending:
             return
         if self._fh:
             self._fh.write("".join(json.dumps(op, default=str) + "\n"

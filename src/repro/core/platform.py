@@ -77,7 +77,8 @@ class FfDLPlatform:
                  objstore_bandwidth: Optional[float] = None,
                  n_api_replicas: int = 3, shard_id: str = "shard-0",
                  job_id_base: int = 0, shared_reads: bool = True,
-                 event_retention: int = DEFAULT_RETENTION):
+                 event_retention: int = DEFAULT_RETENTION,
+                 fault_plane=None):
         # -- shard construction hooks (repro.api.federation) --------------
         # shard_id names this platform as a backend shard; job_id_base
         # offsets the job counter so ids stay globally unique across a
@@ -91,9 +92,21 @@ class FfDLPlatform:
         self.events = EventLog(self.clock, retention=event_retention,
                                shard_id=shard_id)
         self.etcd = EtcdLike(self.clock, self.events)
+        # Unified fault-injection plane (repro.core.faults): every gray-
+        # failure interposition point on this shard draws from this one
+        # seeded registry. A Federation passes its shared plane in so one
+        # /v2/admin/faults surface covers the whole fleet; standalone
+        # platforms get their own.
+        from repro.core.faults import FaultPlane
+        self.faults = fault_plane if fault_plane is not None \
+            else FaultPlane(seed=seed)
         self.meta = MetaStore(self.clock)
+        self.meta.faults = self.faults
+        self.meta.fault_key = shard_id
         self.objstore = ObjectStore(clock=None,
                                     bandwidth_bps=objstore_bandwidth)
+        self.objstore.faults = self.faults
+        self.objstore.fault_key = shard_id
         self.objstore.create_bucket("datasets")
         self.objstore.create_bucket("results")
         self.cluster = ClusterModel(n_hosts, chips_per_host, self.clock,
@@ -140,6 +153,7 @@ class FfDLPlatform:
         # single shard as a resource; migrations need a Federation.
         from repro.api.admin import AdminGateway, AdminPlane
         self.admin = AdminPlane(self.router, self.auth)
+        self.admin.faults = self.faults
         self.admin_api = AdminGateway(self.admin, self.auth)
         # v2 workloads plane (repro.workloads): manifests are storable and
         # wire-addressable on a standalone platform, but convergence is a
@@ -232,6 +246,11 @@ class FfDLPlatform:
 
     # ------------------------------------------------------------- engine
     def tick(self):
+        # shard.tick interposition: an injected hang here wedges the shard
+        # exactly like a gray failure would — the tick thread holds the
+        # shard write lock, verbs bound their lock waits by deadline, and
+        # Federation.tick's per-shard tick budget frees the ticker itself.
+        self.faults.on("shard.tick", key=self.shard_id)
         self.ticks += 1
         self.clock.advance(self.tick_period)
         self.clock.run_until(self.clock.now())

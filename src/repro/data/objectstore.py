@@ -52,11 +52,18 @@ class ObjectStore:
         self.clock = clock
         self.bandwidth_bps = bandwidth_bps
         self.fail_next: int = 0  # chaos hook: fail the next N operations
+        # gray-failure interposition (objstore.get / objstore.put): wired
+        # by the owning platform to the shared FaultPlane
+        self.faults = None
+        self.fault_key = None
 
     def _maybe_fail(self, op: str):
         if self.fail_next > 0:
             self.fail_next -= 1
             raise ObjectStoreError(f"injected object-store fault during {op}")
+        if self.faults is not None:
+            self.faults.on(f"objstore.{op}", key=self.fault_key,
+                           exc=ObjectStoreError)
 
     def _charge(self, nbytes: int):
         if self.clock is not None and self.bandwidth_bps:

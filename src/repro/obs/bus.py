@@ -69,6 +69,11 @@ PLATFORM_EVENT_KINDS = (
     "operator_scale_up", "operator_scale_down", "operator_isolate_tenant",
     "operator_rollout_wave", "operator_rollout_done",
     "operator_rollout_halted", "operator_rollback",
+    "operator_gray_restart",
+    # gray-failure resilience (repro.core.faults defenses): a shard tick
+    # that outlived its deadline budget (Federation.tick records the
+    # overrun on the shard's breaker and keeps the fleet ticking)
+    "shard_tick_deadline",
     # declarative workloads (repro.workloads: plane apply/delete plus
     # every reconciler act — pipelines, recurring jobs, serving tier)
     "workload_applied", "workload_deleted",

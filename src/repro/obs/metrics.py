@@ -34,6 +34,8 @@ METRIC_NAMES = (
     "ffdl_shard_occupancy_chips",
     "ffdl_scheduler_queue_depth",
     "ffdl_wal_flushes_total",
+    "ffdl_breaker_state",
+    "ffdl_deadline_exceeded_total",
     "ffdl_events_seq",
     "ffdl_events_dropped_total",
     "ffdl_migrations",

@@ -52,6 +52,7 @@ OPERATOR_EVENT_KINDS = (
     "operator_rollout_done",
     "operator_rollout_halted",
     "operator_rollback",
+    "operator_gray_restart",
 )
 
 _NEVER = -(10 ** 9)
@@ -74,6 +75,7 @@ class OperatorConfig:
     isolate_cooldown_ticks: int = 50  # per-tenant gap between isolations
     validate_ticks: int = 3         # post-restart health-watch ticks per wave
     allowed_failures: int = 0       # job_failed regressions tolerated per wave
+    gray_cooldown_ticks: int = 30   # min ticks between restarts of one shard
     max_decisions: int = 200        # decision-log ring size
 
 
@@ -95,6 +97,7 @@ class OperatorPolicy:
         self.rollout: Optional[dict] = None
         self.last_occupancy = 0.0
         self._isolated_at: Dict[str, int] = {}
+        self._gray_at: Dict[str, int] = {}
         self.decisions: Deque[dict] = collections.deque(
             maxlen=config.max_decisions)
 
@@ -156,6 +159,24 @@ class OperatorPolicy:
                     "action": "retire_shard", "shard": self.retiring,
                     "reason": "drain complete; no residents remain"}))
                 self.retiring = None
+
+        # 0b. gray-failure response: a shard that is ALIVE but whose
+        # circuit breaker is open is wedged, not dead — liveness checks
+        # miss it (that is what makes the failure gray). A restart clears
+        # the wedge (WAL recovery; the breaker resets closed); if the
+        # shard is still sick the breaker re-opens and, after the
+        # cooldown, we try again rather than flap every tick.
+        for s in shards:
+            if (s["alive"] and not s["retired"]
+                    and s.get("breaker", "closed") == "open"
+                    and self.tick - self._gray_at.get(
+                        s["shard_id"], _NEVER) >= cfg.gray_cooldown_ticks):
+                out.append(self._log({
+                    "action": "gray_restart", "shard": s["shard_id"],
+                    "reason": (f"breaker open on alive shard "
+                               f"{s['shard_id']}: gray failure — restart "
+                               f"to clear the wedge")}))
+                self._gray_at[s["shard_id"]] = self.tick
 
         # 1. a live rollout owns the fleet: no autoscaling or isolation
         # runs underneath it (scaling mid-wave would fight the drain).
@@ -395,6 +416,9 @@ class Operator:
         for b in fed.router.backends:
             entry = {"shard_id": b.shard_id, "alive": b.alive,
                      "cordoned": b.cordoned,
+                     "breaker": (b.breaker.state
+                                 if getattr(b, "breaker", None) is not None
+                                 else "closed"),
                      "retired": getattr(b, "retired", False),
                      "version": getattr(b, "version", "v0"),
                      "chips_total": 0, "chips_used": 0, "jobs": 0,
@@ -502,6 +526,13 @@ class Operator:
             drained = [(admin.migrations[mid].tenant, d["shard"])
                        for mid in result["migrations"]]
             self.policy.rollout["drained"] = drained
+        elif action == "gray_restart":
+            b = fed.router.backend(d["shard"])
+            version = getattr(b, "version", "v0")
+            b.crash()
+            b.restart(version=version)
+            self._emit("operator_gray_restart", shard=d["shard"],
+                       reason=d["reason"])
         elif action == "rollout_restart":
             b = fed.router.backend(d["shard"])
             b.crash()

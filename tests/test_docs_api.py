@@ -218,6 +218,56 @@ def test_operator_contract_documented_and_real():
         assert term in arch, f"{term!r} missing from operator section"
 
 
+def test_fault_plane_contract_documented_and_real():
+    """The gray-failure resilience surface (tentpole) must be documented
+    and must name only machinery that exists: every interposition point,
+    the admin fault verbs at every layer, breaker states, and the
+    architecture section describing the defenses."""
+    from repro.api.admin import AdminGateway, AdminPlane
+    from repro.api.client import AdminClient, ApiClient, RetryPolicy
+    from repro.api.http import HttpTransport
+    from repro.core.faults import (
+        BREAKER_STATE_VALUE,
+        FAULT_POINTS,
+        BreakerPolicy,
+        FaultPlane,
+        ShardBreaker,
+        deadline_scope,
+    )
+    for cls in (AdminGateway, AdminPlane, HttpTransport, AdminClient):
+        for verb in ("install_fault", "list_faults", "clear_faults"):
+            assert hasattr(cls, verb), f"{cls.__name__} lacks {verb}"
+    assert hasattr(ApiClient, "_read") and RetryPolicy().max_attempts > 1
+    for name in ("install", "clear", "on", "should_fail", "list"):
+        assert hasattr(FaultPlane, name)
+    for name in ("step", "observe", "allow_request"):
+        assert hasattr(BreakerPolicy, name)
+    assert hasattr(ShardBreaker, "allow") and callable(deadline_scope)
+    doc = _api_md()
+    for point in FAULT_POINTS:
+        assert f"`{point}`" in doc, \
+            f"fault point {point!r} missing from docs/api.md"
+    for state in BREAKER_STATE_VALUE:
+        assert f'"{state}"' in doc or f"`{state}`" in doc, \
+            f"breaker state {state!r} missing from docs/api.md"
+    for field in ("fault_id", "latency_s", "hang", "probability",
+                  "one_shot", "persistent", "breaker"):
+        assert f'"{field}"' in doc or f"`{field}`" in doc, \
+            f"fault-plan field {field!r} undocumented"
+    arch = ARCH.read_text()
+    assert "## Fault model & resilience" in arch
+    for term in ("core/faults.py", "FaultPlane", "FaultPlan",
+                 "BreakerPolicy", "ShardBreaker", "deadline_scope",
+                 "verb_budget_s", "tick_budget_s", "MAX_HANG_S",
+                 "RetryPolicy", "gray_cooldown_ticks",
+                 "shard_tick_deadline", "operator_gray_restart",
+                 "benchmarks/faults.py", "BENCH_faults.json"):
+        assert term in arch, f"{term!r} missing from resilience section"
+    for point in FAULT_POINTS:
+        assert f"`{point}`" in arch, \
+            f"fault point {point!r} missing from architecture.md"
+
+
 def test_workloads_contract_documented_and_real():
     """The declarative-workloads surface (tentpole) must be documented
     and must name only machinery that exists: every /v2/workloads route,

@@ -1,0 +1,688 @@
+"""Gray-failure resilience: the unified fault-injection plane and its
+defenses (deadlines, retries, circuit breakers).
+
+Covers the ISSUE-9 contract:
+  * ``repro.core.faults`` — deadline context, FaultPlane registry
+    semantics (keys, wildcards, one-shots, hangs, seeded probability),
+    BreakerPolicy as a pure, order-independent state machine;
+  * gateway integration — NO v1 verb blocks past its deadline budget
+    under an injected hang, deadline overruns feed the shard breaker,
+    an open breaker quarantines the shard with fast UNAVAILABLE
+    (``breaker_open`` + ``retry_after`` details) and a restart resets it;
+  * the ``/v2/admin/faults`` wire surface (install/list/clear, admin
+    scope enforced, clear wakes hung waiters);
+  * ChaosMonkey compatibility — point failures ride the registry without
+    perturbing the monkey's own RNG stream;
+  * client defenses — RetryPolicy (idempotent reads only, full-jitter
+    backoff honouring retry_after) and SSE reconnect backoff.
+"""
+
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - vendored fallback
+    from _propstrat import given, settings, st
+
+from repro.api.client import AdminClient, ApiClient, RetryPolicy, _backoff_s
+from repro.api.federation import Federation
+from repro.api.types import ApiError, ErrorCode
+from repro.core import JobManifest, JobStatus
+from repro.core.faults import (
+    BreakerConfig,
+    BreakerPolicy,
+    DeadlineExceeded,
+    FAULT_POINTS,
+    FaultInjected,
+    FaultPlane,
+    ShardBreaker,
+    deadline_scope,
+    deadline_sleep,
+    remaining,
+)
+
+import random
+
+
+def sim_job(name="j", tenant="team-a", **kw):
+    kw.setdefault("n_learners", 1)
+    kw.setdefault("chips_per_learner", 1)
+    kw.setdefault("sim_duration", 60)
+    return JobManifest(name=name, tenant=tenant, **kw)
+
+
+# --------------------------------------------------------------------------
+# deadline context
+# --------------------------------------------------------------------------
+
+class TestDeadlineContext:
+    def test_no_ambient_deadline(self):
+        assert remaining() is None
+
+    def test_scope_exposes_budget(self):
+        with deadline_scope(5.0):
+            rem = remaining()
+            assert rem is not None and 0 < rem <= 5.0
+        assert remaining() is None
+
+    def test_nested_scopes_take_min_never_extend(self):
+        with deadline_scope(0.2):
+            with deadline_scope(60.0):  # cannot extend the outer budget
+                assert remaining() <= 0.2
+            with deadline_scope(0.05):  # can tighten it
+                assert remaining() <= 0.05
+
+    def test_deadline_sleep_raises_at_budget(self):
+        t0 = time.monotonic()
+        with deadline_scope(0.1):
+            with pytest.raises(DeadlineExceeded):
+                deadline_sleep(10.0, what="test sleep")
+        assert time.monotonic() - t0 < 1.0
+
+    def test_deadline_sleep_without_scope_sleeps_plainly(self):
+        t0 = time.monotonic()
+        deadline_sleep(0.01)
+        assert time.monotonic() - t0 < 0.5
+
+
+# --------------------------------------------------------------------------
+# FaultPlane registry
+# --------------------------------------------------------------------------
+
+class TestFaultPlane:
+    def test_install_validates(self):
+        plane = FaultPlane(seed=0)
+        with pytest.raises(ValueError):
+            plane.install("not.a.point", hang=True)
+        with pytest.raises(ValueError):
+            plane.install("wal.flush", error="x", mode="bogus")
+        with pytest.raises(ValueError):
+            plane.install("wal.flush")  # no effect
+        with pytest.raises(ValueError):
+            plane.install("wal.flush", error="x", probability=0.0)
+        with pytest.raises(ValueError):
+            plane.install("wal.flush", latency_s=-1)
+
+    def test_one_shot_error_fires_exactly_once(self):
+        plane = FaultPlane(seed=0)
+        plane.install("objstore.get", error="boom", mode="one_shot")
+        with pytest.raises(FaultInjected):
+            plane.on("objstore.get")
+        plane.on("objstore.get")  # consumed: no-op now
+        assert plane.list() == []
+
+    def test_persistent_plan_counts_hits(self):
+        plane = FaultPlane(seed=0)
+        fid = plane.install("wal.append", latency_s=0.001)["fault_id"]
+        for _ in range(3):
+            plane.on("wal.append")
+        (view,) = plane.list()
+        assert view["fault_id"] == fid and view["hits"] == 3
+        assert plane.triggered["wal.append"] == 3
+
+    def test_wildcard_point_suffix(self):
+        plane = FaultPlane(seed=0)
+        plane.install("objstore.*", error="flaky")
+        with pytest.raises(FaultInjected):
+            plane.on("objstore.get")
+        with pytest.raises(FaultInjected):
+            plane.on("objstore.put")
+        plane.on("wal.flush")  # other families untouched
+
+    def test_key_scoping(self):
+        plane = FaultPlane(seed=0)
+        plane.install("shard.tick", key="shard-0", error="wedged")
+        plane.on("shard.tick", key="shard-1")  # no match
+        with pytest.raises(FaultInjected):
+            plane.on("shard.tick", key="shard-0")
+
+    def test_custom_exception_factory(self):
+        plane = FaultPlane(seed=0)
+        plane.install("http.send", error="cable cut")
+        with pytest.raises(OSError):
+            plane.on("http.send", exc=lambda m: OSError(m))
+
+    def test_probability_is_seeded_and_deterministic(self):
+        def pattern(seed):
+            plane = FaultPlane(seed=seed)
+            plane.install("wal.flush", error="x", probability=0.5)
+            hits = []
+            for _ in range(32):
+                try:
+                    plane.on("wal.flush")
+                    hits.append(0)
+                except FaultInjected:
+                    hits.append(1)
+            return hits
+        assert pattern(7) == pattern(7)
+        assert pattern(7) != pattern(8)
+        assert 0 < sum(pattern(7)) < 32
+
+    def test_clear_wakes_hung_waiter(self):
+        plane = FaultPlane(seed=0)
+        plane.install("wal.flush", hang=True)
+        released = threading.Event()
+
+        def victim():
+            plane.on("wal.flush")
+            released.set()
+
+        t = threading.Thread(target=victim, daemon=True)
+        t.start()
+        time.sleep(0.05)
+        assert not released.is_set()
+        assert plane.clear() == 1
+        assert released.wait(2.0), "clear() must wake the hung waiter"
+
+    def test_hang_respects_ambient_deadline(self):
+        plane = FaultPlane(seed=0)
+        plane.install("shard.tick", hang=True)
+        t0 = time.monotonic()
+        with deadline_scope(0.1):
+            with pytest.raises(DeadlineExceeded):
+                plane.on("shard.tick")
+        assert time.monotonic() - t0 < 1.0
+
+    def test_one_shot_hang_survives_until_cleared(self):
+        # a one-shot hang plan must stay listed while its waiter is hung
+        # (clear() needs the Event), but never trigger twice
+        plane = FaultPlane(seed=0)
+        plane.install("wal.flush", hang=True, mode="one_shot")
+        with deadline_scope(0.05):
+            with pytest.raises(DeadlineExceeded):
+                plane.on("wal.flush")
+        (view,) = plane.list()
+        assert view["spent"] is True
+        plane.on("wal.flush")  # spent: no second trigger
+        assert plane.clear() == 1
+
+
+# --------------------------------------------------------------------------
+# BreakerPolicy: pure state machine
+# --------------------------------------------------------------------------
+
+CFG = BreakerConfig(failure_threshold=3, cooldown_s=5.0, probe_successes=1)
+
+
+class TestBreakerPolicy:
+    def test_opens_after_consecutive_failures(self):
+        b = BreakerPolicy(CFG)
+        for _ in range(2):
+            b.step(0.0, failures=1)
+        assert b.state == "closed"
+        b.step(0.0, failures=1)
+        assert b.state == "open"
+
+    def test_success_resets_streak(self):
+        b = BreakerPolicy(CFG)
+        for _ in range(5):
+            b.step(0.0, failures=1)
+            b.step(0.0, successes=1)
+        # interleaved successes: never 3 consecutive failures
+        assert b.state == "closed"
+
+    def test_open_rejects_until_cooldown_then_half_open(self):
+        b = BreakerPolicy(CFG)
+        b.step(0.0, failures=3)
+        assert b.state == "open"
+        assert not b.allow_request(1.0)
+        assert b.allow_request(5.0)  # cooldown elapsed: probe admitted
+        assert b.state == "half_open"
+
+    def test_half_open_probe_success_closes(self):
+        b = BreakerPolicy(CFG)
+        b.step(0.0, failures=3)
+        assert b.allow_request(5.0)
+        b.step(5.0, successes=1)
+        assert b.state == "closed"
+        assert b.failure_streak == 0
+
+    def test_half_open_probe_failure_reopens(self):
+        b = BreakerPolicy(CFG)
+        b.step(0.0, failures=3)
+        assert b.allow_request(5.0)
+        b.step(5.0, failures=1)
+        assert b.state == "open"
+        assert not b.allow_request(6.0)  # cooldown restarts from reopen
+
+    def test_transitions_are_journaled(self):
+        b = BreakerPolicy(CFG)
+        b.step(0.0, failures=3)
+        b.allow_request(5.0)
+        b.step(5.0, successes=1)
+        assert [(t["from"], t["to"]) for t in b.transitions] == [
+            ("closed", "open"), ("open", "half_open"),
+            ("half_open", "closed")]
+
+    def test_replay_determinism(self):
+        outcomes = ["fail", "ok", "fail", "fail", "fail", "ok"]
+        runs = []
+        for _ in range(2):
+            b = BreakerPolicy(CFG)
+            for i, o in enumerate(outcomes):
+                b.observe(float(i), [o])
+            runs.append((b.state, b.transitions))
+        assert runs[0] == runs[1]
+
+    @settings(max_examples=25, deadline=None)
+    @given(batches=st.lists(
+        st.lists(st.sampled_from(["ok", "fail"]), min_size=0, max_size=6),
+        min_size=1, max_size=8))
+    def test_batch_order_independence(self, batches):
+        """Shuffling outcomes WITHIN each observation batch (8 seeded
+        shuffles) never changes the breaker's state trajectory — the
+        aggregate step() semantics make concurrent same-tick outcomes
+        commute."""
+        def run(perm_seed):
+            rng = random.Random(perm_seed)
+            b = BreakerPolicy(CFG)
+            states = []
+            for i, batch in enumerate(batches):
+                shuffled = list(batch)
+                rng.shuffle(shuffled)
+                states.append(b.observe(float(i), shuffled))
+            return states, [(t["from"], t["to"]) for t in b.transitions]
+        baseline = run(0)
+        for seed in range(1, 8):
+            assert run(seed) == baseline
+
+
+class TestShardBreaker:
+    def test_thread_safe_counts_and_reset(self):
+        clock = [0.0]
+        b = ShardBreaker(CFG, clock=lambda: clock[0])
+        for _ in range(3):
+            b.record_failure(deadline=True)
+        assert b.state == "open"
+        assert b.deadline_exceeded_total == 3
+        assert not b.allow()
+        clock[0] = 5.0
+        assert b.allow()          # half-open probe
+        b.record_success()
+        assert b.state == "closed"
+        b.reset()
+        assert b.state == "closed" and b.transitions == []
+
+
+# --------------------------------------------------------------------------
+# gateway + federation integration
+# --------------------------------------------------------------------------
+
+@pytest.fixture
+def fed():
+    f = Federation(n_shards=2, n_api_replicas=2, seed=0,
+                   tick_budget_s=0.2)
+    for r in f.api_replicas:
+        r.verb_budget_s = 0.3
+    return f
+
+
+V1_VERBS = ("submit", "status", "status_history", "list_jobs", "logs",
+            "search_logs", "halt", "resume", "cancel", "usage", "events")
+
+
+class TestGatewayDeadlines:
+    def test_no_verb_blocks_past_deadline_under_hang(self, fed):
+        """THE gray-failure guarantee: with a hang injected at dispatch,
+        every v1 verb returns DEADLINE_EXCEEDED within its budget plus
+        slack — none wedges its caller."""
+        cli = ApiClient.for_platform(fed)
+        adm = AdminClient.for_platform(fed)
+        args = {"submit": lambda: cli.submit(sim_job()),
+                "status": lambda: cli.status("job-1"),
+                "status_history": lambda: cli.status_history("job-1"),
+                "list_jobs": lambda: cli.list_jobs(),
+                "logs": lambda: cli.logs("job-1", limit=5),
+                "search_logs": lambda: cli.search_logs("x", limit=5),
+                "halt": lambda: cli.halt("job-1"),
+                "resume": lambda: cli.resume("job-1"),
+                "cancel": lambda: cli.cancel("job-1"),
+                "usage": lambda: cli.usage(),
+                "events": lambda: cli.events(limit=5)}
+        assert set(args) == set(V1_VERBS)
+        for verb in V1_VERBS:
+            adm.install_fault("gateway.dispatch", key=verb, hang=True)
+            t0 = time.monotonic()
+            with pytest.raises(ApiError) as ei:
+                args[verb]()
+            elapsed = time.monotonic() - t0
+            adm.clear_faults()
+            assert ei.value.code is ErrorCode.DEADLINE_EXCEEDED, verb
+            assert elapsed < 0.3 + 1.0, f"{verb} blocked {elapsed:.2f}s"
+            assert ei.value.details["verb"] == verb
+
+    def test_deadline_exceeded_is_not_lb_retried(self, fed):
+        adm = AdminClient.for_platform(fed)
+        cli = ApiClient.for_platform(fed)
+        adm.install_fault("gateway.dispatch", key="list_jobs", hang=True)
+        with pytest.raises(ApiError):
+            cli.list_jobs()
+        adm.clear_faults()
+        assert fed.api.stats["deadline_exceeded"] == 1
+        assert fed.api.stats["failovers"] == 0
+
+    def test_wait_ms_extends_the_budget(self, fed):
+        # a long-poll park must not be misread as a gray failure: the
+        # budget covers verb_budget_s + wait_ms
+        cli = ApiClient.for_platform(fed)
+        jid = cli.submit(sim_job())
+        t0 = time.monotonic()
+        view = fed.api.status(cli.api_key, jid, wait_ms=600)
+        assert time.monotonic() - t0 < 5.0
+        assert view.status  # parked past verb_budget_s without a 504
+
+
+class TestBreakerQuarantine:
+    def _wedge_shard0(self, fed, adm):
+        adm.install_fault("shard.tick", key="shard-0", hang=True)
+        for _ in range(3):
+            fed.tick()
+        adm.clear_faults()
+
+    def test_hung_tick_opens_breaker_fleet_keeps_ticking(self, fed):
+        adm = AdminClient.for_platform(fed)
+        ticks_before = fed.shards[1].ticks
+        self._wedge_shard0(fed, adm)
+        assert fed.backends[0].breaker.state == "open"
+        assert fed.backends[1].breaker.state == "closed"
+        assert fed.shards[1].ticks == ticks_before + 3
+        assert fed.shards[0].events.count("shard_tick_deadline") == 3
+        assert fed.backends[0].breaker.deadline_exceeded_total == 3
+
+    def test_open_breaker_fast_fails_with_details(self, fed):
+        adm = AdminClient.for_platform(fed)
+        self._wedge_shard0(fed, adm)
+        tenant = next(t for t in ("t-%d" % i for i in range(64))
+                      if fed.shard_of(t) == "shard-0")
+        cli = ApiClient(fed.api, fed.auth.issue_key(tenant))
+        t0 = time.monotonic()
+        with pytest.raises(ApiError) as ei:
+            cli.list_jobs()
+        assert time.monotonic() - t0 < 0.2, "open breaker must fail fast"
+        e = ei.value
+        assert e.code is ErrorCode.UNAVAILABLE
+        assert e.details["breaker_open"] and e.details["shard_down"]
+        assert e.details["retry_after"] > 0
+        # health and admin views surface the quarantine
+        assert adm.get_shard("shard-0")["breaker"] == "open"
+
+    def test_healthy_shard_tenants_unaffected(self, fed):
+        adm = AdminClient.for_platform(fed)
+        self._wedge_shard0(fed, adm)
+        tenant = next(t for t in ("t-%d" % i for i in range(64))
+                      if fed.shard_of(t) == "shard-1")
+        cli = ApiClient(fed.api, fed.auth.issue_key(tenant))
+        jid = cli.submit(sim_job(tenant=tenant))
+        assert cli.status(jid) is not None  # full service on shard-1
+
+    def test_restart_resets_breaker_and_recovers(self, fed):
+        adm = AdminClient.for_platform(fed)
+        self._wedge_shard0(fed, adm)
+        assert fed.backends[0].breaker.state == "open"
+        fed.backends[0].crash()
+        fed.backends[0].restart()
+        assert fed.backends[0].breaker.state == "closed"
+        tenant = next(t for t in ("t-%d" % i for i in range(64))
+                      if fed.shard_of(t) == "shard-0")
+        cli = ApiClient(fed.api, fed.auth.issue_key(tenant))
+        assert cli.list_jobs().items == []
+
+    def test_half_open_probe_recovers_without_restart(self, fed):
+        adm = AdminClient.for_platform(fed)
+        fed.backends[0].breaker = ShardBreaker(
+            BreakerConfig(failure_threshold=3, cooldown_s=0.05))
+        self._wedge_shard0(fed, adm)
+        assert fed.backends[0].breaker.state == "open"
+        time.sleep(0.08)  # cooldown elapses; next request is the probe
+        tenant = next(t for t in ("t-%d" % i for i in range(64))
+                      if fed.shard_of(t) == "shard-0")
+        cli = ApiClient(fed.api, fed.auth.issue_key(tenant))
+        assert cli.list_jobs().items == []
+        assert fed.backends[0].breaker.state == "closed"
+
+    def test_operator_gray_restarts_wedged_shard(self, fed):
+        from repro.api.ops import install_operator
+        from repro.obs.operator import OperatorConfig
+        adm = AdminClient.for_platform(fed)
+        install_operator(fed, OperatorConfig(gray_cooldown_ticks=1))
+        self._wedge_shard0(fed, adm)
+        fed.tick()  # operator senses the open breaker and restarts
+        assert fed.backends[0].breaker.state == "closed"
+        decisions = [d for d in fed.operator.policy.decisions
+                     if d["action"] == "gray_restart"]
+        assert decisions and decisions[0]["shard"] == "shard-0"
+        total = sum(p.events.count("operator_gray_restart")
+                    for p in fed.shards)
+        assert total == 1
+
+
+# --------------------------------------------------------------------------
+# admin wire surface
+# --------------------------------------------------------------------------
+
+class TestAdminFaultSurface:
+    def test_install_list_clear_roundtrip(self, fed):
+        adm = AdminClient.for_platform(fed)
+        f1 = adm.install_fault("wal.flush", latency_s=0.001)
+        f2 = adm.install_fault("objstore.get", error="x", mode="one_shot")
+        items = adm.list_faults()["items"]
+        assert [i["fault_id"] for i in items] == [f1["fault_id"],
+                                                  f2["fault_id"]]
+        assert adm.clear_faults(f1["fault_id"])["cleared"] == 1
+        assert adm.clear_faults()["cleared"] == 1
+        assert adm.list_faults()["items"] == []
+
+    def test_validation_and_missing_ids(self, fed):
+        adm = AdminClient.for_platform(fed)
+        with pytest.raises(ApiError) as ei:
+            adm.install_fault("bogus.point", hang=True)
+        assert ei.value.code is ErrorCode.INVALID_ARGUMENT
+        with pytest.raises(ApiError) as ei:
+            adm.install_fault("wal.flush")
+        assert ei.value.code is ErrorCode.INVALID_ARGUMENT
+        with pytest.raises(ApiError) as ei:
+            adm.clear_faults("fault-999")
+        assert ei.value.code is ErrorCode.NOT_FOUND
+
+    def test_tenant_key_is_forbidden(self, fed):
+        key = fed.auth.issue_key("team-a")
+        with pytest.raises(ApiError) as ei:
+            fed.admin_api.install_fault(key, {"point": "wal.flush",
+                                              "hang": True})
+        assert ei.value.code in (ErrorCode.FORBIDDEN,
+                                 ErrorCode.UNAUTHENTICATED)
+
+    def test_every_fault_point_installs(self, fed):
+        adm = AdminClient.for_platform(fed)
+        for point in FAULT_POINTS:
+            adm.install_fault(point, latency_s=0.001)
+        assert len(adm.list_faults()["items"]) == len(FAULT_POINTS)
+        adm.clear_faults()
+
+
+# --------------------------------------------------------------------------
+# ChaosMonkey compatibility (satellite: registry migration)
+# --------------------------------------------------------------------------
+
+class TestChaosCompat:
+    def test_volume_provision_rides_the_registry(self, fed):
+        adm = AdminClient.for_platform(fed)
+        monkey = fed.shards[0].chaos  # p_volume_fail = 0.0
+        assert monkey.should_fail("volume_provision", "vol-1") is False
+        adm.install_fault("volume.provision", error="no pv", mode="one_shot")
+        assert monkey.should_fail("volume_provision", "vol-1") is True
+        assert monkey.should_fail("volume_provision", "vol-1") is False
+
+    def test_rng_stream_is_not_perturbed_by_the_plane(self):
+        """The monkey draws the same RNG sequence whether or not a fault
+        plane is attached — seeded chaos campaigns reproduce bit-for-bit
+        (benchmarks/failures.py equivalence)."""
+        from repro.core.chaos import ChaosConfig, ChaosMonkey
+
+        class _Stub:
+            faults = None
+        cfg = ChaosConfig(seed=42, p_volume_fail=0.5)
+        bare, planed = ChaosMonkey(cfg, _Stub()), ChaosMonkey(cfg, _Stub())
+        planed.p = type("S", (), {"faults": FaultPlane(seed=0)})()
+        seq_bare = [bare.should_fail("volume_provision", "k")
+                    for _ in range(64)]
+        seq_planed = [planed.should_fail("volume_provision", "k")
+                      for _ in range(64)]
+        assert seq_bare == seq_planed
+
+    def test_objstore_chaos_uses_one_shot_plan(self, fed):
+        from repro.core.chaos import ChaosConfig, ChaosMonkey
+        p = fed.shards[0]
+        monkey = ChaosMonkey(ChaosConfig(seed=1, p_objstore_fail=1.0), p)
+        monkey.tick()
+        (view,) = p.faults.list()
+        assert view["point"] == "objstore.*" and view["mode"] == "one_shot"
+        assert view["key"] == p.objstore.fault_key
+        p.faults.clear()
+
+
+# --------------------------------------------------------------------------
+# client defenses
+# --------------------------------------------------------------------------
+
+class _FlakyTransport:
+    """Counts calls; fails the first ``n_fail`` with ``code``."""
+
+    def __init__(self, n_fail, code=ErrorCode.UNAVAILABLE, **details):
+        self.n_fail = n_fail
+        self.code = code
+        self.details = details
+        self.calls = 0
+
+    def _maybe(self):
+        self.calls += 1
+        if self.calls <= self.n_fail:
+            raise ApiError(self.code, "transient", **self.details)
+
+    def list_jobs(self, api_key, **kw):
+        self._maybe()
+        return "page"
+
+    def halt(self, api_key, job_id, requeue=False):
+        self._maybe()
+        return "halted"
+
+
+class TestClientRetry:
+    def test_backoff_grows_capped_and_jittered(self):
+        rng = random.Random(0)
+        delays = [_backoff_s(a, None, rng, base_s=0.1, cap_s=1.0)
+                  for a in range(10)]
+        assert all(0.0 <= d <= 1.0 for d in delays)
+        assert max(delays) > 0.0
+
+    def test_backoff_honours_retry_after_floor(self):
+        rng = random.Random(0)
+        assert _backoff_s(0, 0.7, rng, base_s=0.01, cap_s=2.0) >= 0.7
+        # unparseable hints are ignored, not fatal
+        assert _backoff_s(0, "soon", rng, base_s=0.01, cap_s=2.0) < 2.0
+
+    def test_idempotent_read_retries_until_success(self):
+        tp = _FlakyTransport(n_fail=2)
+        cli = ApiClient(tp, "key", retry=RetryPolicy(base_s=0.001,
+                                                     cap_s=0.01))
+        assert cli.list_jobs() == "page"
+        assert tp.calls == 3
+
+    def test_deadline_exceeded_is_retried_for_reads(self):
+        tp = _FlakyTransport(n_fail=1, code=ErrorCode.DEADLINE_EXCEEDED)
+        cli = ApiClient(tp, "key", retry=RetryPolicy(base_s=0.001,
+                                                     cap_s=0.01))
+        assert cli.list_jobs() == "page"
+        assert tp.calls == 2
+
+    def test_budget_exhaustion_propagates(self):
+        tp = _FlakyTransport(n_fail=99)
+        cli = ApiClient(tp, "key", retry=RetryPolicy(max_attempts=3,
+                                                     base_s=0.001,
+                                                     cap_s=0.01))
+        with pytest.raises(ApiError):
+            cli.list_jobs()
+        assert tp.calls == 3
+
+    def test_non_transient_codes_not_retried(self):
+        tp = _FlakyTransport(n_fail=99, code=ErrorCode.INVALID_ARGUMENT)
+        cli = ApiClient(tp, "key", retry=RetryPolicy(base_s=0.001))
+        with pytest.raises(ApiError):
+            cli.list_jobs()
+        assert tp.calls == 1
+
+    def test_mutating_verbs_never_retried(self):
+        tp = _FlakyTransport(n_fail=99)
+        cli = ApiClient(tp, "key", retry=RetryPolicy(base_s=0.001))
+        with pytest.raises(ApiError):
+            cli.halt("job-1")
+        assert tp.calls == 1
+
+    def test_no_policy_means_no_behaviour_change(self):
+        tp = _FlakyTransport(n_fail=1)
+        cli = ApiClient(tp, "key")
+        with pytest.raises(ApiError):
+            cli.list_jobs()
+        assert tp.calls == 1
+
+
+class _DroppingStreamTransport:
+    """SSE transport whose stream drops ``n_drops`` times, then ends."""
+
+    def __init__(self, n_drops, retry_after=None):
+        self.n_drops = n_drops
+        self.retry_after = retry_after
+        self.opens = 0
+
+    def stream_events(self, api_key, cursor=None, kind=None):
+        from repro.obs import SseMessage
+        self.opens += 1
+        if self.opens <= self.n_drops:
+            details = {}
+            if self.retry_after is not None:
+                details["retry_after"] = self.retry_after
+            raise ApiError(ErrorCode.UNAVAILABLE, "stream reset", **details)
+        yield SseMessage(data="{}", event="end")
+
+    def events(self, api_key, **kw):  # long-poll fallback (unused)
+        raise AssertionError("should not long-poll in this test")
+
+
+class TestStreamReconnectBackoff:
+    def test_reconnects_back_off_between_attempts(self, monkeypatch):
+        sleeps = []
+        import repro.api.client as client_mod
+        monkeypatch.setattr(client_mod.time, "sleep",
+                            lambda s: sleeps.append(s))
+        tp = _DroppingStreamTransport(n_drops=2)
+        cli = ApiClient(tp, "key")
+        gen = cli.follow_events()
+        with pytest.raises(StopIteration):
+            next(gen)
+        assert tp.opens == 3           # 2 drops + the clean final open
+        assert len(sleeps) == 2        # one backoff per drop
+        assert all(0.0 <= s <= 2.0 for s in sleeps)
+
+    def test_retry_after_hint_is_honoured(self, monkeypatch):
+        sleeps = []
+        import repro.api.client as client_mod
+        monkeypatch.setattr(client_mod.time, "sleep",
+                            lambda s: sleeps.append(s))
+        tp = _DroppingStreamTransport(n_drops=1, retry_after=0.9)
+        cli = ApiClient(tp, "key")
+        with pytest.raises(StopIteration):
+            next(cli.follow_events())
+        assert sleeps and sleeps[0] >= 0.9
+
+    def test_gives_up_after_max_failures(self, monkeypatch):
+        import repro.api.client as client_mod
+        monkeypatch.setattr(client_mod.time, "sleep", lambda s: None)
+        tp = _DroppingStreamTransport(n_drops=99)
+        cli = ApiClient(tp, "key")
+        with pytest.raises(ApiError):
+            next(cli.follow_events())
+        assert tp.opens == 3  # _MAX_STREAM_FAILURES
