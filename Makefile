@@ -1,10 +1,16 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench-api bench examples serve docs-check
+.PHONY: test test-fast lint bench-smoke bench-api bench examples serve docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+# invariant analyzer suite (repro.analysis): lock discipline, policy
+# purity, determinism, wire-registry cross-checks, deadline coverage.
+# Fails on any finding not covered by src/repro/analysis/baseline.json.
+lint:
+	$(PY) -m repro.analysis
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_api_gateway.py tests/test_platform.py \

@@ -233,6 +233,12 @@ def _client_retry(quick: bool) -> dict:
 
 
 def run(quick: bool = False) -> dict:
+    # Chaos is where a latent ABBA lock hazard would surface: instrument
+    # every RWLock for the whole campaign and fail the bench if the
+    # witnessed acquisition graph has a cycle (repro.analysis.witness).
+    from repro.analysis.witness import witness
+    witness.install()
+
     out = {"quick": quick,
            "verb_budget_s": VERB_BUDGET_S, "tick_budget_s": TICK_BUDGET_S}
 
@@ -260,6 +266,15 @@ def run(quick: bool = False) -> dict:
     print(f"  {d['served']}/{d['reads']} reads served through "
           f"{d['faults_injected']} injected faults "
           f"({d['policies_exhausted']} retries-exhausted rescues)")
+
+    witness.assert_acyclic(context="faults benchmark")
+    out["lock_witness"] = {
+        "acquisitions": witness.acquisitions,
+        "edges": {k: sorted(v) for k, v in sorted(witness.snapshot().items())},
+        "acyclic": True,
+    }
+    print(f"  lock witness: {witness.acquisitions} acquisitions, "
+          f"acyclic acquisition graph")
     return out
 
 

@@ -1,0 +1,82 @@
+"""DEADLINE-VERB: every gateway verb runs under a deadline scope.
+
+PR 9 gave the platform thread-local deadlines (``deadline_scope``) so a
+gray-failing shard turns into a bounded 504 instead of a wedged caller,
+and wrapped every v1 verb in the ``_deadlined`` decorator. The check
+generalizes the rule: **any public method of a ``*Gateway`` class whose
+first parameter is ``api_key`` is a wire verb**, and a wire verb must
+either carry a deadline decorator (``_deadlined`` / anything built from
+``deadline_guarded``) or open ``with deadline_scope(...)`` itself.
+
+This is the check that would have flagged the v2 planes: AdminGateway
+and WorkloadGateway shipped without budgets, so a cutover stuck behind
+a slow shard held the caller forever (fixed in this PR via
+``repro.api.types.deadline_guarded``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Finding, dotted_name
+
+#: Decorator names that satisfy the requirement.
+_DEADLINE_DECORATORS = {"_deadlined", "deadline_guarded", "deadlined"}
+
+
+def _has_deadline_decorator(func) -> bool:
+    for dec in func.decorator_list:
+        name = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(name).split(".")[-1] in _DEADLINE_DECORATORS:
+            return True
+    return False
+
+
+def _opens_deadline_scope(func) -> bool:
+    for node in ast.walk(func):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                expr = item.context_expr
+                if isinstance(expr, ast.Call):
+                    if dotted_name(expr.func).split(".")[-1] == "deadline_scope":
+                        return True
+    return False
+
+
+def _is_verb(func) -> bool:
+    if func.name.startswith("_"):
+        return False
+    args = func.args.posonlyargs + func.args.args
+    names = [a.arg for a in args]
+    return len(names) >= 2 and names[0] == "self" and names[1] == "api_key"
+
+
+def check_deadlines(sources) -> list:
+    findings = []
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not node.name.endswith("Gateway"):
+                continue
+            for func in node.body:
+                if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if not _is_verb(func):
+                    continue
+                if _has_deadline_decorator(func) or _opens_deadline_scope(func):
+                    continue
+                findings.append(Finding(
+                    check="DEADLINE-VERB",
+                    path=src.path,
+                    line=func.lineno,
+                    scope=f"{node.name}.{func.name}",
+                    message=(
+                        f"wire verb `{node.name}.{func.name}` runs "
+                        f"without a deadline_scope — a gray-failing "
+                        f"shard wedges the caller forever; wrap it in "
+                        f"`_deadlined`/`deadline_guarded`"
+                    ),
+                    detail=func.name,
+                ))
+    return findings

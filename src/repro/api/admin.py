@@ -58,7 +58,8 @@ from typing import Dict, List, Optional
 
 from repro.api.auth import ADMIN, AuthService, Principal
 from repro.api.ratelimit import RateLimitConfig
-from repro.api.types import ADMIN_API_VERSION, ApiError, ErrorCode
+from repro.api.types import (ADMIN_API_VERSION, ApiError, ErrorCode,
+                             deadline_guarded)
 from repro.core.types import TERMINAL, JobStatus
 from repro.data.objectstore import ObjectStoreError
 
@@ -797,11 +798,19 @@ class AdminPlane:
         self._deferred_purges = still
 
 
+# Every AdminGateway verb runs inside a deadline scope (the v2 analogue
+# of the v1 gateway's _deadlined; enforced by the DEADLINE-VERB check).
+_deadlined = deadline_guarded()
+
+
 class AdminGateway:
     """The wire-facing v2 verb surface: admin auth in front of the shared
     :class:`AdminPlane`. Every verb takes ``(api_key, ...)`` and returns a
     plain JSON-able dict stamped ``"api_version": "v2"`` — the HTTP layer
     serializes it verbatim, and the in-process surface is identical."""
+
+    # per-verb deadline budget; instances may tighten it (drills do)
+    verb_budget_s = 10.0
 
     def __init__(self, plane: AdminPlane, auth: AuthService):
         self.plane = plane
@@ -815,6 +824,7 @@ class AdminGateway:
         return principal
 
     # -- tenants ----------------------------------------------------------
+    @_deadlined
     def create_tenant(self, api_key: str, body: dict) -> dict:
         self._require(api_key)
         if not isinstance(body, dict) or "name" not in body:
@@ -830,14 +840,17 @@ class AdminGateway:
             tier=body.get("tier", "paid"), rate=body.get("rate"),
             burst=body.get("burst"), shard=body.get("shard")))
 
+    @_deadlined
     def get_tenant(self, api_key: str, name: str) -> dict:
         self._require(api_key)
         return self.plane.get_tenant(name)
 
+    @_deadlined
     def list_tenants(self, api_key: str) -> dict:
         self._require(api_key)
         return self.plane.list_tenants()
 
+    @_deadlined
     def patch_tenant(self, api_key: str, name: str, patch: dict) -> dict:
         self._require(api_key)
         if not isinstance(patch, dict):
@@ -845,36 +858,44 @@ class AdminGateway:
                            "patch must be a JSON object")
         return self.plane.patch_tenant(name, patch)
 
+    @_deadlined
     def delete_tenant(self, api_key: str, name: str) -> dict:
         self._require(api_key)
         return self.plane.delete_tenant(name)
 
     # -- shards -----------------------------------------------------------
+    @_deadlined
     def list_shards(self, api_key: str) -> dict:
         self._require(api_key)
         return self.plane.list_shards()
 
+    @_deadlined
     def get_shard(self, api_key: str, shard_id: str) -> dict:
         self._require(api_key)
         return self.plane.get_shard(shard_id)
 
+    @_deadlined
     def cordon_shard(self, api_key: str, shard_id: str) -> dict:
         self._require(api_key)
         return self.plane.cordon(shard_id)
 
+    @_deadlined
     def uncordon_shard(self, api_key: str, shard_id: str) -> dict:
         self._require(api_key)
         return self.plane.uncordon(shard_id)
 
+    @_deadlined
     def drain_shard(self, api_key: str, shard_id: str) -> dict:
         self._require(api_key)
         return self.plane.drain(shard_id)
 
     # -- operator ---------------------------------------------------------
+    @_deadlined
     def operator_status(self, api_key: str) -> dict:
         self._require(api_key)
         return self.plane.operator_status()
 
+    @_deadlined
     def start_rollout(self, api_key: str, body: dict) -> dict:
         self._require(api_key)
         if not isinstance(body, dict) or not isinstance(
@@ -884,6 +905,7 @@ class AdminGateway:
         return self.plane.start_rollout(body["version"])
 
     # -- faults -----------------------------------------------------------
+    @_deadlined
     def install_fault(self, api_key: str, body: dict) -> dict:
         self._require(api_key)
         if not isinstance(body, dict):
@@ -891,16 +913,19 @@ class AdminGateway:
                            "body must be a JSON object")
         return self.plane.install_fault(body)
 
+    @_deadlined
     def list_faults(self, api_key: str) -> dict:
         self._require(api_key)
         return self.plane.list_faults()
 
+    @_deadlined
     def clear_faults(self, api_key: str,
                      fault_id: Optional[str] = None) -> dict:
         self._require(api_key)
         return self.plane.clear_faults(fault_id)
 
     # -- migrations -------------------------------------------------------
+    @_deadlined
     def start_migration(self, api_key: str, body: dict) -> dict:
         self._require(api_key)
         if not isinstance(body, dict) or "tenant" not in body \
@@ -909,10 +934,12 @@ class AdminGateway:
                            "body must carry 'tenant' and 'to_shard'")
         return self.plane.start_migration(body["tenant"], body["to_shard"])
 
+    @_deadlined
     def get_migration(self, api_key: str, migration_id: str) -> dict:
         self._require(api_key)
         return self.plane.get_migration(migration_id)
 
+    @_deadlined
     def list_migrations(self, api_key: str) -> dict:
         self._require(api_key)
         return self.plane.list_migrations()

@@ -55,6 +55,10 @@ class RWLock:
 
     def __init__(self, shared_reads: bool = True):
         self.shared_reads = shared_reads
+        # Stable label for the lock-order witness (repro.analysis.witness):
+        # owners set it ("shard:0", ...) so witnessed acquisition-graph
+        # edges read as topology, not object ids.
+        self.name = None  # type: str | None
         self._cond = threading.Condition()
         self._readers = 0
         self._writer_active = False
@@ -129,6 +133,7 @@ class Backend:
         self.shard_id = shard_id
         self.platform = platform
         self.lock = RWLock(shared_reads=shared_reads)
+        self.lock.name = f"shard:{shard_id}"
         self.alive = True
         # operator cordon (v2 admin plane): a cordoned shard keeps serving
         # its resident tenants but accepts no NEW tenant placements and no

@@ -204,6 +204,57 @@ OBS_ROUTES = (
     ("GET", "/v2/events"),
 )
 
+# Declarative dispatch: every pinned route resolves to exactly one
+# ``_h_*`` handler method, and every handler is routed. The REG-ROUTE
+# analyzer (python -m repro.analysis) enforces both directions against
+# the tables above, so a route can no longer exist only in an if-chain
+# (or a handler only in dead code). Handlers share one signature:
+# ``handler(key, qs, params)`` with ``params`` the template's ``{...}``
+# segments already extracted.
+ROUTE_HANDLERS = {
+    "GET /v1/health": "_h_health",
+    "GET /metrics": "_h_metrics",
+    "POST /v1/jobs": "_h_submit",
+    "GET /v1/jobs": "_h_list_jobs",
+    "GET /v1/jobs/{job_id}": "_h_job_status",
+    "GET /v1/jobs/{job_id}/history": "_h_job_history",
+    "GET /v1/jobs/{job_id}/logs": "_h_job_logs",
+    "GET /v1/logs/search": "_h_search_logs",
+    "POST /v1/jobs/{job_id}/halt": "_h_job_halt",
+    "POST /v1/jobs/{job_id}/resume": "_h_job_resume",
+    "DELETE /v1/jobs/{job_id}": "_h_job_cancel",
+    "GET /v1/usage": "_h_usage",
+    "GET /v2/events": "_h_events",
+    "POST /v2/admin/tenants": "_h_admin_create_tenant",
+    "GET /v2/admin/tenants": "_h_admin_list_tenants",
+    "GET /v2/admin/tenants/{tenant}": "_h_admin_get_tenant",
+    "PATCH /v2/admin/tenants/{tenant}": "_h_admin_patch_tenant",
+    "DELETE /v2/admin/tenants/{tenant}": "_h_admin_delete_tenant",
+    "GET /v2/admin/shards": "_h_admin_list_shards",
+    "GET /v2/admin/shards/{shard_id}": "_h_admin_get_shard",
+    "POST /v2/admin/shards/{shard_id}/cordon": "_h_admin_cordon",
+    "POST /v2/admin/shards/{shard_id}/uncordon": "_h_admin_uncordon",
+    "POST /v2/admin/shards/{shard_id}/drain": "_h_admin_drain",
+    "POST /v2/admin/migrations": "_h_admin_start_migration",
+    "GET /v2/admin/migrations": "_h_admin_list_migrations",
+    "GET /v2/admin/migrations/{migration_id}": "_h_admin_get_migration",
+    "GET /v2/admin/operator": "_h_admin_operator_status",
+    "POST /v2/admin/operator/rollout": "_h_admin_start_rollout",
+    "POST /v2/admin/faults": "_h_admin_install_fault",
+    "GET /v2/admin/faults": "_h_admin_list_faults",
+    "DELETE /v2/admin/faults": "_h_admin_clear_faults",
+    "DELETE /v2/admin/faults/{fault_id}": "_h_admin_clear_fault",
+    "POST /v2/workloads": "_h_workload_apply",
+    "GET /v2/workloads": "_h_workload_list",
+    "GET /v2/workloads/{name}": "_h_workload_get",
+    "DELETE /v2/workloads/{name}": "_h_workload_delete",
+    "POST /v2/workloads/{name}/invoke": "_h_workload_invoke",
+}
+
+# Probe-able endpoints: served before (and without) credentials, like
+# every liveness/scrape surface should be.
+UNAUTHENTICATED_ROUTES = frozenset({"GET /v1/health", "GET /metrics"})
+
 MAX_BODY_BYTES = 1 << 20  # a manifest is small; reject anything bigger
 # An oversized-but-bounded body is still drained (so the 400 envelope is
 # delivered cleanly and the keep-alive connection survives); beyond this
@@ -351,117 +402,264 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- routing ----------------------------------------------------------
     @staticmethod
-    def _match_route(method: str, parts: list) -> Optional[str]:
+    def _match_route(method: str, parts: list):
         """ROUTES/ADMIN_ROUTES/WORKLOAD_ROUTES/OBS_ROUTES are the
         authoritative tables: anything they don't name is a 404 *before*
         auth, so probing the route space needs no credential and a typo'd
         URL isn't misreported as an auth failure. Returns the matched
-        ``"METHOD /template"`` — the label request metrics aggregate
-        under — or None."""
+        ``("METHOD /template", params)`` — the label request metrics
+        aggregate under, plus the extracted ``{...}`` path params — or
+        None."""
         for m, template in ROUTES + ADMIN_ROUTES + WORKLOAD_ROUTES \
                 + OBS_ROUTES:
             t_parts = [p for p in template.split("/") if p]
             if m == method and len(t_parts) == len(parts) and all(
                     tp.startswith("{") or tp == pp
                     for tp, pp in zip(t_parts, parts)):
-                return f"{m} {template}"
+                params = {tp[1:-1]: pp for tp, pp in zip(t_parts, parts)
+                          if tp.startswith("{")}
+                return f"{m} {template}", params
         return None
 
     def _route(self, method: str):
+        """Declarative dispatch: match against the pinned tables, look
+        the template up in ``ROUTE_HANDLERS``, authenticate (except the
+        probe-able ``UNAUTHENTICATED_ROUTES``), throttle v2 planes, and
+        hand off. Operator-keyed v2 traffic bypasses the per-tenant
+        rate limiter — those are the operator's backpressure controls,
+        not tenant traffic — but unknown/tenant keys still spend a
+        token, so credential-guessing floods against /v2 are
+        429-throttled before auth exactly like against v1. Workload
+        routes ARE tenant traffic (including the serving data path,
+        ``…/invoke``) and ride the same buckets as v1: that is the
+        serving tier's per-tenant QoS."""
         split = urlparse.urlsplit(self.path)
         qs = urlparse.parse_qs(split.query)
         parts = [p for p in split.path.split("/") if p]
-        api = self.ctx.api
 
         if parts[:1] == ["v2"]:
             self._envelope_version = ADMIN_API_VERSION
-        self._route_template = self._match_route(method, parts)
-        if self._route_template is None:
+        matched = self._match_route(method, parts)
+        if matched is None:
+            self._route_template = None
             raise ApiError(ErrorCode.NOT_FOUND,
                            f"no route for {method} {split.path}")
-        if method == "GET" and parts == ["v1", "health"]:
-            return self._health()
-        if method == "GET" and parts == ["metrics"]:
-            return self._metrics()  # scrape endpoint: no auth, like health
-
+        self._route_template, params = matched
+        handler = getattr(self, ROUTE_HANDLERS[self._route_template])
+        if self._route_template in UNAUTHENTICATED_ROUTES:
+            return handler(None, qs, params)
         key = self._api_key()
+        if parts[:2] in (["v2", "admin"], ["v2", "workloads"]) \
+                and self.ctx.ratelimiter is not None:
+            self.ctx.ratelimiter.throttle_non_admin(key)
+        return handler(key, qs, params)
 
-        if parts[:2] == ["v2", "admin"]:
-            return self._admin_route(method, parts[2:], key)
-        if parts[:2] == ["v2", "workloads"]:
-            return self._workload_route(method, parts[2:], key, qs)
-        if method == "GET" and parts == ["v1", "usage"]:
-            out = api.usage(key, tenant=qs.get("tenant", [None])[0])
-            return self._send_json(200, {"api_version": API_VERSION, **out})
-        if method == "GET" and parts == ["v2", "events"]:
-            if self._wants_sse(qs):
-                return self._stream_events(api, key, qs)
-            out = api.events(key, cursor=qs.get("cursor", [None])[0],
-                             limit=self._int_param(qs, "limit"),
-                             kind=qs.get("kind", [None])[0],
-                             wait_ms=self._int_param(qs, "wait_ms"))
-            return self._send_json(
-                200, {"api_version": ADMIN_API_VERSION, **out})
+    # -- v1 data plane + observability handlers ---------------------------
+    def _h_health(self, key, qs, params):
+        return self._health()
 
-        if parts[:2] == ["v1", "jobs"]:
-            if method == "POST" and len(parts) == 2:
-                return self._submit(api, key)
-            if method == "GET" and len(parts) == 2:
-                return self._list(api, key, qs)
-            if len(parts) == 3:
-                job_id = parts[2]
-                if method == "GET":
-                    if self._wants_sse(qs):
-                        return self._stream_status(api, key, job_id, qs)
-                    view = api.status(
-                        key, job_id,
-                        wait_ms=self._int_param(qs, "wait_ms"),
-                        last_status=qs.get("last_status", [None])[0])
-                    return self._send_json(200, dataclasses.asdict(view))
-                if method == "DELETE":
-                    api.cancel(key, job_id)
-                    return self._send_json(
-                        200, {"api_version": API_VERSION, "ok": True})
-            if len(parts) == 4:
-                job_id, tail = parts[2], parts[3]
-                if method == "GET" and tail == "history":
-                    hist = api.status_history(key, job_id)
-                    return self._send_json(
-                        200, {"api_version": API_VERSION,
-                              "items": [list(h) for h in hist]})
-                if method == "GET" and tail == "logs":
-                    if self._wants_sse(qs):
-                        return self._stream_logs(api, key, job_id, qs)
-                    page = api.logs(key, job_id,
-                                    cursor=qs.get("cursor", [None])[0],
-                                    limit=self._int_param(qs, "limit"),
-                                    wait_ms=self._int_param(qs, "wait_ms"))
-                    return self._send_json(
-                        200, _page_to_wire(page, page.items))
-                if method == "POST" and tail == "halt":
-                    body = self._json_body()
-                    api.halt(key, job_id,
-                             requeue=bool(body.get("requeue", False)))
-                    return self._send_json(
-                        200, {"api_version": API_VERSION, "ok": True})
-                if method == "POST" and tail == "resume":
-                    api.resume(key, job_id)
-                    return self._send_json(
-                        200, {"api_version": API_VERSION, "ok": True})
-        elif method == "GET" and parts == ["v1", "logs", "search"]:
-            query = qs.get("q", [None])[0]
-            if query is None:
-                raise ApiError(ErrorCode.INVALID_ARGUMENT,
-                               "missing query parameter 'q'")
-            page = api.search_logs(key, query,
-                                   job_id=qs.get("job_id", [None])[0],
-                                   cursor=qs.get("cursor", [None])[0],
-                                   limit=self._int_param(qs, "limit"))
-            return self._send_json(200, _page_to_wire(
-                page, [_search_rec_to_wire(r) for r in page.items]))
+    def _h_metrics(self, key, qs, params):
+        return self._metrics()  # scrape endpoint: no auth, like health
 
-        raise ApiError(ErrorCode.NOT_FOUND,
-                       f"no route for {method} {split.path}")
+    def _h_submit(self, key, qs, params):
+        return self._submit(self.ctx.api, key)
+
+    def _h_list_jobs(self, key, qs, params):
+        return self._list(self.ctx.api, key, qs)
+
+    def _h_job_status(self, key, qs, params):
+        api, job_id = self.ctx.api, params["job_id"]
+        if self._wants_sse(qs):
+            return self._stream_status(api, key, job_id, qs)
+        view = api.status(key, job_id,
+                          wait_ms=self._int_param(qs, "wait_ms"),
+                          last_status=qs.get("last_status", [None])[0])
+        return self._send_json(200, dataclasses.asdict(view))
+
+    def _h_job_history(self, key, qs, params):
+        hist = self.ctx.api.status_history(key, params["job_id"])
+        return self._send_json(200, {"api_version": API_VERSION,
+                                     "items": [list(h) for h in hist]})
+
+    def _h_job_logs(self, key, qs, params):
+        api, job_id = self.ctx.api, params["job_id"]
+        if self._wants_sse(qs):
+            return self._stream_logs(api, key, job_id, qs)
+        page = api.logs(key, job_id,
+                        cursor=qs.get("cursor", [None])[0],
+                        limit=self._int_param(qs, "limit"),
+                        wait_ms=self._int_param(qs, "wait_ms"))
+        return self._send_json(200, _page_to_wire(page, page.items))
+
+    def _h_search_logs(self, key, qs, params):
+        query = qs.get("q", [None])[0]
+        if query is None:
+            raise ApiError(ErrorCode.INVALID_ARGUMENT,
+                           "missing query parameter 'q'")
+        page = self.ctx.api.search_logs(
+            key, query,
+            job_id=qs.get("job_id", [None])[0],
+            cursor=qs.get("cursor", [None])[0],
+            limit=self._int_param(qs, "limit"))
+        return self._send_json(200, _page_to_wire(
+            page, [_search_rec_to_wire(r) for r in page.items]))
+
+    def _h_job_halt(self, key, qs, params):
+        body = self._json_body()
+        self.ctx.api.halt(key, params["job_id"],
+                          requeue=bool(body.get("requeue", False)))
+        return self._send_json(200, {"api_version": API_VERSION, "ok": True})
+
+    def _h_job_resume(self, key, qs, params):
+        self.ctx.api.resume(key, params["job_id"])
+        return self._send_json(200, {"api_version": API_VERSION, "ok": True})
+
+    def _h_job_cancel(self, key, qs, params):
+        self.ctx.api.cancel(key, params["job_id"])
+        return self._send_json(200, {"api_version": API_VERSION, "ok": True})
+
+    def _h_usage(self, key, qs, params):
+        out = self.ctx.api.usage(key, tenant=qs.get("tenant", [None])[0])
+        return self._send_json(200, {"api_version": API_VERSION, **out})
+
+    def _h_events(self, key, qs, params):
+        api = self.ctx.api
+        if self._wants_sse(qs):
+            return self._stream_events(api, key, qs)
+        out = api.events(key, cursor=qs.get("cursor", [None])[0],
+                         limit=self._int_param(qs, "limit"),
+                         kind=qs.get("kind", [None])[0],
+                         wait_ms=self._int_param(qs, "wait_ms"))
+        return self._send_json(200, {"api_version": ADMIN_API_VERSION, **out})
+
+    # -- v2 admin control plane handlers ----------------------------------
+    # Resource routes over the shared AdminGateway (platform.admin_api).
+    def _h_admin_create_tenant(self, key, qs, params):
+        admin = self.ctx.platform.admin_api
+        return self._send_json(201, admin.create_tenant(key,
+                                                        self._json_body()))
+
+    def _h_admin_list_tenants(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.list_tenants(key))
+
+    def _h_admin_get_tenant(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.get_tenant(key,
+                                                        params["tenant"]))
+
+    def _h_admin_patch_tenant(self, key, qs, params):
+        admin = self.ctx.platform.admin_api
+        return self._send_json(
+            200, admin.patch_tenant(key, params["tenant"],
+                                    self._json_body()))
+
+    def _h_admin_delete_tenant(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.delete_tenant(
+                key, params["tenant"]))
+
+    def _h_admin_list_shards(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.list_shards(key))
+
+    def _h_admin_get_shard(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.get_shard(key,
+                                                       params["shard_id"]))
+
+    def _h_admin_cordon(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.cordon_shard(
+                key, params["shard_id"]))
+
+    def _h_admin_uncordon(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.uncordon_shard(
+                key, params["shard_id"]))
+
+    def _h_admin_drain(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.drain_shard(
+                key, params["shard_id"]))
+
+    def _h_admin_start_migration(self, key, qs, params):
+        admin = self.ctx.platform.admin_api
+        return self._send_json(
+            202, admin.start_migration(key, self._json_body()))
+
+    def _h_admin_list_migrations(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.list_migrations(key))
+
+    def _h_admin_get_migration(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.get_migration(
+                key, params["migration_id"]))
+
+    def _h_admin_operator_status(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.operator_status(key))
+
+    def _h_admin_start_rollout(self, key, qs, params):
+        admin = self.ctx.platform.admin_api
+        # 202: waves start on the next federation tick
+        return self._send_json(
+            202, admin.start_rollout(key, self._json_body()))
+
+    def _h_admin_install_fault(self, key, qs, params):
+        admin = self.ctx.platform.admin_api
+        return self._send_json(
+            201, admin.install_fault(key, self._json_body()))
+
+    def _h_admin_list_faults(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.list_faults(key))
+
+    def _h_admin_clear_faults(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.clear_faults(key))
+
+    def _h_admin_clear_fault(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.admin_api.clear_faults(
+                key, params["fault_id"]))
+
+    # -- v2 workloads plane handlers --------------------------------------
+    # Declarative manifests as resources over the shared WorkloadGateway
+    # (platform.workloads_api).
+    def _h_workload_apply(self, key, qs, params):
+        body = self._json_body()
+        manifest = body.get("manifest_text", body.get("manifest"))
+        if manifest is None:
+            raise ApiError(
+                ErrorCode.INVALID_ARGUMENT,
+                "body must carry 'manifest' (object) or "
+                "'manifest_text' (JSON/YAML-subset string)")
+        view = self.ctx.platform.workloads_api.apply(key, manifest)
+        return self._send_json(201 if view["created"] else 200, view)
+
+    def _h_workload_list(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.workloads_api.list_workloads(
+                key, tenant=qs.get("tenant", [None])[0]))
+
+    def _h_workload_get(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.workloads_api.get_workload(
+                key, params["name"], tenant=qs.get("tenant", [None])[0]))
+
+    def _h_workload_delete(self, key, qs, params):
+        return self._send_json(
+            200, self.ctx.platform.workloads_api.delete_workload(
+                key, params["name"], tenant=qs.get("tenant", [None])[0]))
+
+    def _h_workload_invoke(self, key, qs, params):
+        body = self._json_body()
+        return self._send_json(
+            200, self.ctx.platform.workloads_api.invoke_workload(
+                key, params["name"], payload=body.get("payload"),
+                tenant=qs.get("tenant", [None])[0]))
 
     def _health(self):
         """Liveness, aggregated over replicas AND backend shards: the
@@ -724,122 +922,6 @@ class _Handler(BaseHTTPRequestHandler):
             pass
         finally:
             self.ctx.stream_end()
-
-    def _admin_route(self, method: str, tail: list, key: str):
-        """The v2 admin control plane: resource routes over the shared
-        AdminGateway (``platform.admin_api``). Operator-keyed traffic
-        bypasses the per-tenant rate limiter — these are the operator's
-        backpressure controls, not tenant traffic — but unknown/tenant
-        keys still spend a token, so credential-guessing floods against
-        /v2 are 429-throttled before auth exactly like against v1."""
-        if self.ctx.ratelimiter is not None:
-            self.ctx.ratelimiter.throttle_non_admin(key)
-        admin = self.ctx.platform.admin_api
-        if tail and tail[0] == "tenants":
-            if len(tail) == 1:
-                if method == "POST":
-                    return self._send_json(
-                        201, admin.create_tenant(key, self._json_body()))
-                if method == "GET":
-                    return self._send_json(200, admin.list_tenants(key))
-            elif len(tail) == 2:
-                name = tail[1]
-                if method == "GET":
-                    return self._send_json(200, admin.get_tenant(key, name))
-                if method == "PATCH":
-                    return self._send_json(
-                        200, admin.patch_tenant(key, name,
-                                                self._json_body()))
-                if method == "DELETE":
-                    return self._send_json(
-                        200, admin.delete_tenant(key, name))
-        elif tail and tail[0] == "shards":
-            if len(tail) == 1 and method == "GET":
-                return self._send_json(200, admin.list_shards(key))
-            if len(tail) == 2 and method == "GET":
-                return self._send_json(200, admin.get_shard(key, tail[1]))
-            if len(tail) == 3 and method == "POST":
-                verb = {"cordon": admin.cordon_shard,
-                        "uncordon": admin.uncordon_shard,
-                        "drain": admin.drain_shard}.get(tail[2])
-                if verb is not None:
-                    return self._send_json(200, verb(key, tail[1]))
-        elif tail and tail[0] == "migrations":
-            if len(tail) == 1:
-                if method == "POST":
-                    return self._send_json(
-                        202, admin.start_migration(key, self._json_body()))
-                if method == "GET":
-                    return self._send_json(200, admin.list_migrations(key))
-            elif len(tail) == 2 and method == "GET":
-                return self._send_json(
-                    200, admin.get_migration(key, tail[1]))
-        elif tail and tail[0] == "operator":
-            if len(tail) == 1 and method == "GET":
-                return self._send_json(200, admin.operator_status(key))
-            if len(tail) == 2 and tail[1] == "rollout" and method == "POST":
-                # 202: waves start on the next federation tick
-                return self._send_json(
-                    202, admin.start_rollout(key, self._json_body()))
-        elif tail and tail[0] == "faults":
-            if len(tail) == 1:
-                if method == "POST":
-                    return self._send_json(
-                        201, admin.install_fault(key, self._json_body()))
-                if method == "GET":
-                    return self._send_json(200, admin.list_faults(key))
-                if method == "DELETE":
-                    return self._send_json(200, admin.clear_faults(key))
-            elif len(tail) == 2 and method == "DELETE":
-                return self._send_json(
-                    200, admin.clear_faults(key, tail[1]))
-        raise ApiError(ErrorCode.NOT_FOUND,
-                       f"no route for {method} /v2/admin/{'/'.join(tail)}")
-
-    def _workload_route(self, method: str, tail: list, key: str, qs: dict):
-        """The v2 workloads plane: declarative manifests as resources
-        over the shared WorkloadGateway (``platform.workloads_api``).
-        This is *tenant* traffic — including the serving tier's data
-        path (``…/invoke``) — so it rides the same per-tenant token
-        buckets as v1: a flooding tenant 429s here while other tenants'
-        requests (and admin keys) are untouched. That is the serving
-        tier's per-tenant QoS."""
-        if self.ctx.ratelimiter is not None:
-            self.ctx.ratelimiter.throttle_non_admin(key)
-        wl = self.ctx.platform.workloads_api
-        tenant = qs.get("tenant", [None])[0]
-        if not tail:
-            if method == "POST":
-                body = self._json_body()
-                manifest = body.get("manifest_text", body.get("manifest"))
-                if manifest is None:
-                    raise ApiError(
-                        ErrorCode.INVALID_ARGUMENT,
-                        "body must carry 'manifest' (object) or "
-                        "'manifest_text' (JSON/YAML-subset string)")
-                view = wl.apply(key, manifest)
-                return self._send_json(201 if view["created"] else 200,
-                                       view)
-            if method == "GET":
-                return self._send_json(
-                    200, wl.list_workloads(key, tenant=tenant))
-        elif len(tail) == 1:
-            name = tail[0]
-            if method == "GET":
-                return self._send_json(
-                    200, wl.get_workload(key, name, tenant=tenant))
-            if method == "DELETE":
-                return self._send_json(
-                    200, wl.delete_workload(key, name, tenant=tenant))
-        elif len(tail) == 2 and tail[1] == "invoke" and method == "POST":
-            body = self._json_body()
-            return self._send_json(
-                200, wl.invoke_workload(key, tail[0],
-                                        payload=body.get("payload"),
-                                        tenant=tenant))
-        raise ApiError(
-            ErrorCode.NOT_FOUND,
-            f"no route for {method} /v2/workloads/{'/'.join(tail)}")
 
     def _submit(self, api, key: str):
         body = self._json_body()

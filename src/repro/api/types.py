@@ -26,6 +26,7 @@ migrated to tenant-scoped keys; clients now always see ``ApiError``.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Generic, List, Optional, TypeVar
@@ -96,6 +97,48 @@ class ApiError(Exception):
     def retry_after(self) -> Optional[float]:
         """Seconds the client should wait before retrying (RATE_LIMITED)."""
         return self.details.get("retry_after")
+
+
+# --------------------------------------------------------------------------
+# Deadline guard (shared by every wire-facing gateway)
+# --------------------------------------------------------------------------
+
+def deadline_guarded(budget_s: float = 10.0, attr: str = "verb_budget_s"):
+    """Decorator factory: run a gateway verb inside a ``deadline_scope``.
+
+    The v1 data plane got per-verb deadlines in the gray-failure PR (see
+    ``repro.api.gateway._deadlined``, which layers breaker accounting and
+    long-poll budgets on top). This is the plane-agnostic core of that
+    rule for the v2 admin/workload gateways: a verb that outlives its
+    budget answers a stable ``DEADLINE_EXCEEDED`` (HTTP 504) instead of
+    wedging the caller behind a gray-failing shard. The budget is read
+    from ``getattr(self, attr)`` when present so drills and benchmarks
+    can tighten a live gateway, falling back to ``budget_s``.
+
+    The DEADLINE-VERB analyzer (``python -m repro.analysis``) enforces
+    that every ``*Gateway`` method taking ``api_key`` is wrapped in this
+    (or opens a ``deadline_scope`` itself).
+    """
+    def decorate(fn):
+        name = fn.__name__
+
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            # Core stays importable without the API tier, not the other
+            # way round: importing the deadline plane here is cycle-free,
+            # but lazy keeps types.py usable in stripped-down contexts.
+            from repro.core.faults import DeadlineExceeded, deadline_scope
+            budget = getattr(self, attr, None) or budget_s
+            try:
+                with deadline_scope(budget):
+                    return fn(self, *args, **kwargs)
+            except DeadlineExceeded:
+                raise ApiError(
+                    ErrorCode.DEADLINE_EXCEEDED,
+                    f"{name} exceeded its {budget:.2f}s deadline budget",
+                    verb=name, budget_s=round(budget, 3))
+        return wrapper
+    return decorate
 
 
 # --------------------------------------------------------------------------

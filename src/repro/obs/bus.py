@@ -45,11 +45,13 @@ from typing import Callable, Optional
 # pass an explicit larger retention.
 DEFAULT_RETENTION = 1_000_000
 
-# The pinned wire vocabulary: event kinds operators (and the future
-# operator loop) may key automation on, mapped to their emit sites in
+# The pinned wire vocabulary: event kinds operators (and the operator
+# loop) may key automation on, mapped to their emit sites in
 # docs/architecture.md ("Observability plane") and checked by
-# tests/test_docs_api.py. Components may emit kinds beyond this list;
-# these are the ones the contract promises.
+# tests/test_docs_api.py. This list is COMPLETE by construction: the
+# REG-EVENT analyzer (python -m repro.analysis) fails the build if any
+# component emits a literal kind that is not registered here — an
+# operator keying automation on /v2/events can trust the vocabulary.
 PLATFORM_EVENT_KINDS = (
     # job lifecycle (guardian / api)
     "job_submitted", "submit_deduplicated", "admission_rejected",
@@ -82,6 +84,20 @@ PLATFORM_EVENT_KINDS = (
     "workload_recurring_run", "workload_recurring_skipped",
     "workload_service_scaled", "workload_service_ready",
     "workload_service_degraded",
+    # pod/node lifecycle (repro.core.cluster): the Kubernetes-shaped
+    # bind/run/delete trail every gang leaves behind
+    "pod_bound", "pod_running", "pod_deleted", "pod_failed",
+    "pod_restarted", "binding_rejected", "node_ready",
+    # guardian recovery ladder (repro.core.guardian): per-job Helm-style
+    # deployer decisions — restarts, rollbacks, gang requeues
+    "guardian_crashed", "guardian_restarted", "guardian_created",
+    "lcm_restarted", "rollback", "learner_restart", "learners_replaced",
+    "straggler_restart", "gang_requeue", "bind_failed",
+    "volume_provision_failed",
+    # learner checkpointing (repro.core.executor)
+    "checkpoint", "resume_from_checkpoint",
+    # controller status relay (repro.core.controller)
+    "status_relay_error",
 )
 
 

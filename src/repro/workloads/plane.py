@@ -36,7 +36,8 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.api.auth import READ, WRITE, AuthService
-from repro.api.types import ADMIN_API_VERSION, ApiError, ErrorCode
+from repro.api.types import (ADMIN_API_VERSION, ApiError, ErrorCode,
+                             deadline_guarded)
 from repro.workloads.manifest import (
     parse_manifest_text,
     validate_workload,
@@ -262,10 +263,18 @@ class WorkloadPlane:
         self._engines[(tenant, name)] = engine
 
 
+# Every WorkloadGateway verb runs inside a deadline scope (enforced by
+# the DEADLINE-VERB check in repro.analysis).
+_deadlined = deadline_guarded()
+
+
 class WorkloadGateway:
     """Auth-checking verb surface over one shared plane — the in-process
     twin of the ``/v2/workloads`` HTTP routes. Tenant keys operate on
     their own tenant's resources; admin keys on anyone's."""
+
+    # per-verb deadline budget; instances may tighten it (drills do)
+    verb_budget_s = 10.0
 
     def __init__(self, plane: WorkloadPlane, auth: AuthService):
         self.plane = plane
@@ -285,6 +294,7 @@ class WorkloadGateway:
                            f"address workloads of {tenant!r}")
         return tenant
 
+    @_deadlined
     def apply(self, api_key: str, manifest) -> dict:
         """``manifest``: raw dict, or JSON/YAML-subset text."""
         principal = self.auth.require(api_key, WRITE)
@@ -299,11 +309,13 @@ class WorkloadGateway:
         view["created"] = created
         return view
 
+    @_deadlined
     def get_workload(self, api_key: str, name: str,
                      tenant: Optional[str] = None) -> dict:
         principal = self.auth.require(api_key, READ)
         return self.plane.get(self._resolve_tenant(principal, tenant), name)
 
+    @_deadlined
     def list_workloads(self, api_key: str,
                        tenant: Optional[str] = None) -> dict:
         principal = self.auth.require(api_key, READ)
@@ -313,12 +325,14 @@ class WorkloadGateway:
             items = self.plane.list(self._resolve_tenant(principal, tenant))
         return {"api_version": ADMIN_API_VERSION, "items": items}
 
+    @_deadlined
     def delete_workload(self, api_key: str, name: str,
                         tenant: Optional[str] = None) -> dict:
         principal = self.auth.require(api_key, WRITE)
         return self.plane.delete(self._resolve_tenant(principal, tenant),
                                  name)
 
+    @_deadlined
     def invoke_workload(self, api_key: str, name: str, payload=None,
                         tenant: Optional[str] = None) -> dict:
         principal = self.auth.require(api_key, READ)

@@ -4,6 +4,8 @@ count (1 CPU device); only dryrun.py forces 512 host devices."""
 import jax
 import pytest
 
+from repro.analysis.witness import witness
+
 
 @pytest.fixture(scope="session")
 def rng_key():
@@ -21,3 +23,28 @@ def pytest_configure(config):
         if not getattr(config.option, "timeout", None):
             config.option.timeout = 120.0
             config.option.timeout_method = "thread"
+    # Runtime lock-order witness (repro.analysis.witness): every RWLock
+    # acquisition in the whole run feeds the acquisition graph, so a
+    # cross-thread ABBA hazard anywhere in the suite is recordable even
+    # if the deadlock schedule never fires.
+    witness.install()
+
+
+def pytest_unconfigure(config):
+    witness.uninstall()
+
+
+# The concurrency-heavy modules after which the witnessed acquisition
+# graph must be acyclic (the ISSUE's federation / admin-rebalance /
+# faults trio). The graph is cumulative across the run — asserting after
+# each of these also covers everything that ran before it.
+_WITNESS_CHECKED_MODULES = {
+    "test_federation", "test_admin_plane", "test_faults",
+}
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _lock_order_witness(request):
+    yield
+    if request.module.__name__ in _WITNESS_CHECKED_MODULES:
+        witness.assert_acyclic(context=request.module.__name__)

@@ -1,0 +1,489 @@
+"""The invariant analyzer suite, tested three ways.
+
+1. Per-check fixtures: for each check id, a known-good snippet passes
+   and a seeded violation fires with exactly that check id — so a
+   checker that silently stops matching (the classic static-analysis
+   failure mode) breaks the build, not the invariant.
+2. The runtime lock-order witness: unit graphs on private instances
+   (a seeded cycle must never leak into the global witness conftest
+   installs), plus an end-to-end check that real ``RWLock``
+   acquisitions feed the global acquisition graph.
+3. Self-check: ``python -m repro.analysis`` is clean against the
+   committed baseline, the baseline carries no unjustified or stale
+   entries, and the whole suite stays inside its ~10s wall budget.
+"""
+
+import textwrap
+import time
+
+import pytest
+
+from repro.analysis import CHECK_IDS, run_analysis
+from repro.analysis.base import Baseline, load_sources
+from repro.analysis.deadlines import check_deadlines
+from repro.analysis.determinism import check_determinism
+from repro.analysis.locks import check_locks
+from repro.analysis.purity import check_purity
+from repro.analysis.registry import check_registries
+from repro.analysis.witness import LockOrderWitness, witness
+
+
+def make_sources(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return load_sources(tmp_path)
+
+
+def checks_of(findings):
+    return {f.check for f in findings}
+
+
+# -------------------------------------------------------------------------
+# LOCK-BLOCKING / LOCK-ORDER
+# -------------------------------------------------------------------------
+
+def test_lock_blocking_fires_on_sleep_under_shard_lock(tmp_path):
+    srcs = make_sources(tmp_path, {"svc.py": """
+        import time
+
+        def tick(backend):
+            with backend.lock.write_locked():
+                time.sleep(0.1)
+    """})
+    findings = check_locks(srcs)
+    assert checks_of(findings) == {"LOCK-BLOCKING"}
+    assert findings[0].detail == "time.sleep"
+
+
+def test_lock_blocking_good_sleep_outside_lock_passes(tmp_path):
+    srcs = make_sources(tmp_path, {"svc.py": """
+        import time
+
+        def tick(backend):
+            with backend.lock.write_locked():
+                snapshot = backend.read()
+            time.sleep(0.1)  # parked OUTSIDE the critical section
+            return snapshot
+    """})
+    assert check_locks(srcs) == []
+
+
+def test_lock_blocking_leaf_lock_wal_flush_is_sanctioned(tmp_path):
+    # MetaStore group-commit flushes under its own leaf mutex by design.
+    srcs = make_sources(tmp_path, {"meta.py": """
+        class MetaStore:
+            def append(self, rec):
+                with self._lock:
+                    self._wal.flush()
+    """})
+    assert check_locks(srcs) == []
+
+
+def test_lock_order_fires_on_shard_while_shard(tmp_path):
+    srcs = make_sources(tmp_path, {"svc.py": """
+        def cutover(src, dst):
+            with src.lock.write_locked():
+                with dst.lock.write_locked():
+                    pass
+    """})
+    findings = check_locks(srcs)
+    assert checks_of(findings) == {"LOCK-ORDER"}
+
+
+def test_lock_order_fires_on_plane_acquired_under_shard(tmp_path):
+    srcs = make_sources(tmp_path, {"svc.py": """
+        def bad(self, backend):
+            with backend.lock.read_locked():
+                with self._mutex:
+                    pass
+    """})
+    findings = check_locks(srcs)
+    assert checks_of(findings) == {"LOCK-ORDER"}
+
+
+def test_lock_order_good_plane_then_shard_then_leaf_passes(tmp_path):
+    srcs = make_sources(tmp_path, {"svc.py": """
+        class Plane:
+            @_serialized
+            def advance(self, backend):
+                with backend.lock.write_locked():
+                    with self._metrics_lock:
+                        pass
+    """})
+    assert check_locks(srcs) == []
+
+
+# -------------------------------------------------------------------------
+# PURITY-CALL / PURITY-MUTATION
+# -------------------------------------------------------------------------
+
+def test_purity_call_fires_transitively(tmp_path):
+    srcs = make_sources(tmp_path, {"policy.py": """
+        import time
+
+        class Policy:
+            def decide(self, obs):
+                return self._helper(obs)
+
+            def _helper(self, obs):
+                return [{"at": time.time()}]
+    """})
+    findings = check_purity(srcs, registry=(("policy.py", "Policy.decide"),))
+    assert checks_of(findings) == {"PURITY-CALL"}
+    assert findings[0].detail == "time.time"
+    assert "via" in findings[0].message  # reached through _helper
+
+
+def test_purity_mutation_fires_on_input_mutation(tmp_path):
+    srcs = make_sources(tmp_path, {"policy.py": """
+        class Policy:
+            def decide(self, obs):
+                obs["seen"] = True
+                return []
+    """})
+    findings = check_purity(srcs, registry=(("policy.py", "Policy.decide"),))
+    assert checks_of(findings) == {"PURITY-MUTATION"}
+
+
+def test_purity_good_defensive_copy_and_accumulator_pass(tmp_path):
+    # The two sanctioned idioms: rebinding a param to a copy, and helpers
+    # mutating their OWN `out` accumulator parameter.
+    srcs = make_sources(tmp_path, {"policy.py": """
+        class Policy:
+            def decide(self, obs, outcomes):
+                outcomes = list(outcomes)
+                outcomes.append("x")
+                out = []
+                self._grow(obs, out)
+                return out
+
+            def _grow(self, obs, out):
+                out.append(dict(obs))
+    """})
+    assert check_purity(
+        srcs, registry=(("policy.py", "Policy.decide"),)) == []
+
+
+def test_purity_missing_registered_function_is_a_finding(tmp_path):
+    srcs = make_sources(tmp_path, {"policy.py": "X = 1\n"})
+    findings = check_purity(srcs, registry=(("policy.py", "Policy.decide"),))
+    assert [f.detail for f in findings] == ["missing"]
+
+
+# -------------------------------------------------------------------------
+# DET-AMBIENT
+# -------------------------------------------------------------------------
+
+def test_det_ambient_fires_on_wall_clock_and_unseeded_rng(tmp_path):
+    srcs = make_sources(tmp_path, {"core.py": """
+        import random
+        import time
+
+        def stamp():
+            return time.time()
+
+        def roll():
+            return random.random()
+
+        def gen():
+            return np.random.default_rng()
+    """})
+    findings = check_determinism(srcs)
+    assert checks_of(findings) == {"DET-AMBIENT"}
+    assert {f.detail for f in findings} == {
+        "time.time", "random.random", "np.random.default_rng"}
+
+
+def test_det_ambient_good_seeded_and_injected_pass(tmp_path):
+    srcs = make_sources(tmp_path, {"core.py": """
+        import random
+
+        def gen(seed):
+            return np.random.default_rng(seed)
+
+        def jitter(seed):
+            return random.Random(seed)
+
+        def stamp(clock):
+            return clock()  # injected clock hook, not ambient
+    """})
+    assert check_determinism(srcs) == []
+
+
+# -------------------------------------------------------------------------
+# REG-EVENT / REG-METRIC / REG-ROUTE
+# -------------------------------------------------------------------------
+
+def test_reg_event_fires_on_unregistered_emit_and_zombie_kind(tmp_path):
+    srcs = make_sources(tmp_path, {"bus.py": """
+        PLATFORM_EVENT_KINDS = ("job_done", "never_emitted")
+
+        def work(bus):
+            bus.emit("worker", "job_done")
+            bus.emit("worker", "surprise_kind")
+    """})
+    findings = check_registries(srcs)
+    assert checks_of(findings) == {"REG-EVENT"}
+    assert {f.detail for f in findings} == {"surprise_kind", "never_emitted"}
+
+
+def test_reg_event_good_registered_and_emitted_passes(tmp_path):
+    srcs = make_sources(tmp_path, {"bus.py": """
+        PLATFORM_EVENT_KINDS = ("job_done",)
+
+        def work(bus):
+            bus.emit("worker", "job_done", job="j1")
+    """})
+    assert check_registries(srcs) == []
+
+
+def test_reg_event_dynamic_kind_is_out_of_static_reach(tmp_path):
+    # kinds passed through variables are not flagged (the vocabulary
+    # tuples they draw from are literals, covered by the reverse check)
+    srcs = make_sources(tmp_path, {"bus.py": """
+        PLATFORM_EVENT_KINDS = ("a", "b")
+        VOCAB = ("a", "b")
+
+        def work(bus, kind):
+            bus.emit("worker", kind)
+    """})
+    assert check_registries(srcs) == []
+
+
+def test_reg_metric_fires_both_directions(tmp_path):
+    srcs = make_sources(tmp_path, {"metrics.py": """
+        METRIC_NAMES = ("ffdl_up", "ffdl_zombie")
+
+        def collect_metric_families(self):
+            return [
+                ("ffdl_up", "gauge", "is it up", []),
+                ("ffdl_unregistered", "counter", "oops", []),
+            ]
+    """})
+    findings = check_registries(srcs)
+    assert checks_of(findings) == {"REG-METRIC"}
+    assert {f.detail for f in findings} == {"ffdl_unregistered", "ffdl_zombie"}
+
+
+def test_reg_route_fires_on_every_drift_mode(tmp_path):
+    srcs = make_sources(tmp_path, {"http.py": """
+        ROUTES = (("GET", "/v1/x"), ("GET", "/v1/unrouted"))
+        ROUTE_HANDLERS = {
+            "GET /v1/x": "_h_x",
+            "GET /v1/ghost": "_h_ghost",
+        }
+
+        class H:
+            def _h_x(self, key, qs, params):
+                pass
+
+            def _h_orphan(self, key, qs, params):
+                pass
+    """})
+    findings = check_registries(srcs)
+    assert checks_of(findings) == {"REG-ROUTE"}
+    details = {f.detail for f in findings}
+    assert "GET /v1/unrouted" in details   # route without handler entry
+    assert "GET /v1/ghost" in details      # handler entry without route
+    assert "_h_ghost" in details           # handler name not defined
+    assert "_h_orphan" in details          # defined handler never routed
+
+
+def test_reg_route_missing_dispatch_table_is_a_finding(tmp_path):
+    srcs = make_sources(tmp_path, {"http.py": """
+        ROUTES = (("GET", "/v1/x"),)
+    """})
+    findings = check_registries(srcs)
+    assert [f.detail for f in findings] == ["ROUTE_HANDLERS-missing"]
+
+
+# -------------------------------------------------------------------------
+# DEADLINE-VERB
+# -------------------------------------------------------------------------
+
+def test_deadline_verb_fires_on_unwrapped_gateway_verb(tmp_path):
+    srcs = make_sources(tmp_path, {"gw.py": """
+        class AdminGateway:
+            def cordon(self, api_key, shard_id):
+                return self.plane.cordon(shard_id)
+    """})
+    findings = check_deadlines(srcs)
+    assert checks_of(findings) == {"DEADLINE-VERB"}
+    assert findings[0].scope == "AdminGateway.cordon"
+
+
+def test_deadline_verb_good_decorated_or_scoped_passes(tmp_path):
+    srcs = make_sources(tmp_path, {"gw.py": """
+        class AdminGateway:
+            @_deadlined
+            def cordon(self, api_key, shard_id):
+                return self.plane.cordon(shard_id)
+
+            def drain(self, api_key, shard_id):
+                with deadline_scope(self.verb_budget_s):
+                    return self.plane.drain(shard_id)
+
+            def _require(self, api_key):
+                pass  # private helper, not a verb
+
+        class Helper:
+            def cordon(self, api_key):
+                pass  # not a *Gateway class
+    """})
+    assert check_deadlines(srcs) == []
+
+
+# -------------------------------------------------------------------------
+# Runtime lock-order witness
+# -------------------------------------------------------------------------
+
+def test_witness_sequential_abba_yields_cycle():
+    w = LockOrderWitness()  # private: must not leak into the global graph
+    w.record_attempt("shard:0"); w.push("shard:0")
+    w.record_attempt("shard:1"); w.push("shard:1")
+    w.pop("shard:1"); w.pop("shard:0")
+    assert w.find_cycle() is None
+    w.record_attempt("shard:1"); w.push("shard:1")
+    w.record_attempt("shard:0"); w.push("shard:0")
+    w.pop("shard:0"); w.pop("shard:1")
+    cycle = w.find_cycle()
+    assert cycle is not None and cycle[0] == cycle[-1]
+    with pytest.raises(AssertionError, match="acquisition cycle"):
+        w.assert_acyclic(context="unit test")
+
+
+def test_witness_consistent_order_stays_acyclic():
+    w = LockOrderWitness()
+    for _ in range(3):
+        for name in ("plane", "shard:0", "shard:1"):
+            w.record_attempt(name)
+            w.push(name)
+        for name in ("shard:1", "shard:0", "plane"):
+            w.pop(name)
+    assert w.find_cycle() is None
+    w.assert_acyclic()
+    assert w.acquisitions == 9
+
+
+def test_witness_edge_recorded_even_when_acquisition_fails():
+    # The hazard edge is recorded at ATTEMPT time; a failed acquisition
+    # (deadline during the wait) must contribute the edge but leave the
+    # held-stack intact.
+    w = LockOrderWitness()
+
+    class FailingLock:
+        name = "shard:1"
+
+        def read_locked(self):
+            raise TimeoutError("deadline during lock wait")
+
+        write_locked = read_locked
+
+    w.record_attempt("shard:0"); w.push("shard:0")
+    lock = FailingLock()
+    w.record_attempt(w._lock_name(lock))
+    with pytest.raises(TimeoutError):
+        lock.read_locked()
+    # stack uncorrupted: shard:0 still innermost, edge recorded
+    assert w._stack() == ["shard:0"]
+    assert w.snapshot() == {"shard:0": {"shard:1"}}
+    w.pop("shard:0")
+
+
+def test_witness_instruments_real_rwlock_acquisitions():
+    # conftest installed the global witness for the whole run: real
+    # RWLock context managers must feed it, named by shard.
+    from repro.api.backend import Backend
+
+    class _P:  # duck-typed platform stub
+        pass
+
+    before = witness.acquisitions
+    b0 = Backend("w0", _P())
+    b1 = Backend("w1", _P())
+    with b0.lock.write_locked():
+        with b1.lock.read_locked():
+            pass
+    assert witness.acquisitions >= before + 2
+    assert "shard:w1" in witness.snapshot().get("shard:w0", set())
+    # consistent w0 -> w1 order: the suite-wide graph must stay acyclic
+    witness.assert_acyclic(context="rwlock instrumentation test")
+
+
+def test_witness_install_is_idempotent_and_reversible():
+    w = LockOrderWitness()
+
+    class FakeLock:
+        def __init__(self):
+            self.name = "fake:0"
+
+        def read_locked(self):
+            import contextlib
+            return contextlib.nullcontext()
+
+        def write_locked(self):
+            import contextlib
+            return contextlib.nullcontext()
+
+    orig_read = FakeLock.read_locked
+    w.install(FakeLock)
+    w.install(FakeLock)  # second install is a no-op, not a double-wrap
+    with FakeLock().read_locked():
+        pass
+    assert w.acquisitions == 1
+    w.uninstall()
+    assert FakeLock.read_locked is orig_read
+
+
+# -------------------------------------------------------------------------
+# Self-check: the repo itself is clean
+# -------------------------------------------------------------------------
+
+def test_repo_is_clean_against_committed_baseline():
+    t0 = time.perf_counter()
+    result = run_analysis()
+    elapsed = time.perf_counter() - t0
+    baseline = Baseline.load()
+    new, baselined = result.split(baseline)
+    assert new == [], "unbaselined findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert baseline.unjustified() == []
+    assert baseline.stale() == []
+    # every baseline exception is a real, still-firing finding
+    assert len(baselined) == len(baseline.entries)
+    # the satellite perf budget: the whole suite in well under ~10s
+    assert elapsed < 10.0, f"analyzer took {elapsed:.1f}s"
+
+
+def test_check_id_vocabulary_is_exercised_by_these_tests():
+    # Every pinned check id appears in this test file's fixtures — a new
+    # checker must bring a seeded-violation test along.
+    text = open(__file__).read()
+    for check in CHECK_IDS:
+        assert check in text
+
+
+def test_every_finding_carries_a_pinned_check_id(tmp_path):
+    srcs = make_sources(tmp_path, {"bad.py": """
+        import time
+
+        PLATFORM_EVENT_KINDS = ("ok",)
+
+        class XGateway:
+            def verb(self, api_key):
+                with self.b.lock.write_locked():
+                    time.sleep(1)
+                    with self.c.lock.write_locked():
+                        bus.emit("x", "rogue")
+                return time.time()
+    """})
+    findings = []
+    for checker in (check_locks, check_determinism, check_registries,
+                    check_deadlines):
+        findings.extend(checker(srcs))
+    assert findings, "seeded multi-violation fixture found nothing"
+    for f in findings:
+        assert f.check in CHECK_IDS
+        assert f.key.startswith(f"{f.check}:{f.path}:")
